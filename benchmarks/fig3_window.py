@@ -1,0 +1,36 @@
+"""Figure 3: effect of JaccardWithWindows window size w on compression and
+BFS runtime (GAP-web stand-in: clustered community graph)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import fmt_row, time_engine
+from repro.core import build_bvss, make_engine
+from repro.core.ordering import jaccard_windows, shingle_order
+from repro.graphs import generators as gen
+
+
+def run(scale: int = 10, verbose: bool = True):
+    g = gen.clustered((1 << scale) // 64, 64, seed=4)
+    pre = shingle_order(g)
+    rows = []
+    srcs = np.random.default_rng(0).integers(0, g.n, 3)
+    for logw in range(3, 13):
+        w = 1 << logw
+        if w > g.n:
+            break
+        perm = jaccard_windows(g, w=w, pre_order=pre)
+        gg = g.permute_fast(perm)
+        b = build_bvss(gg)
+        fn = make_engine(gg, "blest", bvss=b)
+        sec = time_engine(fn, perm[srcs])
+        row = fmt_row(f"fig3/w={w}", sec * 1e6,
+                      f"compression={b.compression_ratio():.3f}")
+        rows.append(row)
+        if verbose:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

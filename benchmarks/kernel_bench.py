@@ -1,0 +1,67 @@
+"""§4.1 kernel benchmarks: pull-kernel layouts and the TC-call model.
+
+Wall times here run the Pallas bodies in interpret mode (CPU container) —
+meaningful only relative to each other.  The ``derived`` column carries the
+hardware-independent §4.1 model: calls-per-128-slices for the SotA (BRS)
+layout vs BLEST's (16 -> 2 on the paper's m8n8k128; on TPU, 1 VPU
+AND+popcount op resolves 4 slice dot-products, and 1 MXU int8 call resolves
+128x128 popcount dot-products for multi-source)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row
+from repro.kernels import bit_spmm, bvss_pull
+from repro.kernels.ref import bit_spmm_ref, bvss_pull_ref
+
+
+def _med_time(f, *args, reps=5):
+    f(*args)  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        np.asarray(f(*args))
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+    B = 4096
+    masks = jnp.asarray(rng.integers(0, 2 ** 32, (B, 32),
+                                     dtype=np.uint64).astype(np.uint32))
+    fb = jnp.asarray(rng.integers(0, 2 ** 32, (B,),
+                                  dtype=np.uint64).astype(np.uint32))
+    for layout in ("lanes", "rows"):
+        sec = _med_time(lambda m, f: bvss_pull(m, f, layout=layout),
+                        masks, fb)
+        rows.append(fmt_row(
+            f"kernel/bvss_pull[{layout}]", sec * 1e6,
+            f"slices={B * 128};dots_per_vpu_op=4;"
+            f"calls_per_128_slices=2(paper)_vs_16(brs)"))
+    sec = _med_time(bvss_pull_ref, masks, fb)
+    rows.append(fmt_row("kernel/bvss_pull[jnp-ref]", sec * 1e6, ""))
+
+    R, C, S = 512, 512, 128
+    a = rng.integers(0, 2 ** 32, (R, C // 32),
+                     dtype=np.uint64).astype(np.uint32)
+    x = rng.integers(0, 2, (C, S)).astype(np.int8)
+    sec = _med_time(bit_spmm, jnp.asarray(a), jnp.asarray(x))
+    rows.append(fmt_row(
+        "kernel/bit_spmm[mxu]", sec * 1e6,
+        f"dots_per_mma={128 * 128};paper_m8n8k128_dots=64;"
+        f"sources={S}"))
+    sec = _med_time(bit_spmm_ref, jnp.asarray(a), jnp.asarray(x))
+    rows.append(fmt_row("kernel/bit_spmm[jnp-ref]", sec * 1e6, ""))
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

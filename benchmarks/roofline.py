@@ -1,0 +1,106 @@
+"""Roofline report generator: reads artifacts/dryrun/*/*.json and renders
+the EXPERIMENTS.md §Roofline table with MODEL_FLOPS ratios.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+
+def _lm_active_params(arch) -> float:
+    """Active (per-token) non-embedding params for 6·N·D MODEL_FLOPS."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+    cfg = arch.model_cfg
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    shapes = jax.eval_shape(lambda k: T.init_lm(k, cfg), key)
+    total = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    mc = cfg.moe
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = float(np.prod(leaf.shape))
+        if "embed" in name and "blocks" not in name:
+            continue  # embeddings excluded from 6ND
+        # routed expert stacks are (L, E, d, f): only top_k/E active
+        if mc is not None and "ffn" in name and "shared" not in name \
+                and leaf.ndim >= 4 and leaf.shape[-3] == mc.n_experts:
+            n *= mc.top_k / mc.n_experts
+        total += n
+    return total
+
+
+def model_flops(arch, shape) -> float | None:
+    if arch.family != "lm":
+        return None
+    n_active = _lm_active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/slot
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(recs, n_chips_by_mesh=None) -> str:
+    from repro.configs.base import get_arch
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s "
+        "| dominant | mem/dev GB | MODEL/HLO flops | source |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP | | | | | {r['reason'][:50]} | |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR | | | | | {r.get('error', '')[:60]} | |")
+            continue
+        t = r["roofline"]
+        mem = r["memory"].get("total_bytes_per_device", 0) / 1e9
+        ratio = ""
+        try:
+            arch = get_arch(r["arch"])
+            mf = model_flops(arch, arch.shapes[r["shape"]])
+            if mf:
+                n_chips = int(np.prod(r["mesh_shape"]))
+                hlo_total = r["flops_per_device"] * n_chips
+                ratio = f"{mf / hlo_total:.2f}"
+        except Exception:
+            pass
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {r['dominant'].replace('_s', '')} "
+            f"| {mem:.2f} | {ratio} | {r.get('cost_source', '')[:14]} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(render(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (E7) come
+from the dry-run artifacts: run ``python -m repro.launch.dryrun --all``
+first, then ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller graphs (CI-speed)")
+    args = ap.parse_args(argv)
+    scale = 9 if args.quick else 11
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    from benchmarks import (fig3_window, kernel_bench, table1a_compression,
+                            table1b_divergence, table2_bfs, table4_footprint)
+    table2_bfs.run(scale=min(scale, 10), n_sources=3)
+    table1a_compression.run(n=1 << min(scale, 11))
+    table1b_divergence.run(scale=scale)
+    fig3_window.run(scale=min(scale, 10))
+    table4_footprint.run(scale=scale)
+    kernel_bench.run()
+
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Table 1a: compression ratio + ordering time per heuristic on a
+vsp_msc-like graph (star + random edges, shuffled labels)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core import build_bvss
+from repro.core.ordering import (jaccard_windows, natural_order, random_order,
+                                 rcm, shingle_order)
+from repro.graphs import from_edges, src_of_edges
+from repro.graphs import generators as gen
+
+
+def vsp_msc_like(n: int = 4096, seed: int = 0):
+    """Random star graph: hub-heavy + uniform noise (paper's Table-1a
+    subject is vsp_msc, 'a random star graph')."""
+    star = gen.star(n)
+    rng = np.random.default_rng(seed)
+    m_extra = n * 8
+    src = np.concatenate([src_of_edges(star),
+                          rng.integers(0, n, m_extra)])
+    dst = np.concatenate([star.indices.astype(np.int64),
+                          rng.integers(0, n, m_extra)])
+    g = from_edges(n, src, dst)
+    return g.permute_fast(rng.permutation(n))
+
+
+def run(n: int = 4096, verbose: bool = True):
+    g = vsp_msc_like(n)
+    rows = []
+    orderings = [
+        ("natural", lambda: natural_order(g)),
+        ("random", lambda: random_order(g)),
+        ("shingle(gorder-lite)", lambda: shingle_order(g)),
+        ("rcm", lambda: rcm(g)),
+        ("jaccard_windows", lambda: jaccard_windows(
+            g, w=512, pre_order=shingle_order(g))),
+    ]
+    for name, fn in orderings:
+        t0 = time.time()
+        perm = fn()
+        dt = time.time() - t0
+        b = build_bvss(g.permute_fast(perm))
+        row = fmt_row(f"table1a/{name}", dt * 1e6,
+                      f"compression={b.compression_ratio():.3f}")
+        rows.append(row)
+        if verbose:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Table 2: BFS engine matrix — BLEST variants (a/ab/ac/full) vs baselines.
+
+Per (graph x engine): wall ms/BFS (CPU) + modeled TC-pull count; speedups
+are reported against the BRS (BerryBees-like) frontier-oblivious engine,
+matching the paper's "vs [27]" column.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (fmt_row, graph_suite, modeled_tc_pulls,
+                               time_engine)
+from repro.core import build_bvss, make_engine
+from repro.core.ordering import auto_order
+
+
+def run(scale: int = 10, n_sources: int = 3, verbose: bool = True):
+    suite = graph_suite(scale)
+    rows = []
+    engines = ["csr_push", "csr_pull", "dirop", "brs",
+               "blest_a", "blest_ab", "blest_ac", "blest_full"]
+    for gname, g in suite.items():
+        rng = np.random.default_rng(0)
+        # pick sources with nonzero out-degree so BFS does work
+        deg = g.out_degree
+        cand = np.flatnonzero(deg > 0)
+        srcs = rng.choice(cand, size=min(n_sources, len(cand)),
+                          replace=False)
+        t0 = time.time()
+        perm, kind = auto_order(g, w=512)
+        order_s = time.time() - t0
+        g_ord = g.permute_fast(perm)
+        b_nat = build_bvss(g)
+        b_ord = build_bvss(g_ord)
+        base_pulls = None
+        for engine in engines:
+            ordered = engine in ("blest_ab", "blest_full")
+            gg = g_ord if ordered else g
+            bb = b_ord if ordered else b_nat
+            core = {"blest_a": "blest", "blest_ab": "blest",
+                    "blest_ac": "blest_lazy", "blest_full": "blest_lazy"
+                    }.get(engine, engine)
+            kwargs = {"bvss": bb} if core in ("brs", "blest", "blest_lazy") \
+                else {}
+            fn = make_engine(gg, core, **kwargs)
+            srcs_m = (perm[srcs] if ordered else srcs)
+            sec = time_engine(fn, srcs_m)
+            if core in ("brs", "blest", "blest_lazy"):
+                pulls = int(np.mean([modeled_tc_pulls(
+                    gg, bb, int(s), frontier_aware=core != "brs")
+                    for s in srcs_m]))
+            else:
+                pulls = 0
+            if engine == "brs":
+                base_pulls = pulls
+                base_sec = sec
+            derived = ""
+            if pulls and base_pulls:
+                derived = (f"tc_pulls={pulls};work_speedup_vs_brs="
+                           f"{base_pulls / max(pulls, 1):.2f}x")
+            elif engine != "brs" and base_pulls is None:
+                derived = ""
+            row = fmt_row(f"table2/{gname}/{engine}", sec * 1e6, derived)
+            rows.append(row)
+            if verbose:
+                print(row)
+        if verbose:
+            print(fmt_row(f"table2/{gname}/ordering", order_s * 1e6,
+                          f"kind={kind}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

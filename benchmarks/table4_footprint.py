@@ -1,0 +1,28 @@
+"""Table 4: BVSS structural statistics + memory footprint per graph."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_row, graph_suite
+from repro.core import build_bvss
+
+
+def run(scale: int = 11, verbose: bool = True):
+    rows = []
+    for name, g in graph_suite(scale).items():
+        b = build_bvss(g)
+        mem = b.memory_bytes()
+        row = fmt_row(
+            f"table4/{name}", 0.0,
+            f"n_sets={b.n_sets};num_vss={b.num_vss};"
+            f"slices={b.num_slices};padded_slices={b.num_vss * b.tau};"
+            f"conn_bits={b.connectivity_bits()};"
+            f"udiv={b.update_divergence():.0f};"
+            f"compression={b.compression_ratio():.3f};"
+            f"mem_mb={mem['total'] / 1e6:.2f}")
+        rows.append(row)
+        if verbose:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

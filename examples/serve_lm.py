@@ -1,0 +1,9 @@
+"""Serve a small LM with continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "gemma3-1b", "--requests", "10", "--max-new", "8",
+                "--max-batch", "4"])

@@ -1,0 +1,21 @@
+"""Train a small LM end to end with the full substrate (checkpointing,
+restart, deterministic pipeline), including a mid-run chaos drill.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def run():
+    with tempfile.TemporaryDirectory() as d:
+        train_main([
+            "--arch", "qwen3-0.6b", "--steps", "60", "--batch", "8",
+            "--seq-len", "64", "--ckpt-dir", d, "--ckpt-every", "20",
+            "--fail-at", "35",   # chaos drill: injected failure + restart
+        ])
+
+
+if __name__ == "__main__":
+    run()

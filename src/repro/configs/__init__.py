@@ -1,0 +1,5 @@
+from .base import (ArchSpec, GNN_SHAPES, LM_SHAPES, REC_SHAPES, all_archs,
+                   get_arch, list_archs)
+
+__all__ = ["ArchSpec", "GNN_SHAPES", "LM_SHAPES", "REC_SHAPES", "all_archs",
+           "get_arch", "list_archs"]

@@ -1,0 +1,549 @@
+"""Family-specific dry-run builders: (arch, shape, mesh) -> (fn, args).
+
+``build_cell`` returns a step function plus ShapeDtypeStruct arguments with
+NamedShardings attached, ready for ``jax.jit(fn).lower(*args)`` — no device
+allocation ever happens (the ShapeDtypeStruct pattern).  The same builders
+power the smoke tests with real (reduced-config) arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, GNNShape, LMShape, RecShape
+from repro.distributed.sharding import (cast_float_leaves, spec_for_leaf,
+                                        tree_shardings)
+from repro.launch.mesh import dp_axes, dp_size, mesh_axes
+from repro.models import transformer as T
+from repro.models import dimenet as DM
+from repro.models import fm as FM
+from repro.models import gnn as G
+from repro.models import nequip as NQ
+from repro.models.layers import LMConfig
+from repro.train import optim
+from repro.train.loop import TrainConfig, TrainState, make_train_step
+
+KEY_SDS = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+@dataclasses.dataclass
+class Cell:
+    """One dry-run cell: jit-ready function + shaped/sharded args."""
+    fn: Callable
+    args: tuple
+    static_desc: str = ""
+    out_shardings: Any = None     # optional
+    donate: tuple = ()            # donated argnums (train: state)
+    has_loops: bool = False       # trace contains scan/map (needs pass 2)
+    # cost-probe cells: (cell_l1, cell_l2, l1, l2, l_full).  Layers within a
+    # group are HLO-identical, so every cost metric is exactly linear in the
+    # group layer count: compiling two small unrolled twins and
+    # extrapolating matches the full unroll at a fraction of compile time.
+    probe: Any = None
+
+    act_spec: Any = None          # embedding-output sharding constraint
+
+    def lower(self, unroll: bool = False):
+        """AOT-lower.  ``unroll=True`` unrolls internal loops at trace time
+        so cost_analysis sees every iteration (XLA counts while bodies
+        once); used by the roofline extraction, not by execution."""
+        from repro.models import layers as _L
+        from repro.models import transformer as _T
+        kw = {}
+        if self.out_shardings is not None:
+            kw["out_shardings"] = self.out_shardings
+        if self.donate:
+            kw["donate_argnums"] = self.donate
+        _L.set_unroll(unroll)
+        _T.set_act_spec(self.act_spec)
+        inner = self.fn
+
+        def fresh(*a):  # fresh identity per call: defeats the jit trace
+            return inner(*a)   # cache so the unroll flag is honoured
+
+        try:
+            return jax.jit(fresh, **kw).lower(*self.args)
+        finally:
+            _L.set_unroll(False)
+            _T.set_act_spec(None)
+
+
+# ---------------------------------------------------------------------------
+# shared: optimizer-state shaping
+# ---------------------------------------------------------------------------
+def train_state_shapes(params_sds, moment_dtype):
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+    m = jax.tree_util.tree_map(zeros, params_sds)
+    v = jax.tree_util.tree_map(zeros, params_sds)
+    return TrainState(params=params_sds,
+                      opt_state=optim.OptState(
+                          step=jax.ShapeDtypeStruct((), jnp.int32), m=m, v=v),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(params_shardings, mesh):
+    rep = NamedSharding(mesh, P())
+    m = params_shardings
+    return TrainState(params=params_shardings,
+                      opt_state=optim.OptState(step=rep, m=m, v=m), step=rep)
+
+
+def _attach(shapes, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def _raw_train_step(loss_fn, moment_dtype, accum_steps: int = 1,
+                    grad_dtype=None):
+    tcfg = TrainConfig(optimizer="adamw", moment_dtype=moment_dtype,
+                       accum_steps=accum_steps, grad_dtype=grad_dtype)
+    return make_train_step(loss_fn, tcfg, jit=False)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+def lm_params_shapes(cfg: LMConfig, param_dtype):
+    shapes = jax.eval_shape(lambda k: T.init_lm(k, cfg), KEY_SDS)
+    return cast_float_leaves(shapes, param_dtype)
+
+
+def lm_param_shardings(arch: ArchSpec, cfg: LMConfig, shapes, mesh):
+    axes = T.lm_axes(cfg)
+    return tree_shardings(axes, shapes, arch.param_rules, mesh)
+
+
+def _lm_cache_shardings(arch: ArchSpec, cfg: LMConfig, cache_shapes, mesh,
+                        batch: int):
+    """Per-layer cache shardings: batch over DP when divisible, else KV
+    length over (data, model) — sequence-parallel decode for batch=1."""
+    dp = dp_axes(mesh)
+    dpn = dp_size(mesh)
+    out = []
+    for layer_cache in cache_shapes:
+        lc = {}
+        for name, s in layer_cache.items():
+            dims = [None] * len(s.shape)
+            if batch % dpn == 0 and batch >= dpn:
+                dims[0] = dp
+                # shard kv heads or length over model
+                if name in ("k", "v") and s.shape[2] % mesh_axes(mesh).get(
+                        "model", 1) == 0 and s.shape[2] >= mesh_axes(mesh)["model"]:
+                    dims[2] = "model"
+                elif s.shape[1] % mesh_axes(mesh).get("model", 1) == 0:
+                    dims[1] = "model"
+            else:
+                seq_axes = tuple(a for a in mesh.axis_names)
+                if s.shape[1] % math.prod(mesh.devices.shape) == 0:
+                    dims[1] = seq_axes
+                elif s.shape[1] % mesh_axes(mesh)["model"] == 0:
+                    dims[1] = "model"
+            lc[name] = NamedSharding(mesh, P(*dims))
+        out.append(lc)
+    return out
+
+
+def _probe_cfgs(cfg: LMConfig):
+    """Two reduced-layer-count twins (l1 < l2) varying the biggest layer
+    group; returns (cfg1, cfg2, l1, l2, l_full)."""
+    if cfg.is_moe and cfg.n_dense_layers > 0:
+        l_full = cfg.n_layers - cfg.n_dense_layers   # moe group varies
+        base = cfg.n_dense_layers
+    else:
+        l_full = cfg.n_layers
+        base = 0
+    if l_full < 5:
+        return None
+    l1, l2 = 2, 4
+    c1 = dataclasses.replace(cfg, n_layers=base + l1)
+    c2 = dataclasses.replace(cfg, n_layers=base + l2)
+    return c1, c2, l1, l2, l_full
+
+
+def lm_cell(arch: ArchSpec, shape: LMShape, mesh, *,
+            _probing: bool = False, _probe_accum: int | None = None,
+            _probe_batch: int | None = None) -> Cell:
+    cfg: LMConfig = arch.model_cfg
+    if _probing is not False:
+        cfg = _probing
+    if _probe_accum is not None:
+        arch = dataclasses.replace(arch, accum_steps=_probe_accum)
+    if _probe_batch is not None:
+        shape = dataclasses.replace(shape, global_batch=_probe_batch)
+    pdt = _dtype(arch.param_dtype)
+    mdt = _dtype(arch.moment_dtype)
+    dp = (tuple(mesh.axis_names) if arch.lm_batch_axes == "ALL"
+          else (arch.lm_batch_axes or dp_axes(mesh)))
+    dpn = math.prod(dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                    for a in dp)
+    p_shapes = lm_params_shapes(cfg, pdt)
+    p_shard = lm_param_shardings(arch, cfg, p_shapes, mesh)
+
+    if shape.kind == "train":
+        B, S = shape.global_batch, shape.seq_len
+        micro_tokens = (B // arch.accum_steps) * S
+        moe_groups = dpn if micro_tokens % dpn == 0 else 1
+        moe_spec = (dp, "model") if cfg.is_moe else None
+        loss_fn = lambda p, b: T.lm_loss(p, cfg, b,
+                                         compute_dtype=jnp.bfloat16,
+                                         moe_groups=moe_groups, remat=True,
+                                         moe_spec=moe_spec)
+        step = _raw_train_step(loss_fn, mdt, arch.accum_steps,
+                               _dtype(arch.grad_dtype)
+                               if arch.grad_dtype else None)
+        state_shapes = train_state_shapes(p_shapes, mdt)
+        state_shard = train_state_shardings(p_shard, mesh)
+        state_in = _attach(state_shapes, state_shard)
+        batch_in = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        metrics_rep = {k: NamedSharding(mesh, P())
+                       for k in ("loss", "grad_norm", "lr")}
+        probe = None
+        if _probing is False:
+            pc = _probe_cfgs(cfg)
+            if pc is not None:
+                c1, c2, l1, l2, lf = pc
+                A = arch.accum_steps
+                if A > 2:
+                    # bilinear probe: cost(L, A) = a + bA + cL + dAL.
+                    # Four tiny probes (accum in {1,2} at the SAME
+                    # microbatch size) keep compile memory bounded — the
+                    # full unroll of a 61-layer x 16-microbatch MoE train
+                    # step OOMs the 35 GB build host.
+                    mb = B // A
+                    cells = []
+                    for li, lc in ((l1, c1), (l2, c2)):
+                        for a in (1, 2):
+                            cells.append(lm_cell(
+                                arch, shape, mesh, _probing=lc,
+                                _probe_accum=a, _probe_batch=a * mb))
+                    probe = ("bilinear", cells, (l1, l2), (1, 2), (lf, A))
+                else:
+                    probe = ("linear",
+                             lm_cell(arch, shape, mesh, _probing=c1),
+                             lm_cell(arch, shape, mesh, _probing=c2),
+                             l1, l2, lf)
+        return Cell(fn=step, args=(state_in, batch_in),
+                    out_shardings=(state_shard, metrics_rep), donate=(0,),
+                    has_loops=True, probe=probe,
+                    act_spec=P(dp, None, None),
+                    static_desc=f"train_step B={B} S={S}")
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+
+        def fn(params, tokens):
+            return T.prefill(params, cfg, tokens, max_len=S,
+                             compute_dtype=jnp.bfloat16)
+
+        params_in = _attach(p_shapes, p_shard)
+        tokens_in = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        # explicit output shardings: last-pos logits replicated-ish over dp,
+        # caches batch/head-sharded (without this, compiler-chosen cache
+        # layouts can replicate 8+ GB/device of KV)
+        cache_out_shapes = jax.eval_shape(
+            lambda: T.make_cache(cfg, B, S, dtype=jnp.bfloat16))
+        cache_out = _lm_cache_shardings(arch, cfg, cache_out_shapes, mesh, B)
+        logits_out = NamedSharding(mesh, P(dp, None))
+        out_sh = (logits_out, cache_out)
+        probe = None
+        if _probing is False and S > 1024:
+            pc = _probe_cfgs(cfg)
+            if pc is not None:
+                c1, c2, l1, l2, lf = pc
+                probe = ("linear",
+                         lm_cell(arch, shape, mesh, _probing=c1),
+                         lm_cell(arch, shape, mesh, _probing=c2),
+                         l1, l2, lf)
+        return Cell(fn=fn, args=(params_in, tokens_in),
+                    has_loops=(S > 1024),  # q-chunk/CE maps
+                    probe=probe, out_shardings=out_sh,
+                    act_spec=P(dp, None, None),
+                    static_desc=f"prefill B={B} S={S}")
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+
+    def fn(params, caches, tokens, pos):
+        return T.decode_step(params, cfg, caches, tokens, pos,
+                             compute_dtype=jnp.bfloat16)
+
+    cache_shapes = jax.eval_shape(
+        lambda: T.make_cache(cfg, B, S, dtype=jnp.bfloat16))
+    cache_shard = _lm_cache_shardings(arch, cfg, cache_shapes, mesh, B)
+    caches_in = _attach(cache_shapes, cache_shard)
+    tok_spec = P(dp, None) if B % dpn == 0 and B >= dpn else P(None, None)
+    pos_spec = P(dp) if B % dpn == 0 and B >= dpn else P(None)
+    tokens_in = _sds((B, 1), jnp.int32, mesh, tok_spec)
+    pos_in = _sds((B,), jnp.int32, mesh, pos_spec)
+    params_in = _attach(p_shapes, p_shard)
+    return Cell(fn=fn, args=(params_in, caches_in, tokens_in, pos_in),
+                static_desc=f"decode B={B} KV={S}")
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+def _gnn_init_and_axes(arch: ArchSpec):
+    kind = arch.gnn_kind
+    cfg = arch.model_cfg
+    if kind == "gin":
+        return (lambda k: G.init_gin(k, cfg)), G.gin_axes(cfg)
+    if kind == "egnn":
+        return (lambda k: G.init_egnn(k, cfg)), G.egnn_axes(cfg)
+    if kind == "nequip":
+        return (lambda k: NQ.init_nequip(k, cfg)), NQ.nequip_axes(cfg)
+    if kind == "dimenet":
+        return (lambda k: DM.init_dimenet(k, cfg)), DM.dimenet_axes(cfg)
+    raise ValueError(kind)
+
+
+def _gnn_single_loss(arch: ArchSpec, remat: bool):
+    """loss(params, batch_dict) over ONE graph batch (not vmapped)."""
+    kind = arch.gnn_kind
+    cfg = arch.model_cfg
+
+    def loss(params, b):
+        if kind == "gin":
+            # per-shape task: graph regression when "targets" present,
+            # node classification otherwise (same params either way)
+            if "targets" in b:
+                cfg_eff = dataclasses.replace(cfg, task="graph", n_graphs=1)
+                logits = G.apply_gin(params, cfg_eff, b["node_feat"],
+                                     b["senders"], b["receivers"],
+                                     b["graph_ids"], remat=remat)
+                return jnp.mean((logits[0, 0] - b["targets"]) ** 2)
+            logits = G.apply_gin(params, cfg, b["node_feat"], b["senders"],
+                                 b["receivers"], remat=remat)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(lp, b["labels"][:, None], axis=1)[:, 0]
+            w = b["train_mask"].astype(jnp.float32)
+            return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+        if kind == "egnn":
+            e, _ = G.apply_egnn(params, cfg, b["node_feat"], b["pos"],
+                                b["senders"], b["receivers"],
+                                b.get("graph_ids"), remat=remat)
+            return jnp.mean((e - b["targets"]) ** 2)
+        if kind == "nequip":
+            e = NQ.apply_nequip(params, cfg, b["species"], b["pos"],
+                                b["senders"], b["receivers"],
+                                b.get("graph_ids"), remat=remat)
+            return jnp.mean((e - b["targets"]) ** 2)
+        if kind == "dimenet":
+            e = DM.apply_dimenet(params, cfg, b["species"], b["pos"],
+                                 b["senders"], b["receivers"], b["t_kj"],
+                                 b["t_ji"], b.get("graph_ids"), remat=remat)
+            return jnp.mean((e - b["targets"]) ** 2)
+        raise ValueError(kind)
+
+    return loss
+
+
+def _gnn_full_batch_shapes(arch: ArchSpec, shape: GNNShape, mesh):
+    """Full-graph batch ShapeDtypeStructs: nodes replicated, edge (and
+    triplet) arrays sharded across ALL mesh axes."""
+    kind = arch.gnn_kind
+    ndev = math.prod(mesh.devices.shape)
+    all_ax = _all_axes(mesh)
+    N1 = shape.n_nodes + 1
+    E = _round_up(shape.n_edges, ndev)
+    rep = P()
+    e_spec = P(all_ax)
+    b = {
+        "senders": _sds((E,), jnp.int32, mesh, e_spec),
+        "receivers": _sds((E,), jnp.int32, mesh, e_spec),
+    }
+    if kind == "gin":
+        # feature width is the model's d_in; shapes with smaller d_feat are
+        # zero-padded by the data pipeline (configs/gin_tu.py note)
+        b["node_feat"] = _sds((N1, arch.model_cfg.d_in), jnp.bfloat16, mesh,
+                              rep)
+        b["labels"] = _sds((N1,), jnp.int32, mesh, rep)
+        b["train_mask"] = _sds((N1,), jnp.bool_, mesh, rep)
+    else:
+        b["pos"] = _sds((N1, 3), jnp.bfloat16, mesh, rep)
+        b["targets"] = _sds((), jnp.bfloat16, mesh, rep)
+        if kind == "egnn":
+            b["node_feat"] = _sds((N1, arch.model_cfg.d_in), jnp.bfloat16,
+                                  mesh, rep)
+        else:
+            b["species"] = _sds((N1,), jnp.int32, mesh, rep)
+        if kind == "dimenet":
+            Tn = _round_up(2 * shape.n_edges, ndev)
+            b["t_kj"] = _sds((Tn,), jnp.int32, mesh, e_spec)
+            b["t_ji"] = _sds((Tn,), jnp.int32, mesh, e_spec)
+    return b
+
+
+def _gnn_graph_level_shapes(arch: ArchSpec, n_graphs: int, max_nodes: int,
+                            max_edges: int, mesh, spec_axes, d_feat: int,
+                            with_labels: bool):
+    """Per-graph stacked arrays (G, ...) sharded on the leading axis."""
+    kind = arch.gnn_kind
+    N1 = max_nodes + 1
+
+    def lead(dtype, *rest):
+        return _sds((n_graphs, *rest), dtype, mesh,
+                    P(spec_axes, *([None] * len(rest))))
+
+    b = {"senders": lead(jnp.int32, max_edges),
+         "receivers": lead(jnp.int32, max_edges)}
+    if kind == "gin":
+        b["node_feat"] = lead(jnp.bfloat16, N1, arch.model_cfg.d_in)
+        if with_labels:
+            b["labels"] = lead(jnp.int32, N1)
+            b["train_mask"] = lead(jnp.bool_, N1)
+        else:
+            b["targets"] = lead(jnp.bfloat16)
+            b["graph_ids"] = lead(jnp.int32, N1)
+    else:
+        b["pos"] = lead(jnp.bfloat16, N1, 3)
+        b["targets"] = lead(jnp.bfloat16)
+        if kind == "egnn":
+            b["node_feat"] = lead(jnp.bfloat16, N1, arch.model_cfg.d_in)
+        else:
+            b["species"] = lead(jnp.int32, N1)
+        if kind == "dimenet":
+            b["t_kj"] = lead(jnp.int32, 4 * max_edges)
+            b["t_ji"] = lead(jnp.int32, 4 * max_edges)
+    return b
+
+
+def gnn_cell(arch: ArchSpec, shape: GNNShape, mesh) -> Cell:
+    mdt = _dtype(arch.moment_dtype)
+    init_fn, axes = _gnn_init_and_axes(arch)
+    p_shapes = jax.eval_shape(init_fn, KEY_SDS)
+    p_shard = tree_shardings(axes, p_shapes, arch.param_rules, mesh)
+
+    if shape.kind == "full":
+        loss1 = _gnn_single_loss(arch, remat=True)
+        batch = _gnn_full_batch_shapes(arch, shape, mesh)
+        step = _raw_train_step(loss1, mdt)
+        desc = f"full-graph train N={shape.n_nodes} E={shape.n_edges}"
+    else:
+        # graph-level batches: vmapped over the leading (graph) axis
+        if shape.kind == "minibatch":
+            ndev = math.prod(mesh.devices.shape)
+            n_graphs = ndev                       # one subgraph per device
+            seeds = max(1, shape.batch_nodes // ndev)
+            hop_sizes = np.cumprod(shape.fanout)     # nodes per hop per seed
+            mn = _round_up(seeds * (1 + int(hop_sizes.sum())) + 8, 128)
+            me = _round_up(seeds * int(hop_sizes.sum()) + 8, 128)
+            spec_axes = _all_axes(mesh)
+            d_feat = shape.d_feat or 100
+            with_labels = True
+            desc = (f"minibatch G={n_graphs} seeds/shard={seeds} "
+                    f"max_nodes={mn} max_edges={me}")
+        else:  # molecule
+            n_graphs = shape.batch
+            mn, me = shape.max_nodes, shape.max_edges
+            spec_axes = dp_axes(mesh)
+            d_feat = 16
+            with_labels = False
+            desc = f"molecule B={n_graphs} n={mn} e={me}"
+        batch = _gnn_graph_level_shapes(arch, n_graphs, mn, me, mesh,
+                                        spec_axes, d_feat, with_labels)
+        loss1 = _gnn_single_loss(arch, remat=False)
+
+        def loss_vmap(params, b):
+            losses = jax.vmap(lambda bb: loss1(params, bb))(b)
+            return losses.mean()
+
+        step = _raw_train_step(loss_vmap, mdt)
+
+    state_shapes = train_state_shapes(p_shapes, mdt)
+    state_shard = train_state_shardings(p_shard, mesh)
+    state_in = _attach(state_shapes, state_shard)
+    metrics_rep = {k: NamedSharding(mesh, P())
+                   for k in ("loss", "grad_norm", "lr")}
+    return Cell(fn=step, args=(state_in, batch),
+                out_shardings=(state_shard, metrics_rep), donate=(0,),
+                static_desc=desc)
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+def rec_cell(arch: ArchSpec, shape: RecShape, mesh) -> Cell:
+    cfg: FM.FMConfig = arch.model_cfg
+    mdt = _dtype(arch.moment_dtype)
+    dp = dp_axes(mesh)
+    p_shapes = jax.eval_shape(lambda k: FM.init_fm(k, cfg), KEY_SDS)
+    p_shard = tree_shardings(FM.fm_axes(cfg), p_shapes, arch.param_rules,
+                             mesh)
+    params_in = _attach(p_shapes, p_shard)
+
+    if shape.kind == "train":
+        loss_fn = lambda p, b: FM.fm_loss(p, cfg, b["ids"], b["labels"])
+        step = _raw_train_step(loss_fn, mdt,
+                               grad_dtype=_dtype(arch.grad_dtype)
+                               if arch.grad_dtype else None)
+        state_in = _attach(train_state_shapes(p_shapes, mdt),
+                           train_state_shardings(p_shard, mesh))
+        batch = {
+            "ids": _sds((shape.batch, cfg.n_fields), jnp.int32, mesh,
+                        P(dp, None)),
+            "labels": _sds((shape.batch,), jnp.float32, mesh, P(dp)),
+        }
+        metrics_rep = {k: NamedSharding(mesh, P())
+                       for k in ("loss", "grad_norm", "lr")}
+        return Cell(fn=step, args=(state_in, batch),
+                    out_shardings=(train_state_shardings(p_shard, mesh),
+                                   metrics_rep), donate=(0,),
+                    static_desc=f"fm train B={shape.batch}")
+
+    if shape.kind == "serve":
+        fn = lambda p, ids: FM.apply_fm(p, cfg, ids)
+        dpn = dp_size(mesh)
+        spec = P(dp, None) if shape.batch % dpn == 0 else P(None, None)
+        ids = _sds((shape.batch, cfg.n_fields), jnp.int32, mesh, spec)
+        return Cell(fn=fn, args=(params_in, ids),
+                    static_desc=f"fm serve B={shape.batch}")
+
+    # retrieval: 1 query vs n_candidates
+    ndev = math.prod(mesh.devices.shape)
+    NC = _round_up(shape.n_candidates, ndev)
+    fq, fc = 20, 19
+    fn = lambda p, q, c: FM.fm_retrieval_scores(p, cfg, q, c)
+    q_in = _sds((fq,), jnp.int32, mesh, P(None))
+    c_in = _sds((NC, fc), jnp.int32, mesh, P(_all_axes(mesh), None))
+    return Cell(fn=fn, args=(params_in, q_in, c_in),
+                static_desc=f"fm retrieval NC={NC}")
+
+
+def build_cell(arch: ArchSpec, shape_name: str, mesh) -> Cell:
+    if shape_name in arch.skip_shapes:
+        raise ValueError(
+            f"{arch.id} skips {shape_name}: {arch.skip_shapes[shape_name]}")
+    shape = arch.shapes[shape_name]
+    if arch.family == "lm":
+        return lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return gnn_cell(arch, shape, mesh)
+    if arch.family == "recsys":
+        return rec_cell(arch, shape, mesh)
+    raise ValueError(arch.family)

@@ -1,0 +1,8 @@
+from .bvss import BVSS, BVSSDevice, build_bvss, to_device
+from .bfs import (BlestProblem, ENGINES, INF, make_engine, reference_bfs,
+                  pull_vss_jnp)
+from . import ordering
+
+__all__ = ["BVSS", "BVSSDevice", "build_bvss", "to_device", "BlestProblem",
+           "ENGINES", "INF", "make_engine", "reference_bfs", "pull_vss_jnp",
+           "ordering"]

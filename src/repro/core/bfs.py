@@ -1,0 +1,377 @@
+"""BFS engines (paper §4, Algorithms 2 & 3) plus the baselines of Table 2.
+
+Every device engine runs its *entire* level loop inside one ``jit`` via
+``jax.lax.while_loop`` — the TPU analogue of the paper's fused persistent
+kernel (§4.3): control never returns to the host between levels and the
+convergence test is on-device.
+
+Engines
+-------
+reference      host NumPy queue BFS (test oracle)
+dense_pull     bitmap SpMSpV full sweep (frontier-oblivious lower bound)
+csr_push       edge-parallel push (Gunrock-style edge map)
+csr_pull       edge-parallel pull over the transposed CSR (GAP-style)
+direction_opt  Beamer push/pull switching (GSWITCH's key pattern)
+brs            BerryBees-like BRS: slice-set sweep, frontier-OBLIVIOUS
+blest          Alg. 2: BVSS queue, frontier-aware blocks, eager scatter-min
+blest_lazy     Alg. 3: lazy marks (fire-and-forget) + dense finalise sweep
+
+TPU adaptation notes (DESIGN.md §2): the paper's atomic queue-append becomes
+cumsum stream-compaction; `atomicOr`/`REDG` becomes scatter-max of byte
+marks; the Alg. 3 stage-2 word sweep is a dense vectorised pass, which is
+exactly what the VPU wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bvss import BVSS, BVSSDevice, to_device
+from repro.graphs import Graph, src_of_edges, to_dense_bits
+
+INF = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# host oracle
+# ---------------------------------------------------------------------------
+def reference_bfs(g: Graph, src: int) -> np.ndarray:
+    """NumPy frontier BFS over out-CSR; returns level array (INF = unreached)."""
+    levels = np.full(g.n, INF, dtype=np.int32)
+    levels[src] = 0
+    frontier = np.array([src], dtype=np.int64)
+    lvl = 0
+    while len(frontier):
+        lvl += 1
+        nbrs = np.unique(np.concatenate(
+            [g.indices[g.indptr[u]:g.indptr[u + 1]] for u in frontier]))
+        new = nbrs[levels[nbrs] == INF].astype(np.int64)
+        levels[new] = lvl
+        frontier = new
+    return levels
+
+
+# ---------------------------------------------------------------------------
+# shared device helpers
+# ---------------------------------------------------------------------------
+def _pack_bits(bits: jnp.ndarray, n_words: int) -> jnp.ndarray:
+    """bool (n_words*32,) -> uint32 (n_words,), bit i of word w = bits[32w+i]."""
+    b = bits.reshape(n_words, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(b * weights[None, :], axis=1, dtype=jnp.uint32)
+
+
+def pull_vss_jnp(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int
+                 ) -> jnp.ndarray:
+    """Pure-jnp pull over one block of VSSs.
+
+    masks:  (B, 32) uint32 — slot j of word l = mask of slice (j, l)
+    fbytes: (B,)    uint32 — the σ-bit frontier word of each VSS's slice set
+    returns hits (B, spw, 32) bool: slice/frontier dot product ≠ 0.
+    """
+    spw = 32 // sigma
+    smask = jnp.uint32((1 << sigma) - 1)
+    fb = fbytes & smask
+    fword = jnp.zeros_like(fb)
+    for j in range(spw):
+        fword = fword | (fb << jnp.uint32(sigma * j))
+    anded = masks & fword[:, None]
+    hits = []
+    for j in range(spw):
+        sub = (anded >> jnp.uint32(sigma * j)) & smask
+        hits.append(sub != 0)
+    return jnp.stack(hits, axis=1)
+
+
+def _frontier_bytes(F: jnp.ndarray, sets: jnp.ndarray, sigma: int) -> jnp.ndarray:
+    """Gather the σ-bit frontier word of slice set ids ``sets`` from packed F."""
+    bitpos = sets.astype(jnp.uint32) * jnp.uint32(sigma)
+    word = F[(bitpos >> jnp.uint32(5)).astype(jnp.int32)]
+    shift = bitpos & jnp.uint32(31)
+    return (word >> shift) & jnp.uint32((1 << sigma) - 1)
+
+
+# ---------------------------------------------------------------------------
+# BLEST problem bundle
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BlestProblem:
+    n: int
+    sigma: int
+    n_sets: int
+    num_vss: int
+    n_fwords: int
+    dev: BVSSDevice
+
+    @staticmethod
+    def build(bvss: BVSS) -> "BlestProblem":
+        return BlestProblem(n=bvss.n, sigma=bvss.sigma, n_sets=bvss.n_sets,
+                            num_vss=bvss.num_vss,
+                            n_fwords=bvss.n_frontier_words, dev=to_device(bvss))
+
+
+PullFn = Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
+
+
+def make_blest_bfs(problem: BlestProblem, *, lazy: bool, block: int = 256,
+                   pull_impl: PullFn | None = None,
+                   max_levels: int | None = None) -> Callable:
+    """Build the jitted BLEST BFS (Alg. 2 eager / Alg. 3 lazy)."""
+    p = problem
+    dev = p.dev
+    sigma, spw = p.sigma, 32 // p.sigma
+    qcap = p.num_vss + block  # pad so dynamic_slice blocks always fit
+    dummy_vss = p.num_vss
+    pull = pull_impl or pull_vss_jnp
+    n_setbits = p.n_sets * sigma
+    n_pad = p.n_fwords * 32
+    max_lv = max_levels if max_levels is not None else p.n + 1
+
+    vss_ids_all = jnp.arange(p.num_vss, dtype=jnp.int32)
+
+    def rebuild_queue(new_bits: jnp.ndarray):
+        """new_bits: (n_pad,) bool. Build Q_next from newly-visited sets by
+        cumsum stream-compaction (the TPU idiom for atomic queue append)."""
+        set_active = new_bits[:n_setbits].reshape(p.n_sets, sigma).any(axis=1)
+        vss_active = set_active[dev.virtual_to_real[:p.num_vss]]
+        pos = jnp.cumsum(vss_active.astype(jnp.int32)) - 1
+        idx = jnp.where(vss_active, pos, qcap)  # OOB -> dropped
+        Q = jnp.full((qcap,), dummy_vss, dtype=jnp.int32)
+        Q = Q.at[idx].set(vss_ids_all, mode="drop")
+        return Q, vss_active.sum().astype(jnp.int32)
+
+    def process_blocks(F, Q, count, lvl, levels, marks):
+        n_blocks = (count + block - 1) // block
+
+        def body(carry):
+            i, levels, marks = carry
+            ids = jax.lax.dynamic_slice(Q, (i * block,), (block,))
+            fbytes = _frontier_bytes(F, dev.virtual_to_real[ids], sigma)
+            hits = pull(dev.masks[ids], fbytes, sigma)      # (B, spw, 32)
+            rows = dev.row_ids[ids].reshape(-1)             # (B*spw*32,)
+            h = hits.reshape(-1)
+            if lazy:
+                # Alg. 3 stage 1: fire-and-forget mark (REDG analogue)
+                marks = marks.at[rows].max(h.astype(jnp.uint8))
+            else:
+                # Alg. 2: eager visited-check-and-set (ATOMG analogue):
+                # scatter-min leaves already-visited levels untouched
+                upd = jnp.where(h, lvl, INF).astype(jnp.int32)
+                levels = levels.at[rows].min(upd)
+            return i + 1, levels, marks
+
+        def cond(carry):
+            return carry[0] < n_blocks
+
+        _, levels, marks = jax.lax.while_loop(cond, body, (jnp.int32(0),
+                                                           levels, marks))
+        return levels, marks
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[src].set(0)
+        F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+        init_bits = jnp.zeros((n_pad,), dtype=bool).at[src].set(True)
+        Q, count = rebuild_queue(init_bits)
+        marks0 = jnp.zeros((p.n + 1,), dtype=jnp.uint8)
+
+        def cond(state):
+            levels, F, Q, count, lvl = state
+            return (count > 0) & (lvl < max_lv)
+
+        def body(state):
+            levels, F, Q, count, lvl = state
+            lvl = lvl + 1
+            levels, marks = process_blocks(F, Q, count, lvl, levels, marks0)
+            if lazy:
+                # Alg. 3 stage 2: dense coalesced finalisation sweep
+                new = (marks[:p.n] > 0) & (levels[:p.n] == INF)
+                levels = levels.at[:p.n].set(
+                    jnp.where(new, lvl, levels[:p.n]))
+            else:
+                new = levels[:p.n] == lvl
+            new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
+            F = _pack_bits(new_pad, p.n_fwords)
+            Q, count = rebuild_queue(new_pad)
+            return levels, F, Q, count, lvl
+
+        state = (levels, F, Q, count, jnp.int32(0))
+        levels, *_ = jax.lax.while_loop(cond, body, state)
+        return levels[:p.n]
+
+    return jax.jit(bfs)
+
+
+# ---------------------------------------------------------------------------
+# BRS baseline (BerryBees-like): frontier-oblivious slice-set sweep
+# ---------------------------------------------------------------------------
+def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
+                 ) -> Callable:
+    p = problem
+    dev = p.dev
+    sigma = p.sigma
+    n_pad = p.n_fwords * 32
+    max_lv = max_levels if max_levels is not None else p.n + 1
+    all_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[src].set(0)
+        F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+
+        def cond(state):
+            _, _, cont, lvl = state
+            return cont & (lvl < max_lv)
+
+        def body(state):
+            levels, F, _, lvl = state
+            lvl = lvl + 1
+            # every slice set visited, every level (paper drawback #2)
+            fbytes = _frontier_bytes(F, dev.virtual_to_real[all_ids], sigma)
+            hits = pull_vss_jnp(dev.masks[all_ids], fbytes, sigma)
+            rows = dev.row_ids[all_ids].reshape(-1)
+            upd = jnp.where(hits.reshape(-1), lvl, INF).astype(jnp.int32)
+            levels = levels.at[rows].min(upd)
+            new = levels[:p.n] == lvl
+            new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
+            F = _pack_bits(new_pad, p.n_fwords)
+            return levels, F, new.any(), lvl
+
+        state = (levels, F, jnp.bool_(True), jnp.int32(0))
+        levels, *_ = jax.lax.while_loop(cond, body, state)
+        return levels[:p.n]
+
+    return jax.jit(bfs)
+
+
+# ---------------------------------------------------------------------------
+# dense bitmap pull (naive SpMSpV lower bound)
+# ---------------------------------------------------------------------------
+def make_dense_pull_bfs(g: Graph, *, max_levels: int | None = None) -> Callable:
+    n = g.n
+    n_words = (n + 31) // 32
+    adj = jnp.asarray(to_dense_bits(g))  # (n, n_words) of A^T
+    max_lv = max_levels if max_levels is not None else n + 1
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = jnp.full((n,), INF, dtype=jnp.int32).at[src].set(0)
+        F = jnp.zeros((n_words,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+
+        def cond(state):
+            return state[2] & (state[3] < max_lv)
+
+        def body(state):
+            levels, F, _, lvl = state
+            lvl = lvl + 1
+            y = jnp.any(adj & F[None, :], axis=1)
+            new = y & (levels == INF)
+            levels = jnp.where(new, lvl, levels)
+            new_pad = jnp.zeros((n_words * 32,), dtype=bool).at[:n].set(new)
+            return levels, _pack_bits(new_pad, n_words), new.any(), lvl
+
+        state = (levels, F, jnp.bool_(True), jnp.int32(0))
+        levels, *_ = jax.lax.while_loop(cond, body, state)
+        return levels
+
+    return jax.jit(bfs)
+
+
+# ---------------------------------------------------------------------------
+# CSR edge-parallel baselines (push / pull / direction-optimised)
+# ---------------------------------------------------------------------------
+def make_csr_bfs(g: Graph, mode: str = "push", *, alpha: float = 15.0,
+                 max_levels: int | None = None) -> Callable:
+    """Edge-parallel BFS baselines.
+
+    push: next[dst] |= frontier[src] over all out-edges.
+    pull: next[u] |= frontier[v] over all in-edges (v -> u), unvisited u only.
+    dirop: Beamer switching between the two on scout-count heuristic.
+    """
+    assert mode in ("push", "pull", "dirop")
+    n = g.n
+    e_src = jnp.asarray(src_of_edges(g).astype(np.int32))
+    e_dst = jnp.asarray(g.indices.astype(np.int32))
+    out_deg = jnp.asarray(g.out_degree.astype(np.int32))
+    m = g.m
+    max_lv = max_levels if max_levels is not None else n + 1
+
+    def push_step(frontier, levels):
+        nxt = jnp.zeros((n,), dtype=jnp.uint8)
+        nxt = nxt.at[e_dst].max(frontier[e_src].astype(jnp.uint8))
+        return (nxt > 0) & (levels == INF)
+
+    def pull_step(frontier, levels):
+        # pull for u over its in-edges (v -> u): mask by unvisited dst FIRST
+        # (the work-saving property of pull), then scatter.
+        unvis = levels == INF
+        vals = frontier[e_src] & unvis[e_dst]
+        nxt = jnp.zeros((n,), dtype=jnp.uint8)
+        nxt = nxt.at[e_dst].max(vals.astype(jnp.uint8))
+        return nxt > 0
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = jnp.full((n,), INF, dtype=jnp.int32).at[src].set(0)
+        frontier = jnp.zeros((n,), dtype=bool).at[src].set(True)
+
+        def cond(state):
+            return state[2] & (state[3] < max_lv)
+
+        def body(state):
+            levels, frontier, _, lvl = state
+            lvl = lvl + 1
+            if mode == "push":
+                new = push_step(frontier, levels)
+            elif mode == "pull":
+                new = pull_step(frontier, levels)
+            else:
+                scout = jnp.sum(jnp.where(frontier, out_deg, 0))
+                use_pull = scout * alpha > m
+                new = jax.lax.cond(use_pull, pull_step, push_step,
+                                   frontier, levels)
+            levels = jnp.where(new, lvl, levels)
+            return levels, new, new.any(), lvl
+
+        state = (levels, frontier, jnp.bool_(True), jnp.int32(0))
+        levels, *_ = jax.lax.while_loop(cond, body, state)
+        return levels
+
+    return jax.jit(bfs)
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+def make_engine(g: Graph, engine: str, *, sigma: int = 8, block: int = 256,
+                bvss: BVSS | None = None, pull_impl: PullFn | None = None
+                ) -> Callable:
+    """Build a jitted BFS callable ``f(src) -> levels`` for the named engine."""
+    if engine == "dense_pull":
+        return make_dense_pull_bfs(g)
+    if engine in ("csr_push", "csr_pull", "dirop"):
+        mode = {"csr_push": "push", "csr_pull": "pull", "dirop": "dirop"}[engine]
+        return make_csr_bfs(g, mode)
+    if engine in ("brs", "blest", "blest_lazy"):
+        from repro.core.bvss import build_bvss
+        b = bvss if bvss is not None else build_bvss(g, sigma=sigma)
+        problem = BlestProblem.build(b)
+        if engine == "brs":
+            return make_brs_bfs(problem)
+        return make_blest_bfs(problem, lazy=(engine == "blest_lazy"),
+                              block=block, pull_impl=pull_impl)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+ENGINES = ("dense_pull", "csr_push", "csr_pull", "dirop", "brs", "blest",
+           "blest_lazy")

@@ -1,0 +1,6 @@
+from .tokens import TokenPipeline, TokenPipelineConfig
+from .sampler import NeighborSampler, SampledBatch
+from . import graphs
+
+__all__ = ["TokenPipeline", "TokenPipelineConfig", "NeighborSampler",
+           "SampledBatch", "graphs"]

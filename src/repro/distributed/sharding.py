@@ -1,0 +1,91 @@
+"""Sharding rule engine: logical parameter/activation axes -> mesh axes.
+
+Models annotate every parameter leaf with a tuple of logical axis names
+(models/*.py ``*_axes`` functions).  An arch config supplies a *rules* map
+``logical -> mesh axis (or tuple of mesh axes, or None)``; this engine turns
+(axes tree, shapes tree, rules, mesh) into a NamedSharding tree, with two
+safety rails applied per leaf:
+
+* divisibility: a dim whose size is not divisible by the mesh-axis extent
+  falls back to replication on that dim (e.g. gemma3's single KV head can't
+  split 16 ways — the engine replicates it instead of erroring);
+* collision: a mesh axis may appear only once per PartitionSpec; later
+  logical axes mapping to an already-used mesh axis are replicated
+  (e.g. DeepSeek MoE w_gate maps experts→model and ffn→model; experts wins).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, (tuple, list)):
+        return math.prod(sizes[a] for a in axis)
+    return sizes[axis]
+
+
+def spec_for_leaf(logical: tuple, shape: tuple, rules: dict, mesh: Mesh
+                  ) -> P:
+    assert len(logical) == len(shape) or logical == (), \
+        f"logical {logical} vs shape {shape}"
+    used: set = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        axis = rules.get(name)
+        if axis is None:
+            out.append(None)
+            continue
+        axes_t = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        if any(a not in mesh.axis_names for a in axes_t):
+            out.append(None)
+            continue
+        if any(a in used for a in axes_t):
+            out.append(None)           # collision -> replicate
+            continue
+        if dim % _axis_size(mesh, axes_t) != 0:
+            out.append(None)           # divisibility -> replicate
+            continue
+        used.update(axes_t)
+        out.append(axis if not isinstance(axis, list) else tuple(axis))
+    return P(*out)
+
+
+def tree_shardings(axes_tree, shapes_tree, rules: dict, mesh: Mesh):
+    """Build a NamedSharding pytree from a logical-axes tree + a matching
+    ShapeDtypeStruct tree."""
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        isinstance(x, (str, tuple, list, type(None))) for x in t)
+
+    def build(logical, shaped):
+        spec = spec_for_leaf(tuple(logical), tuple(shaped.shape), rules, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(build, axes_tree, shapes_tree,
+                                  is_leaf=is_axes)
+
+
+def shaped_with_sharding(shapes_tree, shardings_tree):
+    """Attach shardings to a ShapeDtypeStruct tree (for AOT lowering)."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def cast_float_leaves(shapes_tree, dtype):
+    """Re-declare float leaves of a ShapeDtypeStruct tree in ``dtype``
+    (used to lower with bf16 parameters without materialising them)."""
+    def cast(s):
+        if np.issubdtype(s.dtype, np.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+    return jax.tree_util.tree_map(cast, shapes_tree)

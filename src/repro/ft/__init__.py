@@ -1,0 +1,10 @@
+from .checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                         list_checkpoints, restore_checkpoint, restore_latest,
+                         save_checkpoint)
+from .manager import (FailureInjector, PrefetchQueue, RestartManager,
+                      SimulatedFailure, elastic_remesh_plan)
+
+__all__ = ["AsyncCheckpointer", "latest_checkpoint", "list_checkpoints",
+           "restore_checkpoint", "restore_latest", "save_checkpoint",
+           "FailureInjector", "PrefetchQueue", "RestartManager",
+           "SimulatedFailure", "elastic_remesh_plan"]

@@ -1,0 +1,154 @@
+"""Checkpointing (orbax is not installed — implemented here).
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
+``manifest.json`` with the treedef, dtypes, shapes, step and mesh metadata.
+Writes go to ``step_<N>.tmp`` and are atomically renamed, so a crash
+mid-save never corrupts the latest checkpoint — the restart manager simply
+picks the newest *complete* directory.
+
+Restore is resharding-tolerant: leaves are saved as full (unsharded) arrays
+and re-placed under whatever sharding the restoring job requests, so a run
+can resume on a different device count (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+import ml_dtypes
+
+Params = Any
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+_SANITIZE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = _SANITIZE.sub("_", jax.tree_util.keystr(path))
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    extra: dict | None = None) -> str:
+    """Blocking save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = _leaf_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for name, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype == _BF16:  # numpy can't roundtrip bf16: store a view
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"].append(
+            {"name": name, "dtype": true_dtype, "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight at a time)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, step: int, tree, *, extra: dict | None = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra=extra)
+            retain(self.directory, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def list_checkpoints(directory: str) -> list[tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for d in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", d)
+        path = os.path.join(directory, d)
+        if m and os.path.exists(os.path.join(path, "manifest.json")):
+            out.append((int(m.group(1)), path))
+    return sorted(out)
+
+
+def latest_checkpoint(directory: str) -> tuple[int, str] | None:
+    cks = list_checkpoints(directory)
+    return cks[-1] if cks else None
+
+
+def retain(directory: str, keep: int):
+    cks = list_checkpoints(directory)
+    for _, path in cks[:-keep] if keep > 0 else []:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def restore_checkpoint(path: str, tree_like, *, shardings=None):
+    """Restore into the structure of ``tree_like``.  ``shardings`` may be a
+    matching pytree of jax shardings (or None for default placement) —
+    resharding across device counts happens here."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [name for name, _ in _leaf_paths(tree_like)]
+    saved = {l["name"] for l in manifest["leaves"]}
+    missing = [n for n in names if n not in saved]
+    if missing:
+        raise ValueError(f"checkpoint at {path} is missing leaves {missing}")
+    dtypes = {l["name"]: l["dtype"] for l in manifest["leaves"]}
+    arrays = {}
+    for n in names:
+        arr = np.load(os.path.join(path, n + ".npy"))
+        if dtypes[n] == "bfloat16":
+            arr = arr.view(_BF16)
+        arrays[n] = arr
+    leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+    out = []
+    for (name, like), sh in zip(_leaf_paths(tree_like), shard_leaves):
+        arr = arrays[name]
+        assert tuple(arr.shape) == tuple(like.shape), \
+            f"{name}: {arr.shape} vs {like.shape}"
+        if arr.dtype != like.dtype:
+            arr = arr.astype(like.dtype)
+        out.append(jax.device_put(arr, sh))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def restore_latest(directory: str, tree_like, *, shardings=None):
+    latest = latest_checkpoint(directory)
+    if latest is None:
+        return None
+    _, path = latest
+    return restore_checkpoint(path, tree_like, shardings=shardings)

@@ -1,0 +1,140 @@
+"""Graph containers.
+
+A ``Graph`` stores a simple directed graph in CSR (out-neighbour) form and
+lazily materialises the in-neighbour (CSC / transposed CSR) view that the
+pull-based BFS pipeline consumes.  All construction is host-side NumPy; the
+device-facing structures (BVSS, bit-adjacency) are built from these arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Simple directed graph, CSR over out-neighbours."""
+
+    n: int
+    indptr: np.ndarray   # (n+1,) int64
+    indices: np.ndarray  # (m,)  int32, out-neighbour lists, sorted per row
+
+    def __post_init__(self):
+        assert self.indptr.shape == (self.n + 1,)
+        assert self.indptr[0] == 0 and self.indptr[-1] == len(self.indices)
+
+    @property
+    def m(self) -> int:
+        return int(len(self.indices))
+
+    @cached_property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @cached_property
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.indices, minlength=self.n).astype(np.int64)
+
+    def neighbours(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+    # -- transposed (in-neighbour) view: row u of A^T = incoming edges of u --
+    @cached_property
+    def t_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """CSR of the transposed graph: (indptr, indices)."""
+        order = np.argsort(self.indices, kind="stable")
+        t_indices = src_of_edges(self)[order].astype(np.int32)
+        counts = np.bincount(self.indices, minlength=self.n)
+        t_indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=t_indptr[1:])
+        return t_indptr, t_indices
+
+    def transpose(self) -> "Graph":
+        t_indptr, t_indices = self.t_csr
+        return Graph(self.n, t_indptr, t_indices)
+
+    def permute(self, perm: np.ndarray) -> "Graph":
+        """Relabel vertices: new id of old vertex v is ``perm[v]``."""
+        perm = np.asarray(perm, dtype=np.int64)
+        assert perm.shape == (self.n,)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(self.n)
+        # Row u of the new graph is row inv[u] of the old one, with relabelled
+        # column ids.
+        new_deg = self.out_degree[inv]
+        new_indptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(new_deg, out=new_indptr[1:])
+        new_indices = np.empty(self.m, dtype=np.int32)
+        for u in range(self.n):
+            old = inv[u]
+            s, e = self.indptr[old], self.indptr[old + 1]
+            seg = perm[self.indices[s:e]]
+            seg.sort()
+            new_indices[new_indptr[u]:new_indptr[u + 1]] = seg
+        return Graph(self.n, new_indptr, new_indices)
+
+    def permute_fast(self, perm: np.ndarray) -> "Graph":
+        """Vectorised relabel (equivalent to :meth:`permute`)."""
+        perm = np.asarray(perm, dtype=np.int64)
+        src = perm[src_of_edges(self)]
+        dst = perm[self.indices.astype(np.int64)]
+        return from_edges(self.n, src, dst, dedup=False)
+
+    @cached_property
+    def symmetrized(self) -> "Graph":
+        src = src_of_edges(self)
+        dst = self.indices.astype(np.int64)
+        return from_edges(
+            self.n, np.concatenate([src, dst]), np.concatenate([dst, src]),
+            dedup=True)
+
+    def bandwidth(self) -> int:
+        """Max |u - v| over edges (matrix bandwidth of the adjacency)."""
+        if self.m == 0:
+            return 0
+        src = src_of_edges(self)
+        return int(np.abs(src - self.indices.astype(np.int64)).max())
+
+
+def src_of_edges(g: Graph) -> np.ndarray:
+    """(m,) array of edge sources aligned with ``g.indices``."""
+    return np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+
+
+def from_edges(n: int, src: np.ndarray, dst: np.ndarray, *,
+               dedup: bool = True, drop_loops: bool = True) -> Graph:
+    """Build a Graph from edge lists (vectorised)."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if drop_loops:
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+    key = src * n + dst
+    if dedup:
+        key = np.unique(key)
+    else:
+        key = np.sort(key)
+    src = key // n
+    dst = key % n
+    counts = np.bincount(src, minlength=n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return Graph(n, indptr, dst.astype(np.int32))
+
+
+def to_dense_bits(g: Graph, sigma_pad: int = 32) -> np.ndarray:
+    """Packed bit-adjacency of the *transposed* graph.
+
+    Returns (n, ceil(n/32)) uint32 where bit v of row u is set iff edge
+    v -> u exists (the pull view).  Only for small test graphs.
+    """
+    n_words = (g.n + 31) // 32
+    out = np.zeros((g.n, n_words), dtype=np.uint32)
+    t_indptr, t_indices = g.t_csr
+    for u in range(g.n):
+        cols = t_indices[t_indptr[u]:t_indptr[u + 1]].astype(np.int64)
+        np.bitwise_or.at(out[u], cols // 32,
+                         (np.uint32(1) << (cols % 32).astype(np.uint32)))
+    return out

@@ -1,0 +1,4 @@
+from .ops import bvss_pull, bit_spmm, finalize_sweep, pull_vss_kernel
+from . import ref
+
+__all__ = ["bvss_pull", "bit_spmm", "finalize_sweep", "pull_vss_kernel", "ref"]

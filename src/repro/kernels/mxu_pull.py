@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bit-SpMM pull on the MXU (multi-source BFS, DESIGN §2.2).
+
+Paper §2: stacking S frontiers column-wise turns SpMSpV into SpMM.  On TPU
+the MXU's native tile is 128×128 int8 — 16× wider than the paper's
+m8n8k128 — so the bit-unpack cost (8× read amplification) only amortises
+when many sources share one adjacency read.  This kernel computes
+
+    Y[r, s] = Σ_c bits(A_packed)[r, c] * X[c, s]        (popcount semiring)
+
+over 128-column stripes: the packed bit-rows of a row-tile are unpacked to
+an int8 {0,1} tile in VMEM and fed to ``dot_general`` (int8 → int32), the
+exact analogue of the paper's (AND, +) popcount accumulation, with every
+MXU output entry useful (128·S dot products per call vs the paper's 64).
+
+Grid = (row_tiles, s_tiles, k_stripes); the K dimension accumulates into the
+output block (revisiting pattern), so K is the innermost grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 128   # rows per grid step
+TILE_S = 128   # sources per grid step
+TILE_K = 128   # columns per stripe = 4 packed u32 words
+
+
+def _unpack_bits_u32(packed: jnp.ndarray) -> jnp.ndarray:
+    """(R, W) uint32 -> (R, W*32) int8 of {0,1}; bit i of word w -> col 32w+i."""
+    R, W = packed.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(R, W * 32).astype(jnp.int8)
+
+
+def _mxu_kernel(a_ref, x_ref, y_ref):
+    """a_ref (TILE_R, TILE_K//32) u32; x_ref (TILE_K, TILE_S) i8;
+    y_ref (TILE_R, TILE_S) i32 accumulated over the K grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a_bits = _unpack_bits_u32(a_ref[...])            # (R, K) int8
+    part = jax.lax.dot_general(
+        a_bits, x_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bit_spmm(a_packed: jnp.ndarray, x: jnp.ndarray, *,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """Popcount-semiring SpMM: Y = bits(A) @ X.
+
+    a_packed: (R, ceil(C/32)) uint32 packed bit rows.
+    x:        (C, S) int8 (0/1 frontier columns).
+    returns   (R, S) int32 popcounts (threshold >0 outside for Boolean BFS).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    R, W = a_packed.shape
+    C, S = x.shape
+    assert W * 32 >= C, (W, C)
+    # pad everything to tile multiples
+    pr, pk, ps = (-R) % TILE_R, (-(W * 32)) % TILE_K, (-S) % TILE_S
+    if W * 32 > C:
+        x = jnp.pad(x, ((0, W * 32 - C), (0, 0)))
+    a_packed = jnp.pad(a_packed, ((0, pr), (0, pk // 32)))
+    x = jnp.pad(x, ((0, pk), (0, ps)))
+    Rp, Wp = a_packed.shape
+    Cp, Sp = x.shape
+    grid = (Rp // TILE_R, Sp // TILE_S, Cp // TILE_K)
+
+    y = pl.pallas_call(
+        _mxu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, TILE_K // 32), lambda r, s, k: (r, k)),
+            pl.BlockSpec((TILE_K, TILE_S), lambda r, s, k: (k, s)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, TILE_S), lambda r, s, k: (r, s)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Sp), jnp.int32),
+        interpret=interpret,
+    )(a_packed, x)
+    return y[:R, :S]

@@ -1,0 +1,22 @@
+"""Public jit'd entry points for the kernel layer.
+
+Downstream code (BFS engines, multi-source BFS) imports from here so the
+kernel/oracle switch is one flag.  On CPU (this container) the Pallas bodies
+execute in ``interpret=True``; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from .bvss_pull import bvss_pull
+from .mxu_pull import bit_spmm
+from .frontier_finalize import finalize_sweep
+from . import ref
+
+
+def pull_vss_kernel(masks, fbytes, sigma: int = 8):
+    """Drop-in replacement for core.bfs.pull_vss_jnp backed by the Pallas
+    VPU kernel (lane-major layout)."""
+    return bvss_pull(masks, fbytes, sigma=sigma)
+
+
+__all__ = ["bvss_pull", "bit_spmm", "finalize_sweep", "pull_vss_kernel",
+           "ref"]

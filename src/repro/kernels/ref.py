@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF32 = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def bvss_pull_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
+                  ) -> jnp.ndarray:
+    """Oracle for kernels.bvss_pull: hits (B, 32/σ, 32) bool."""
+    spw = 32 // sigma
+    smask = jnp.uint32((1 << sigma) - 1)
+    fb = fbytes & smask
+    fword = jnp.zeros_like(fb)
+    for j in range(spw):
+        fword = fword | (fb << jnp.uint32(sigma * j))
+    anded = masks & fword[:, None]
+    hits = []
+    for j in range(spw):
+        hits.append(((anded >> jnp.uint32(sigma * j)) & smask) != 0)
+    return jnp.stack(hits, axis=1)
+
+
+def bit_spmm_ref(a_packed: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.bit_spmm: Y (R, S) int32 popcounts."""
+    R, W = a_packed.shape
+    C, S = x.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((a_packed[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1))
+    dense = bits.reshape(R, W * 32)[:, :C].astype(jnp.int32)
+    return dense @ x.astype(jnp.int32)
+
+
+def finalize_sweep_ref(marks: jnp.ndarray, levels: jnp.ndarray,
+                       lvl) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.finalize_sweep."""
+    new = (marks > 0) & (levels == INF32)
+    return jnp.where(new, jnp.int32(lvl), levels), new

@@ -1,0 +1,301 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-importing module: jax locks the device count at
+# first init.  setdefault so tests can request a smaller host platform.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import all_archs, get_arch   # noqa: E402
+from repro.configs.families import build_cell        # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+
+"""Multi-pod dry run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms (DESIGN §5).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh multi
+
+Artifacts: one JSON per cell under artifacts/dryrun/<mesh>/.
+"""
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16, "s4": 1, "u4": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-payload bytes of every collective in the (post-SPMD,
+    per-device) optimized HLO.  Wire-byte convention: ring all-reduce moves
+    ~2x its payload; the others ~1x (documented in EXPERIMENTS.md)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        ty, op, _start = m.group(1), m.group(2), m.group(3)
+        out[op] += _shape_bytes(ty)
+        out["count"] += 1
+    out["wire_bytes"] = (2 * out["all-reduce"] + out["all-gather"]
+                         + out["reduce-scatter"] + out["all-to-all"]
+                         + out["collective-permute"])
+    return out
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float) -> dict:
+    """Per-device seconds for each roofline term (v5e)."""
+    return {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": wire_bytes / ICI_BW,
+    }
+
+
+def _probe_metrics(c, mesh):
+    with mesh:
+        comp = c.lower(unroll=True).compile()
+    cost = comp.cost_analysis()
+    coll = collective_bytes(comp.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def _probe_costs(cell, mesh):
+    """Compile the probe twins unrolled and extrapolate every cost metric.
+
+    linear:   two layer counts; cost(L) = a + cL.
+    bilinear: (layers x accum) grid; cost(L, A) = a + bA + cL + dAL —
+    exact because layers (within a group) and microbatches are
+    HLO-identical repetitions."""
+    kind = cell.probe[0]
+    if kind == "linear":
+        _, c1, c2, l1, l2, lf = cell.probe
+        f1, h1, k1 = _probe_metrics(c1, mesh)
+        f2, h2, k2 = _probe_metrics(c2, mesh)
+        scale = (lf - l1) / (l2 - l1)
+        ext = lambda a, b: a + (b - a) * scale
+        coll = {k: int(ext(k1[k], k2[k])) for k in k1}
+        return ext(f1, f2), ext(h1, h2), coll
+    _, cells, (l1, l2), (a1, a2), (lf, af) = cell.probe
+    m = [_probe_metrics(c, mesh) for c in cells]  # order: (l1,a1)(l1,a2)(l2,a1)(l2,a2)
+
+    def ext(c11, c12, c21, c22):
+        d = (c22 - c21 - c12 + c11) / ((l2 - l1) * (a2 - a1))
+        cc = (c21 - c11) / (l2 - l1) - d * a1
+        b = (c12 - c11) / (a2 - a1) - d * l1
+        a = c11 - b * a1 - cc * l1 - d * a1 * l1
+        return a + b * af + cc * lf + d * af * lf
+
+    flops = ext(m[0][0], m[1][0], m[2][0], m[3][0])
+    hbm = ext(m[0][1], m[1][1], m[2][1], m[3][1])
+    coll = {k: int(max(0, ext(m[0][2][k], m[1][2][k], m[2][2][k],
+                             m[3][2][k]))) for k in m[0][2]}
+    return flops, hbm, coll
+
+
+def _make_mesh(mesh_name: str, small: bool):
+    if small:
+        return (jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+                if mesh_name == "multi"
+                else jax.make_mesh((2, 4), ("data", "model")))
+    return make_production_mesh(multi_pod=(mesh_name == "multi"))
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str, *,
+             out_dir: str = "artifacts/dryrun", small: bool = False,
+             arch_obj=None) -> dict:
+    """``arch_obj`` overrides the registered spec (perf-variant runs)."""
+    arch = arch_obj if arch_obj is not None else get_arch(arch_id)
+    mesh = _make_mesh(mesh_name, small)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": list(mesh.devices.shape),
+           "axes": list(mesh.axis_names)}
+    if shape_name in arch.skip_shapes:
+        rec["status"] = "skipped"
+        rec["reason"] = arch.skip_shapes[shape_name]
+        _write(rec, out_dir)
+        return rec
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh)
+        rec["desc"] = cell.static_desc
+        # pass 1 (canonical): scan-over-layers program — this is the
+        # executable artifact; proves compile + gives memory analysis.
+        with mesh:
+            lowered = cell.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        mem = _mem_stats(compiled)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "scan_flops_per_device": float(cost.get("flops", 0.0)),
+            "scan_hbm_bytes_per_device": float(cost.get("bytes accessed",
+                                                        0.0)),
+            "scan_collectives": coll,
+            "memory": mem,
+        })
+        # pass 2 (analysis): unrolled program — XLA cost analysis counts a
+        # while body ONCE, so the canonical pass undercounts flops/bytes/
+        # collectives by the trip counts; the unrolled pass is exact.
+        if (mesh_name == "multi" or os.environ.get("REPRO_SCAN_ONLY")) \
+                and cell.has_loops:
+            # multi-pod pass proves the pod axis shards; the roofline table
+            # is single-pod only (spec) — skip the costly unrolled pass
+            rec["cost_source"] = "scan-only (roofline is single-pod)"
+            flops = rec["scan_flops_per_device"]
+            hbm = rec["scan_hbm_bytes_per_device"]
+            coll_u = coll
+        elif not cell.has_loops:
+            rec["cost_source"] = "exact (no internal loops)"
+            flops = rec["scan_flops_per_device"]
+            hbm = rec["scan_hbm_bytes_per_device"]
+            coll_u = coll
+        else:
+          try:
+            t3 = time.time()
+            if cell.probe is not None:
+                # two reduced-layer unrolled twins + linear extrapolation
+                # (exact: layers within a group are HLO-identical)
+                flops, hbm, coll_u = _probe_costs(cell, mesh)
+                rec["cost_source"] = "unrolled-probe-extrapolated"
+            else:
+                with mesh:
+                    comp_u = cell.lower(unroll=True).compile()
+                cost_u = comp_u.cost_analysis()
+                coll_u = collective_bytes(comp_u.as_text())
+                flops = float(cost_u.get("flops", 0.0))
+                hbm = float(cost_u.get("bytes accessed", 0.0))
+                rec["cost_source"] = "unrolled"
+            rec["unrolled_compile_s"] = round(time.time() - t3, 2)
+          except Exception as e:  # fall back to canonical numbers
+            rec["unrolled_error"] = f"{type(e).__name__}: {e}"
+            flops = rec["scan_flops_per_device"]
+            hbm = rec["scan_hbm_bytes_per_device"]
+            coll_u = coll
+            rec["cost_source"] = "scan(UNDERCOUNTS loop bodies)"
+        rec["flops_per_device"] = flops
+        rec["hbm_bytes_per_device"] = hbm
+        rec["collectives"] = coll_u
+        rec["roofline"] = roofline_terms(flops, hbm, coll_u["wire_bytes"])
+        terms = rec["roofline"]
+        rec["dominant"] = max(terms, key=terms.get)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec: dict, out_dir: str):
+    d = os.path.join(out_dir, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--small", action="store_true",
+                    help="tiny shakeout mesh instead of the production one")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape_name in arch.shapes:
+                cells.append((arch.id, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for arch_id, shape_name in cells:
+        rec = run_cell(arch_id, shape_name, args.mesh, out_dir=args.out,
+                       small=args.small)
+        status = rec["status"]
+        n_ok += status == "ok"
+        n_skip += status == "skipped"
+        n_err += status == "error"
+        if status == "ok":
+            t = rec["roofline"]
+            print(f"[{args.mesh}] {arch_id:18s} {shape_name:14s} OK "
+                  f"compile={rec['compile_s']:7.1f}s "
+                  f"comp={t['compute_s']:.2e}s mem={t['memory_s']:.2e}s "
+                  f"coll={t['collective_s']:.2e}s dom={rec['dominant']}",
+                  flush=True)
+        elif status == "skipped":
+            print(f"[{args.mesh}] {arch_id:18s} {shape_name:14s} SKIP "
+                  f"({rec['reason'][:60]})", flush=True)
+        else:
+            print(f"[{args.mesh}] {arch_id:18s} {shape_name:14s} ERROR "
+                  f"{rec['error'][:160]}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  The multi-pod mesh adds a
+leading "pod" axis; DP shards batch over ("pod", "data"), TP/EP over
+"model", and the optional pipeline wrapper stages over "pod".
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (requires
+    --xla_force_host_platform_device_count >= n_data*n_model)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_axes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    sizes = mesh_axes(mesh)
+    out = 1
+    for a in dp_axes(mesh):
+        out *= sizes[a]
+    return out

@@ -1,0 +1,139 @@
+"""Training launcher: ``--arch <id>`` with reduced (smoke) or full configs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+On this CPU container only smoke configs are executable; the full configs
+are exercised through the dry-run (launch/dryrun.py).  The launcher wires
+the full substrate: deterministic data pipeline, AdamW, checkpoint/restart,
+straggler-tolerant prefetch, optional failure injection (chaos drill).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.configs.families import _gnn_init_and_axes, _gnn_single_loss
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.data.graphs import full_graph_batch, molecule_batch, recsys_batch
+from repro.ft.manager import FailureInjector, RestartManager
+from repro.graphs import generators as gen
+from repro.models import fm as FM
+from repro.models import transformer as T
+from repro.train import TrainConfig, train
+
+
+def lm_setup(arch, cfg, args):
+    params = T.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq_len, global_batch=args.batch,
+        seed=args.seed))
+    loss_fn = lambda p, b: T.lm_loss(p, cfg, jnp.asarray(b),
+                                     compute_dtype=jnp.float32, remat=False)
+    return params, loss_fn, pipe.batch
+
+
+def gnn_setup(arch, cfg, args):
+    import dataclasses
+    arch = dataclasses.replace(arch, model_cfg=cfg)
+    init_fn, _ = _gnn_init_and_axes(arch)
+    params = init_fn(jax.random.PRNGKey(args.seed))
+    loss1 = _gnn_single_loss(arch, remat=False)
+    if arch.gnn_kind == "gin":
+        g = gen.rmat(9, 8, seed=args.seed)
+        fb = full_graph_batch(g, cfg.d_in, cfg.n_classes, seed=args.seed)
+        batch = {"node_feat": jnp.asarray(fb.node_feat),
+                 "senders": jnp.asarray(fb.senders),
+                 "receivers": jnp.asarray(fb.receivers),
+                 "labels": jnp.asarray(fb.labels),
+                 "train_mask": jnp.asarray(fb.train_mask)}
+        return params, loss1, lambda step: batch
+    # molecular batches, regenerated per step (deterministic in step)
+    def batch_fn(step):
+        mb = molecule_batch(args.batch, 12, 32,
+                            n_species=getattr(cfg, "n_species", 8),
+                            seed=args.seed * 100_003 + step)
+        b = {"species": jnp.asarray(mb.species), "pos": jnp.asarray(mb.pos),
+             "senders": jnp.asarray(mb.senders),
+             "receivers": jnp.asarray(mb.receivers),
+             "graph_ids": jnp.asarray(mb.graph_ids),
+             "targets": jnp.asarray(mb.targets)}
+        if arch.gnn_kind == "dimenet":
+            b["t_kj"] = jnp.asarray(mb.t_kj)
+            b["t_ji"] = jnp.asarray(mb.t_ji)
+        if arch.gnn_kind == "egnn":
+            d_in = cfg.d_in
+            feat = jax.nn.one_hot(mb.species % d_in, d_in)
+            b["node_feat"] = feat
+            del b["species"]
+        return b
+
+    def loss_graphids(p, b):
+        return loss1(p, b)
+
+    return params, loss_graphids, batch_fn
+
+
+def rec_setup(arch, cfg, args):
+    params = FM.init_fm(jax.random.PRNGKey(args.seed), cfg)
+
+    def batch_fn(step):
+        ids, labels = recsys_batch(args.batch, cfg.n_fields,
+                                   cfg.rows_per_field,
+                                   seed=args.seed * 7 + step)
+        return {"ids": jnp.asarray(ids), "labels": jnp.asarray(labels)}
+
+    loss_fn = lambda p, b: FM.fm_loss(p, cfg, b["ids"], b["labels"])
+    return params, loss_fn, batch_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a failure at this step (chaos drill)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    cfg = arch.smoke_cfg if args.smoke else arch.model_cfg
+    setup = {"lm": lm_setup, "gnn": gnn_setup, "recsys": rec_setup}
+    params, loss_fn, batch_fn = setup[arch.family](arch, cfg, args)
+    n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+    print(f"[train] arch={arch.id} family={arch.family} params={n_params:,}")
+
+    tcfg = TrainConfig(steps=args.steps, peak_lr=args.lr,
+                       warmup=max(2, args.steps // 20),
+                       log_every=max(1, args.steps // 10),
+                       ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir)
+    injector = (FailureInjector((args.fail_at,))
+                if args.fail_at >= 0 else None)
+
+    def body(resume):
+        return train(loss_fn, params, batch_fn, tcfg, injector=injector)
+
+    if injector is not None:
+        mgr = RestartManager(max_restarts=3)
+        result = mgr.run(body)
+        print(f"[train] survived {mgr.stats.restarts} injected failure(s)")
+    else:
+        result = body(0)
+    first, last = result.losses[0][1], result.losses[-1][1]
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"(straggler timeouts: {result.straggler_timeouts})")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .layers import LMConfig, MoEConfig
+from . import transformer
+
+__all__ = ["LMConfig", "MoEConfig", "transformer"]

@@ -1,0 +1,477 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/MLA attention, SwiGLU,
+capacity-based MoE.  Pure-functional: ``init_*`` builds param pytrees,
+``apply_*`` consumes them.  A parallel ``*_axes`` function returns the
+logical-axis tree used by the sharding rule engine (distributed/sharding.py).
+
+Logical axis names: "embed", "heads", "kv_heads", "head_dim", "q_lora",
+"kv_lora", "ffn", "vocab", "experts" — mapped to mesh axes per-arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# config dataclasses
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    router: str = "softmax"          # "softmax" | "sigmoid_ds3"
+    capacity_factor: float = 1.25
+    routed_scale: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attn: str = "gqa"                # "gqa" | "mla"
+    qk_norm: bool = False
+    window: int | None = None        # sliding-window size (all local layers)
+    local_global: tuple[int, int] = (0, 1)   # (n_local, n_global) pattern
+    rope_theta: float = 10_000.0
+    moe: MoEConfig | None = None
+    n_dense_layers: int = 0          # leading dense-FFN layers (DeepSeek: 3)
+    dense_d_ff: int | None = None    # d_ff of those dense layers
+    mtp: bool = False                # DeepSeek multi-token prediction head
+    tie_embeddings: bool = True
+    # MLA dims (DeepSeek-V3 defaults)
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    norm_eps: float = 1e-6
+    # §Perf: mixed-precision attention — bf16 QK^T/PV matmuls with fp32
+    # accumulation + fp32 softmax (MXU-native), instead of casting q/k/v to
+    # fp32 before the matmuls.  Halves attention HBM traffic; numerics
+    # validated in tests (logits agree to ~1e-2 relative at smoke scale).
+    mp_attn: bool = False
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    def layer_window(self, layer: int) -> int | None:
+        """Effective attention window of a layer (None = global)."""
+        n_loc, n_glob = self.local_global
+        if self.window is None:
+            return None
+        if n_loc == 0:
+            return self.window  # uniform SWA
+        period = n_loc + n_glob
+        return self.window if (layer % period) < n_loc else None
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(d: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x (..., S, H, D), positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core (GQA-aware, window + causal + explicit kv positions)
+# ---------------------------------------------------------------------------
+Q_CHUNK = 1024  # query-chunk size for long-sequence attention
+
+# Analysis mode: XLA's cost_analysis counts a while-loop body ONCE, so for
+# roofline extraction the dry-run unrolls every internal loop (layer scans,
+# q-chunk maps, CE chunk maps).  Trace-time flag; see configs/families.py.
+_UNROLL = False
+
+
+def set_unroll(v: bool):
+    global _UNROLL
+    _UNROLL = bool(v)
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+def _attend_dense(q, k, v, q_pos, k_pos, window, k_valid, mixed=False):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    if mixed:
+        # bf16 operands, fp32 accumulation (MXU-native): no fp32 q/k/v
+        # copies and no fp32 probability tensor in HBM
+        qf = (q * (1.0 / math.sqrt(D)).__float__()).reshape(
+            B, Sq, Hkv, g, D)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k,
+                            preferred_element_type=jnp.float32)
+    else:
+        qf = (q.astype(jnp.float32) / math.sqrt(D)).reshape(
+            B, Sq, Hkv, g, D)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                            k.astype(jnp.float32))
+    mask = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        win = jnp.asarray(window, dtype=jnp.int32)
+        mask = mask & ((win <= 0)
+                       | (q_pos[:, :, None] - k_pos[:, None, :] < win))
+    if k_valid is not None:
+        mask = mask & k_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    if mixed:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, -1).astype(q.dtype)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+           window, k_valid: jnp.ndarray | None = None,
+           q_chunk: int = Q_CHUNK, mixed: bool = False) -> jnp.ndarray:
+    """q (B, Sq, Hq, D), k/v (B, Sk, Hkv, D[v]), positions int32.
+
+    Causal mask from positions; ``window`` is an int or traced int32 scalar
+    (<= 0 means global, so per-layer windows can ride through lax.scan);
+    optional kv-slot validity (rotating caches).  GQA: Hq % Hkv == 0.
+
+    Long queries are processed in chunks of ``q_chunk`` (exact blockwise
+    attention: each chunk does its full softmax over K) so the score tensor
+    never exceeds B·H·q_chunk·Sk — mandatory for the 32k-prefill shapes.
+    """
+    B, Sq, Hq, D = q.shape
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return _attend_dense(q, k, v, q_pos, k_pos, window, k_valid, mixed)
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    def one(args):
+        qc, qpc = args
+        return _attend_dense(qc, k, v, qpc, k_pos, window, k_valid, mixed)
+
+    if _UNROLL:
+        out = jnp.stack([one((qs[i], qp[i])) for i in range(n)])
+    else:
+        out = jax.lax.map(one, (qs, qp))          # (n, B, qc, Hq, Dv)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: LMConfig):
+    ks = jax.random.split(key, 6)
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p = {
+        "wq": dense_init(ks[0], (d, H, Dh), d),
+        "wk": dense_init(ks[1], (d, Hkv, Dh), d),
+        "wv": dense_init(ks[2], (d, Hkv, Dh), d),
+        "wo": dense_init(ks[3], (H, Dh, d), H * Dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,))
+        p["k_norm"] = jnp.zeros((Dh,))
+    return p
+
+
+def gqa_axes(cfg: LMConfig):
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return a
+
+
+def apply_gqa(p, cfg: LMConfig, x, q_pos, *, window, kv_cache=None,
+              capture_kv: bool = False):
+    """x (B, S, d). If kv_cache is a callback (decode): it receives the new
+    (k, v), returns the effective (k, v, k_pos, k_valid, new_cache).  With
+    ``capture_kv`` (prefill): self-attention, and the raw (k, v) is returned
+    as the cache payload."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    if kv_cache is not None:
+        ck, cv, k_pos, k_valid, new_cache = kv_cache(k, v)
+        out = attend(q, ck, cv, q_pos, k_pos, window, k_valid,
+                     mixed=cfg.mp_attn)
+    else:
+        new_cache = (k, v) if capture_kv else None
+        out = attend(q, k, v, q_pos, q_pos, window, mixed=cfg.mp_attn)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3): low-rank Q, compressed KV latent + shared
+# RoPE key.  The latent (c_kv, k_rope) is what decode caches.
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: LMConfig):
+    ks = jax.random.split(key, 10)
+    d, H = cfg.d_model, cfg.n_heads
+    qk_d = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora_rank), d),
+        "q_a_norm": jnp.zeros((cfg.q_lora_rank,)),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, H, qk_d), cfg.q_lora_rank),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), d),
+        "kv_a_norm": jnp.zeros((cfg.kv_lora_rank,)),
+        "wk_b": dense_init(ks[3], (cfg.kv_lora_rank, H, cfg.qk_nope_dim),
+                           cfg.kv_lora_rank),
+        "wv_b": dense_init(ks[4], (cfg.kv_lora_rank, H, cfg.v_head_dim),
+                           cfg.kv_lora_rank),
+        "wo": dense_init(ks[5], (H, cfg.v_head_dim, d), H * cfg.v_head_dim),
+    }
+    return p
+
+
+def mla_axes(cfg: LMConfig):
+    return {
+        "wq_a": ("embed", "q_lora"),
+        "q_a_norm": (None,),
+        "wq_b": ("q_lora", "heads", "head_dim"),
+        "wkv_a": ("embed", "kv_lora"),
+        "kv_a_norm": (None,),
+        "wk_b": ("kv_lora", "heads", "head_dim"),
+        "wv_b": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def apply_mla(p, cfg: LMConfig, x, q_pos, *, window=None, kv_cache=None,
+              capture_kv: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    # queries
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(x.dtype)),
+                  p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # compressed kv latent
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], q_pos, cfg.rope_theta)  # (B,S,1,r)
+
+    if kv_cache is not None:
+        c_kv, k_rope, k_pos, k_valid, new_cache = kv_cache(c_kv, k_rope)
+    else:
+        k_pos, k_valid = q_pos, None
+        new_cache = (c_kv, k_rope) if capture_kv else None
+    # expand latent to per-head keys/values (decode recomputes from latent —
+    # the MLA memory win; matmul absorption is a §Perf item)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(x.dtype))
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], cfg.qk_rope_dim))],
+        axis=-1)
+    out = attend(q_full, k_full, v, q_pos, k_pos, window, k_valid,
+                 mixed=cfg.mp_attn)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), d_model),
+        "w_up": dense_init(ks[1], (d_model, d_ff), d_model),
+        "w_down": dense_init(ks[2], (d_ff, d_model), d_ff),
+    }
+
+
+def mlp_axes():
+    return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+            "w_down": ("ffn", "embed")}
+
+
+def apply_mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# capacity-based MoE (GShard-style dispatch; experts shard over "experts")
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: LMConfig):
+    mc = cfg.moe
+    ks = jax.random.split(key, 5)
+    d, E, F = cfg.d_model, mc.n_experts, mc.d_expert
+    p = {
+        "router": dense_init(ks[0], (d, E), d),
+        "w_gate": dense_init(ks[1], (E, d, F), d),
+        "w_up": dense_init(ks[2], (E, d, F), d),
+        "w_down": dense_init(ks[3], (E, F, d), F),
+    }
+    if mc.router == "sigmoid_ds3":
+        # aux-loss-free load-balancing bias (updated outside grad)
+        p["router_bias"] = jnp.zeros((E,))
+    if mc.n_shared:
+        p["shared"] = init_mlp(ks[4], d, F * mc.n_shared)
+    return p
+
+
+def moe_axes(cfg: LMConfig):
+    a = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "ffn"),
+        "w_up": ("experts", "embed", "ffn"),
+        "w_down": ("experts", "ffn", "embed"),
+    }
+    if cfg.moe.router == "sigmoid_ds3":
+        a["router_bias"] = (None,)
+    if cfg.moe.n_shared:
+        a["shared"] = mlp_axes()
+    return a
+
+
+def apply_moe(p, cfg: LMConfig, x, *, n_groups: int = 1,
+              moe_spec: tuple | None = None):
+    """x (B, S, d) -> (B, S, d).  GShard-style capacity dispatch with
+    *groups*: tokens are reshaped to (G, T/G) and each group routes into its
+    own per-expert capacity buffer, so the cumsum that assigns buffer slots
+    is local to a group.  With G sharded over the data axes and experts over
+    the model axis (EP), dispatch/combine lower to all-to-alls instead of a
+    global serial cumsum.  ``n_groups`` must divide B*S (use the DP shard
+    count at scale; 1 on CPU smoke tests)."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    G = n_groups
+    assert T % G == 0, (T, G)
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype)
+                        ).astype(jnp.float32)
+    if mc.router == "sigmoid_ds3":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, None, :]
+        _, top_idx = jax.lax.top_k(sel, K)                 # bias affects choice
+        top_raw = jnp.take_along_axis(scores, top_idx, axis=2)
+        top_w = top_raw / (top_raw.sum(axis=2, keepdims=True) + 1e-9)
+        top_w = top_w * mc.routed_scale
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_idx = jax.lax.top_k(probs, K)
+        top_w = top_w / (top_w.sum(axis=2, keepdims=True) + 1e-9)
+
+    C = max(1, int(math.ceil(Tg * K / E * mc.capacity_factor)))
+    # slot of each (token, k) inside its expert's per-group buffer
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)       # (G, Tg, K, E)
+    pos_in_e = (jnp.cumsum(onehot.reshape(G, Tg * K, E), axis=1) - 1
+                ).reshape(G, Tg, K, E)
+    pos = (pos_in_e * onehot).sum(-1)                          # (G, Tg, K)
+    keep = pos < C
+    flat_e = jnp.where(keep, top_idx, E).reshape(G, Tg * K)
+    flat_pos = jnp.where(keep, pos, 0).reshape(G, Tg * K)
+    slot = flat_e * C + flat_pos                               # (G, Tg*K)
+    tok_ids = jnp.broadcast_to(
+        jnp.arange(Tg, dtype=jnp.int32)[:, None], (Tg, K)).reshape(Tg * K)
+    token_of_slot = jnp.zeros((G, E * C + C), jnp.int32).at[
+        jnp.arange(G)[:, None], slot].set(tok_ids[None, :], mode="drop")
+    slot_used = jnp.zeros((G, E * C + C), jnp.bool_).at[
+        jnp.arange(G)[:, None], slot].set(keep.reshape(G, Tg * K), mode="drop")
+    token_of_slot = token_of_slot[:, :E * C].reshape(G, E, C)
+    slot_used = slot_used[:, :E * C].reshape(G, E, C)
+
+    xe = jnp.take_along_axis(
+        xt[:, None, :, :],
+        token_of_slot[..., None].astype(jnp.int32), axis=2)
+    xe = xe * slot_used[..., None].astype(x.dtype)             # (G, E, C, d)
+    if moe_spec is not None:
+        from jax.sharding import PartitionSpec as _P
+        g_ax, e_ax = moe_spec
+        xe = jax.lax.with_sharding_constraint(
+            xe, _P(g_ax, e_ax, None, None))
+    g_ = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    u_ = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g_) * u_
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    if moe_spec is not None:
+        ye = jax.lax.with_sharding_constraint(
+            ye, _P(g_ax, e_ax, None, None))
+
+    # combine: scatter-add expert outputs back to tokens.  The transpose
+    # of the dispatch gather: with ye sharded on E (EP) and tokens on DP,
+    # a scatter-add partitions into LOCAL per-expert partial sums + one
+    # all-reduce of (G, Tg, d) over the EP axis — 16x fewer bytes than the
+    # take_along_axis formulation, whose E*C-flattened operand forced XLA
+    # to all-gather every expert's outputs to every device (§Perf log).
+    w_k = jnp.where(keep, top_w, 0.0).astype(x.dtype)          # (G, Tg, K)
+    g_idx = jnp.arange(G, dtype=jnp.int32)[:, None]
+    w_slot = jnp.zeros((G, E * C + C), x.dtype).at[
+        g_idx, slot].set(w_k.reshape(G, Tg * K), mode="drop")
+    w_slot = w_slot[:, :E * C].reshape(G, E, C)
+    contrib = ye * w_slot[..., None]                           # (G, E, C, d)
+    yt = jnp.zeros((G, Tg, d), x.dtype).at[
+        jnp.arange(G, dtype=jnp.int32)[:, None, None],
+        token_of_slot, :].add(contrib)                         # (G, Tg, d)
+
+    if mc.n_shared:
+        yt = yt + apply_mlp(p["shared"], xt)
+    return yt.reshape(B, S, d)

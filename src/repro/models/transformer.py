@@ -1,0 +1,461 @@
+"""Transformer LM supporting the five assigned LM architectures.
+
+Features: GQA (qk-norm optional), MLA (DeepSeek), sliding-window + Gemma
+local:global attention patterns, dense SwiGLU or MoE FFN (with shared
+experts / DS3 sigmoid router), optional MTP head, tied embeddings.
+
+Training/prefill path scans over *stacked* layer groups (contiguous layers
+with identical structure) to keep the HLO small — essential for lowering the
+61-layer DeepSeek config.  The decode path unrolls layers in Python so each
+layer can own a heterogeneous KV cache (full-length for global layers,
+window-length rotating for local layers, latent for MLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (LMConfig, MoEConfig, apply_gqa, apply_mla, apply_mlp,
+                     apply_moe, dense_init, gqa_axes, init_gqa, init_mla,
+                     init_mlp, init_moe, mla_axes, mlp_axes, moe_axes,
+                     rms_norm, unroll_enabled)
+
+# Optional activation sharding constraint applied right after the embedding
+# lookup.  With FSDP-sharded embeddings (DeepSeek: embed dim over "data")
+# the lookup output inherits a d-sharded layout that conflicts with the
+# batch sharding and sends the SPMD partitioner into involuntary full
+# rematerialisation (observed: 15+ min compiles).  families.py sets this to
+# P(dp, None, None) for the dry-run; None = no constraint (smoke tests).
+_ACT_SPEC = None
+
+
+def set_act_spec(spec):
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def _constrain_act(x):
+    if _ACT_SPEC is not None:
+        x = jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    count: int
+    is_moe: bool
+
+
+def layer_groups(cfg: LMConfig) -> list[GroupSpec]:
+    if cfg.is_moe and cfg.n_dense_layers > 0:
+        return [GroupSpec(cfg.n_dense_layers, False),
+                GroupSpec(cfg.n_layers - cfg.n_dense_layers, True)]
+    return [GroupSpec(cfg.n_layers, cfg.is_moe)]
+
+
+def _window_code(cfg: LMConfig, layer: int) -> int:
+    w = cfg.layer_window(layer)
+    return 0 if w is None else w  # 0 = global
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+def init_layer(key, cfg: LMConfig, is_moe: bool):
+    k1, k2 = jax.random.split(key)
+    attn = init_mla(k1, cfg) if cfg.attn == "mla" else init_gqa(k1, cfg)
+    if is_moe:
+        ffn = init_moe(k2, cfg)
+    else:
+        d_ff = cfg.dense_d_ff if (cfg.is_moe and cfg.dense_d_ff) else cfg.d_ff
+        ffn = init_mlp(k2, cfg.d_model, d_ff)
+    return {"attn": attn, "ffn": ffn,
+            "ln1": jnp.zeros((cfg.d_model,)), "ln2": jnp.zeros((cfg.d_model,))}
+
+
+def layer_axes(cfg: LMConfig, is_moe: bool):
+    attn = mla_axes(cfg) if cfg.attn == "mla" else gqa_axes(cfg)
+    ffn = moe_axes(cfg) if is_moe else mlp_axes()
+    return {"attn": attn, "ffn": ffn, "ln1": (None,), "ln2": (None,)}
+
+
+def apply_layer(p, cfg: LMConfig, x, q_pos, window, *, is_moe: bool,
+                kv_cache=None, moe_groups: int = 1, capture_kv: bool = False,
+                moe_spec: tuple | None = None):
+    attn_fn = apply_mla if cfg.attn == "mla" else apply_gqa
+    h, new_cache = attn_fn(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps),
+                           q_pos, window=window, kv_cache=kv_cache,
+                           capture_kv=capture_kv)
+    x = x + h
+    z = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if is_moe:
+        x = x + apply_moe(p["ffn"], cfg, z, n_groups=moe_groups,
+                          moe_spec=moe_spec)
+    else:
+        x = x + apply_mlp(p["ffn"], z)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: LMConfig):
+    keys = jax.random.split(key, 4 + len(layer_groups(cfg)))
+    params: dict[str, Any] = {
+        "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab),
+                                    cfg.d_model)
+    blocks = []
+    for gi, grp in enumerate(layer_groups(cfg)):
+        gkeys = jax.random.split(keys[2 + gi], grp.count)
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, grp.is_moe))(gkeys)
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    if cfg.mtp:
+        k_m = jax.random.split(keys[-1], 3)
+        params["mtp"] = {
+            "proj": dense_init(k_m[0], (2 * cfg.d_model, cfg.d_model),
+                               2 * cfg.d_model),
+            "norm_h": jnp.zeros((cfg.d_model,)),
+            "norm_e": jnp.zeros((cfg.d_model,)),
+            "block": init_layer(k_m[1], cfg, False),
+        }
+    return params
+
+
+def lm_axes(cfg: LMConfig):
+    axes: dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["head"] = ("embed", "vocab")
+    blocks = []
+    for grp in layer_groups(cfg):
+        la = layer_axes(cfg, grp.is_moe)
+        stacked = jax.tree_util.tree_map(
+            lambda t: ("layers",) + tuple(t), la,
+            is_leaf=lambda t: isinstance(t, tuple))
+        blocks.append(stacked)
+    axes["blocks"] = blocks
+    if cfg.mtp:
+        axes["mtp"] = {
+            "proj": ("embed", None),
+            "norm_h": (None,), "norm_e": (None,),
+            "block": layer_axes(cfg, False),
+        }
+    return axes
+
+
+def _scan_group(stacked, cfg: LMConfig, x, q_pos, windows, is_moe: bool,
+                moe_groups: int, remat: bool, moe_spec=None):
+    def body(x, per_layer):
+        lp, win = per_layer
+        if remat:
+            fn = jax.checkpoint(
+                lambda p_, x_, qp_, w_: apply_layer(
+                    p_, cfg, x_, qp_, w_, is_moe=is_moe,
+                    moe_groups=moe_groups, moe_spec=moe_spec)[0])
+            return fn(lp, x, q_pos, win), None
+        y, _ = apply_layer(lp, cfg, x, q_pos, win, is_moe=is_moe,
+                           moe_groups=moe_groups, moe_spec=moe_spec)
+        return y, None
+    x, _ = jax.lax.scan(body, x, (stacked, windows),
+                        unroll=True if unroll_enabled() else 1)
+    return x
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray, *,
+            compute_dtype=jnp.bfloat16, moe_groups: int = 1,
+            remat: bool = True, skip_logits: bool = False,
+            moe_spec: tuple | None = None) -> jnp.ndarray:
+    """tokens (B, S) int32 -> (logits (B, S, V) float32 | None, h)."""
+    B, S = tokens.shape
+    x = _constrain_act(params["embed"][tokens].astype(compute_dtype))
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    layer0 = 0
+    for grp, stacked in zip(layer_groups(cfg), params["blocks"]):
+        wins = jnp.asarray([_window_code(cfg, layer0 + i)
+                            for i in range(grp.count)], dtype=jnp.int32)
+        x = _scan_group(stacked, cfg, x, q_pos, wins, grp.is_moe, moe_groups,
+                        remat, moe_spec=moe_spec)
+        layer0 += grp.count
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if skip_logits:
+        return None, x
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(compute_dtype))
+    return logits.astype(jnp.float32), x
+
+
+def mtp_hidden(params, cfg: LMConfig, h: jnp.ndarray, tokens: jnp.ndarray,
+               *, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """DeepSeek-V3 MTP trunk: hidden states predicting token t+2 from
+    backbone state at t + embedding of token t+1.  Returns (B, S-1, d)
+    (final-normed); the shared head/streaming CE handles the logits."""
+    mp = params["mtp"]
+    B, S, d = h.shape
+    h_in = rms_norm(_constrain_act(h[:, :-1]), mp["norm_h"], cfg.norm_eps)
+    e_next = _constrain_act(
+        params["embed"][tokens[:, 1:]].astype(compute_dtype))
+    e_in = rms_norm(e_next, mp["norm_e"], cfg.norm_eps)
+    z = jnp.concatenate([h_in, e_in], axis=-1)
+    z = _constrain_act(
+        jnp.einsum("bsd,dk->bsk", z, mp["proj"].astype(compute_dtype)))
+    q_pos = jnp.broadcast_to(
+        jnp.arange(S - 1, dtype=jnp.int32)[None, :], (B, S - 1))
+    z, _ = apply_layer(mp["block"], cfg, z, q_pos, jnp.int32(0),
+                       is_moe=False)
+    return rms_norm(z, params["final_norm"], cfg.norm_eps)
+
+
+CE_CHUNK = 512  # sequence-chunk size for streaming cross-entropy
+
+
+def _chunked_nll(x: jnp.ndarray, head: jnp.ndarray, targets: jnp.ndarray,
+                 chunk: int = CE_CHUNK) -> jnp.ndarray:
+    """Mean next-token NLL without materialising (B, S, V) logits: the
+    head matmul + log-softmax + gather run per sequence chunk under
+    jax.checkpoint, so peak memory is one chunk's logits (big-vocab
+    essential: gemma3's V=262144 would otherwise dominate)."""
+    B, S, d = x.shape
+
+    def one(args):
+        xc, tc = args
+        logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return nll.sum()
+
+    one = jax.checkpoint(one)
+    if S <= chunk:
+        return one((x, targets)) / (B * S)
+    n = S // chunk
+    main = n * chunk
+    xs = x[:, :main].reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets[:, :main].reshape(B, n, chunk).transpose(1, 0, 2)
+    if unroll_enabled():
+        total = sum(one((xs[i], ts[i])) for i in range(n))
+    else:
+        total = jax.lax.map(one, (xs, ts)).sum()
+    if S > main:  # remainder chunk (e.g. the MTP trunk's S-2 positions)
+        total = total + one((x[:, main:], targets[:, main:]))
+    return total / (B * S)
+
+
+def lm_loss(params, cfg: LMConfig, tokens: jnp.ndarray, *,
+            compute_dtype=jnp.bfloat16, moe_groups: int = 1,
+            remat: bool = True, mtp_weight: float = 0.3,
+            moe_spec: tuple | None = None) -> jnp.ndarray:
+    """Next-token cross-entropy (+ optional MTP auxiliary loss), streaming
+    over sequence chunks so full-vocab logits never materialise."""
+    _, h = forward(params, cfg, tokens, compute_dtype=compute_dtype,
+                   moe_groups=moe_groups, remat=remat, skip_logits=True,
+                   moe_spec=moe_spec)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"]
+            ).astype(compute_dtype)
+    loss = _chunked_nll(h[:, :-1], head, tokens[:, 1:])
+    if cfg.mtp:
+        hm = mtp_hidden(params, cfg, h, tokens, compute_dtype=compute_dtype)
+        loss = loss + mtp_weight * _chunked_nll(hm[:, :-1], head,
+                                                tokens[:, 2:])
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: heterogeneous per-layer KV caches
+# ---------------------------------------------------------------------------
+def make_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> list[dict]:
+    """One cache dict per layer.  Local layers get a rotating window cache;
+    MLA layers cache the compressed latent (the paper-exact memory win)."""
+    caches = []
+    for layer in range(cfg.n_layers):
+        w = cfg.layer_window(layer)
+        L = max_len if w is None else min(max_len, w)
+        if cfg.attn == "mla":
+            caches.append({
+                "c_kv": jnp.zeros((batch, L, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, L, 1, cfg.qk_rope_dim), dtype),
+            })
+        else:
+            caches.append({
+                "k": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+                "v": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.d_head), dtype),
+            })
+    return caches
+
+
+def _slot_positions(pos: jnp.ndarray, L: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Absolute position stored in each rotating slot, per example:
+    pos (B,) -> k_pos (B, L) where slot i holds p = pos - ((pos - i) mod L)."""
+    i = jnp.arange(L, dtype=jnp.int32)[None, :]
+    p = pos[:, None] - ((pos[:, None] - i) % L)
+    return p, p >= 0
+
+
+def cache_len(cache: dict) -> int:
+    """Static cache length, derived from array shape (never traced)."""
+    name = "c_kv" if "c_kv" in cache else "k"
+    return cache[name].shape[1]
+
+
+def _cache_cb(cache: dict, pos: jnp.ndarray, batch: int):
+    """pos (B,) int32: per-slot decode positions (continuous batching)."""
+    L = cache_len(cache)
+    wi = pos % L
+    b_idx = jnp.arange(batch, dtype=jnp.int32)
+
+    def cb(*new):
+        names = ("c_kv", "k_rope") if "c_kv" in cache else ("k", "v")
+        new_cache = {}
+        outs = []
+        for name, arr in zip(names, new):
+            upd = cache[name].at[b_idx, wi].set(
+                arr[:, 0].astype(cache[name].dtype))
+            new_cache[name] = upd
+            outs.append(upd)
+        k_pos, valid = _slot_positions(pos, L)
+        return (*outs, k_pos, valid, new_cache)
+
+    return cb
+
+
+def _layer_param(params, cfg: LMConfig, layer: int):
+    """Extract layer ``layer``'s params from the stacked groups."""
+    g0 = 0
+    for grp, stacked in zip(layer_groups(cfg), params["blocks"]):
+        if layer < g0 + grp.count:
+            idx = layer - g0
+            return jax.tree_util.tree_map(lambda a: a[idx], stacked), grp.is_moe
+        g0 += grp.count
+    raise IndexError(layer)
+
+
+def decode_step(params, cfg: LMConfig, caches: list[dict],
+                tokens: jnp.ndarray, pos: jnp.ndarray, *,
+                compute_dtype=jnp.bfloat16):
+    """One decode step: tokens (B, 1) int32, pos scalar or (B,) int32
+    (0-based index of each slot's new token — per-slot positions enable
+    continuous batching).  Returns (logits (B, V), new caches)."""
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = _constrain_act(params["embed"][tokens].astype(compute_dtype))
+    q_pos = pos[:, None]
+    new_caches = []
+    if _uniform_cache(cfg):
+        # scan over stacked layers + stacked caches (uniform shapes);
+        # keeps the decode HLO one-layer-sized for the 61-layer configs
+        layer0 = 0
+        for grp, stacked in zip(layer_groups(cfg), params["blocks"]):
+            wins = jnp.asarray([_window_code(cfg, layer0 + i)
+                                for i in range(grp.count)], dtype=jnp.int32)
+            cache_stack = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *caches[layer0:layer0 + grp.count])
+
+            def body(x, per, _moe=grp.is_moe):
+                lp, win, lc = per
+                cb = _cache_cb(lc, pos, B)
+                y, nc = apply_layer(lp, cfg, x, q_pos, win, is_moe=_moe,
+                                    kv_cache=cb, moe_groups=1)
+                return y, nc
+
+            x, new_stack = jax.lax.scan(body, x, (stacked, wins, cache_stack))
+            for i in range(grp.count):
+                new_caches.append(jax.tree_util.tree_map(
+                    lambda a, _i=i: a[_i], new_stack))
+            layer0 += grp.count
+    else:
+        for layer in range(cfg.n_layers):
+            lp, is_moe = _layer_param(params, cfg, layer)
+            w = cfg.layer_window(layer)
+            win = jnp.int32(0 if w is None else w)
+            cb = _cache_cb(caches[layer], pos, B)
+            x, nc = apply_layer(lp, cfg, x, q_pos, win, is_moe=is_moe,
+                                kv_cache=cb, moe_groups=1)
+            new_caches.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(compute_dtype))
+    return logits[:, 0].astype(jnp.float32), new_caches
+
+
+def _uniform_cache(cfg: LMConfig) -> bool:
+    """True when every layer's cache has identical shape (no mixed
+    local/global pattern) — the scan-prefill eligibility condition."""
+    wins = {cfg.layer_window(i) for i in range(cfg.n_layers)}
+    return len(wins) == 1
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray, *, max_len: int = 0,
+            compute_dtype=jnp.bfloat16, moe_groups: int = 1):
+    """Run the prompt through the model once, capturing per-layer caches
+    (full attention over the prompt; only each layer's cache-length tail is
+    retained, in rotating-slot order).  ``max_len`` (>= S) sizes the caches
+    for subsequent decode.  Returns (last-position logits (B, V), caches).
+
+    When every layer shares one cache shape, the layer loop runs as a
+    lax.scan over the stacked groups (KV capture via scan outputs) — the
+    python-unrolled 61-layer DeepSeek prefill graph sent the 512-device
+    SPMD partitioner into hour-long compiles; the scan version keeps the
+    HLO one-layer-sized.  Mixed local/global archs (gemma3) keep the
+    unrolled path (heterogeneous cache shapes cannot stack)."""
+    B, S = tokens.shape
+    max_len = max(max_len, S)
+    x = _constrain_act(params["embed"][tokens].astype(compute_dtype))
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    caches = make_cache(cfg, B, max_len, dtype=compute_dtype)
+    new_caches = []
+    if _uniform_cache(cfg):
+        layer0 = 0
+        for grp, stacked in zip(layer_groups(cfg), params["blocks"]):
+            wins = jnp.asarray([_window_code(cfg, layer0 + i)
+                                for i in range(grp.count)], dtype=jnp.int32)
+
+            def body(x, per_layer, _moe=grp.is_moe):
+                lp, win = per_layer
+                y, kv = apply_layer(lp, cfg, x, q_pos, win, is_moe=_moe,
+                                    capture_kv=True, moe_groups=moe_groups)
+                return y, kv
+
+            x, kv_stack = jax.lax.scan(body, x, (stacked, wins))
+            for i in range(grp.count):
+                kv = jax.tree_util.tree_map(lambda a, _i=i: a[_i], kv_stack)
+                new_caches.append(_fill_cache(caches[layer0 + i], kv, S))
+            layer0 += grp.count
+    else:
+        for layer in range(cfg.n_layers):
+            lp, is_moe = _layer_param(params, cfg, layer)
+            w = cfg.layer_window(layer)
+            win = jnp.int32(0 if w is None else w)
+            x, kv = apply_layer(lp, cfg, x, q_pos, win, is_moe=is_moe,
+                                capture_kv=True, moe_groups=moe_groups)
+            new_caches.append(_fill_cache(caches[layer], kv, S))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head.astype(compute_dtype))
+    return logits[:, 0].astype(jnp.float32), new_caches
+
+
+def _fill_cache(cache: dict, kv: tuple, S: int) -> dict:
+    """Write the last min(S, L) prompt positions into rotating-slot order
+    (slot of absolute position p is p % L)."""
+    L = cache_len(cache)
+    T = min(S, L)
+    start = S - T
+    slots = ((start + jnp.arange(T, dtype=jnp.int32)) % L)
+    names = ("c_kv", "k_rope") if "c_kv" in cache else ("k", "v")
+    out = {}
+    for name, arr in zip(names, kv):
+        tail = arr[:, -T:].astype(cache[name].dtype)
+        out[name] = cache[name].at[:, slots].set(tail)
+    return out

@@ -1,0 +1,129 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of ``max_batch`` slots decodes in lock-step (one jitted decode
+step per iteration, per-slot positions); finished slots are refilled from
+the request queue by prefetching the new prompt with a B=1 prefill and
+scattering its cache into the pool (the classic slot-swap continuous
+batching scheme — paged KV is unnecessary at this scale because the pool is
+preallocated at ``max_len``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import LMConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1             # -1: never stops early
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: list
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: LMConfig, *, max_batch: int = 4,
+                 max_len: int = 256, prompt_len: int = 32,
+                 compute_dtype=jnp.float32, greedy: bool = True,
+                 seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.dtype = compute_dtype
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.caches = T.make_cache(cfg, max_batch, max_len, dtype=compute_dtype)
+        self.pos = np.zeros(max_batch, dtype=np.int32)
+        self.active = np.zeros(max_batch, dtype=bool)
+        self.last_tok = np.zeros(max_batch, dtype=np.int32)
+        self.budget = np.zeros(max_batch, dtype=np.int32)
+        self.eos = np.full(max_batch, -1, dtype=np.int32)
+        self.out: list[list | None] = [None] * max_batch
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos,
+                                               compute_dtype=compute_dtype))
+        self._prefill = jax.jit(
+            lambda p, t: T.prefill(p, cfg, t, max_len=max_len,
+                                   compute_dtype=compute_dtype))
+
+    # ------------------------------------------------------------------
+    def _insert(self, slot: int, req: Request):
+        prompt = np.asarray(req.prompt, dtype=np.int32)
+        S = self.prompt_len
+        if len(prompt) > S:
+            prompt = prompt[-S:]
+        pad = S - len(prompt)
+        # left-pad by repeating the first token (harmless for synthetic LM)
+        padded = np.concatenate([np.full(pad, prompt[0], np.int32), prompt])
+        logits, pc = self._prefill(self.params, jnp.asarray(padded[None, :]))
+        nxt = int(jnp.argmax(logits[0]))
+        # scatter the single-request cache into the pool at `slot`
+        # (prefill used the same max_len, so cache lengths line up)
+        for layer in range(self.cfg.n_layers):
+            pool, one = self.caches[layer], pc[layer]
+            for name in pool:
+                assert pool[name].shape[1:] == one[name].shape[1:]
+                pool[name] = pool[name].at[slot].set(one[name][0])
+        self.pos[slot] = S
+        self.active[slot] = True
+        self.last_tok[slot] = nxt
+        self.budget[slot] = req.max_new_tokens - 1
+        self.eos[slot] = req.eos_id
+        self.out[slot] = list(prompt) + [nxt]
+
+    def run(self, requests: Sequence[Request]) -> list[Completion]:
+        queue = list(requests)
+        results: dict[int, Completion] = {}
+        owner: dict[int, int] = {}
+        next_rid = 0
+        done = 0
+        while done < len(requests):
+            # refill free slots
+            for slot in range(self.max_batch):
+                if not self.active[slot] and queue:
+                    req = queue.pop(0)
+                    self._insert(slot, req)
+                    owner[slot] = next_rid
+                    next_rid += 1
+            if not self.active.any():
+                break
+            toks = jnp.asarray(self.last_tok[:, None])
+            pos = jnp.asarray(self.pos)
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               toks, pos)
+            if self.greedy:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            else:
+                self.key, sub = jax.random.split(self.key)
+                nxt = np.asarray(jax.random.categorical(sub, logits))
+            for slot in range(self.max_batch):
+                if not self.active[slot]:
+                    continue
+                self.out[slot].append(int(nxt[slot]))
+                self.pos[slot] += 1
+                self.last_tok[slot] = nxt[slot]
+                self.budget[slot] -= 1
+                if (self.budget[slot] <= 0
+                        or int(nxt[slot]) == int(self.eos[slot])):
+                    rid = owner[slot]
+                    plen = self.prompt_len
+                    results[rid] = Completion(tokens=self.out[slot],
+                                              prompt_len=plen)
+                    self.active[slot] = False
+                    done += 1
+        return [results[i] for i in sorted(results)]

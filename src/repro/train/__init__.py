@@ -1,0 +1,5 @@
+from . import optim, compression
+from .loop import TrainConfig, TrainState, init_train_state, make_train_step, train
+
+__all__ = ["optim", "compression", "TrainConfig", "TrainState",
+           "init_train_state", "make_train_step", "train"]

@@ -1,0 +1,82 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantisation with
+error feedback (EF-SGD style — Karimireddy et al. 2019).
+
+At 1000+ node scale the data-parallel all-reduce of bf16 gradients is the
+dominant cross-pod collective; int8 + per-tensor scale cuts those bytes 2×
+(4× vs fp32) at the cost of quantisation noise, which error feedback folds
+back into the next step so convergence is preserved (tested in
+tests/test_ft.py::test_compressed_training_converges).
+
+The quantise/dequantise pair wraps the gradient tree *before* the psum; the
+residual state lives alongside the optimizer state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def init_residuals(grads_like) -> Params:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def quantize(g: jnp.ndarray, residual: jnp.ndarray,
+             scale: jnp.ndarray | None = None
+             ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """g + residual -> (int8 codes, scale, new residual).  ``scale`` may be
+    supplied externally (the replica-shared scale for collective use)."""
+    x = g.astype(jnp.float32) + residual
+    if scale is None:
+        scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, x - deq
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residuals):
+    """Returns (codes tree, scales tree, new residuals tree)."""
+    out = jax.tree_util.tree_map(quantize, grads, residuals)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), pick(1), pick(2)
+
+
+def decompress_tree(codes, scales):
+    return jax.tree_util.tree_map(dequantize, codes, scales)
+
+
+def compressed_psum(grads, residuals, axis_names):
+    """Quantise -> psum(int32 accumulate) -> dequantise -> mean.
+
+    Must run inside shard_map/pmap over ``axis_names``.  All replicas first
+    agree on a shared per-tensor scale (a scalar pmax — negligible bytes),
+    then quantise with it: summing int8 codes in int32 is exact, and
+    dequantising the sum with the shared scale is exact too (the only error
+    is per-replica rounding, which error feedback carries forward).
+    """
+    n = 1
+    for ax in axis_names:
+        n = n * jax.lax.axis_size(ax)
+
+    def reduce_one(g, r):
+        local = g.astype(jnp.float32) + r
+        s = jax.lax.pmax(jnp.max(jnp.abs(local)), axis_names) / 127.0 + 1e-12
+        q, _, new_r = quantize(g, r, scale=s)
+        q32 = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        return q32.astype(jnp.float32) * s / n, new_r
+
+    out = jax.tree_util.tree_map(reduce_one, grads, residuals)
+    mean = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree_util.tree_map(lambda t: t[1], out,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    return mean, new_res

@@ -1,0 +1,207 @@
+"""Optimizers (no optax installed — implemented here): AdamW, SGD-momentum,
+Adafactor-lite; LR schedules; global-norm clipping.
+
+AdamW supports reduced-precision moments (``moment_dtype=bfloat16``) — the
+DeepSeek-V3 recipe this framework uses to fit the 671B config in
+16 GB/chip (DESIGN §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32
+    max_grad_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+
+
+def adamw_init(params, cfg: AdamWConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def adamw_update(grads, state: OptState, params, cfg: AdamWConfig,
+                 lr: jnp.ndarray):
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), m32.astype(cfg.moment_dtype),
+                v32.astype(cfg.moment_dtype))
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, OptState(step=step, m=new_m, v=new_v), gnorm
+
+
+# ---------------------------------------------------------------------------
+# SGD momentum (baseline optimizer)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+    max_grad_norm: float = 1.0
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    mom: Params
+
+
+def sgd_init(params, cfg: SGDConfig) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    mom=jax.tree_util.tree_map(
+                        lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def sgd_update(grads, state: SGDState, params, cfg: SGDConfig,
+               lr: jnp.ndarray):
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+
+    def upd(g, m, p):
+        m32 = cfg.momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m32).astype(p.dtype), m32
+
+    out = jax.tree_util.tree_map(upd, grads, state.mom, params)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, SGDState(step=state.step + 1, mom=new_m), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor-lite: factored second moment for giant embedding tables
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    max_grad_norm: float = 1.0
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Params   # row second moments (or full for <2-D leaves)
+    vc: Params   # col second moments (zeros for <2-D leaves)
+
+
+def adafactor_init(params, cfg: AdafactorConfig) -> AdafactorState:
+    def rows(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def cols(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if p.ndim >= 2 else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree_util.tree_map(rows, params),
+                          vc=jax.tree_util.tree_map(cols, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params,
+                     cfg: AdafactorConfig, lr: jnp.ndarray):
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    d = cfg.decay
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps
+        if p.ndim >= 2:
+            nvr = d * vr + (1 - d) * g2.mean(axis=-1)
+            nvc = d * vc + (1 - d) * g2.mean(axis=-2)
+            denom = (nvr[..., None] * nvc[..., None, :]
+                     / jnp.maximum(nvr.mean(axis=-1, keepdims=True)[..., None],
+                                   cfg.eps))
+            update = g32 / jnp.sqrt(jnp.maximum(denom, cfg.eps))
+        else:
+            nvr = d * vr + (1 - d) * g2
+            nvc = vc
+            update = g32 / jnp.sqrt(jnp.maximum(nvr, cfg.eps))
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), nvr, nvc
+
+    out = jax.tree_util.tree_map(upd, grads, state.vr, state.vc, params)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), AdafactorState(state.step + 1, pick(1), pick(2)), gnorm
+
+
+OPTIMIZERS = {
+    "adamw": (AdamWConfig, adamw_init, adamw_update),
+    "sgd": (SGDConfig, sgd_init, sgd_update),
+    "adafactor": (AdafactorConfig, adafactor_init, adafactor_update),
+}

@@ -1,0 +1,90 @@
+"""Every BFS engine must reproduce the host oracle exactly (paper Alg. 2/3
+correctness), including on hypothesis-generated graphs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ENGINES, build_bvss, make_engine, reference_bfs
+from repro.graphs import from_edges, generators as gen
+from repro.kernels import pull_vss_kernel
+
+FAMILIES = {
+    "rmat": gen.rmat(8, 8, seed=1),
+    "grid": gen.grid2d(17, 19),
+    "star": gen.star(97),
+    "er": gen.erdos_renyi(300, 3.0, seed=2),
+    "path": gen.path(64),
+    "disconnected": from_edges(50, np.array([1, 2, 10]),
+                               np.array([2, 3, 11])),
+}
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("gname", sorted(FAMILIES))
+def test_engine_matches_oracle(engine, gname):
+    g = FAMILIES[gname]
+    if engine == "dense_pull" and g.n > 1024:
+        pytest.skip("dense bitmap only for small n")
+    fn = make_engine(g, engine)
+    for src in (0, g.n // 2, g.n - 1):
+        ref = reference_bfs(g, src)
+        lv = np.asarray(fn(src))
+        np.testing.assert_array_equal(lv, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 150), m=st.integers(0, 600),
+       seed=st.integers(0, 10_000), engine=st.sampled_from(
+           ["blest", "blest_lazy", "brs"]))
+def test_blest_engines_random_graphs(n, m, seed, engine):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+    fn = make_engine(g, engine)
+    src = int(rng.integers(0, n))
+    np.testing.assert_array_equal(np.asarray(fn(src)),
+                                  reference_bfs(g, src))
+
+
+@pytest.mark.parametrize("sigma", [4, 8, 16])
+def test_blest_sigma_sweep(sigma):
+    g = gen.rmat(7, 8, seed=5)
+    fn = make_engine(g, "blest", sigma=sigma)
+    np.testing.assert_array_equal(np.asarray(fn(3)), reference_bfs(g, 3))
+
+
+def test_blest_with_pallas_pull_kernel():
+    g = gen.rmat(7, 8, seed=6)
+    b = build_bvss(g)
+    fn = make_engine(g, "blest", bvss=b,
+                     pull_impl=lambda m, f, s: pull_vss_kernel(m, f, s))
+    np.testing.assert_array_equal(np.asarray(fn(1)), reference_bfs(g, 1))
+
+
+def test_ordered_graph_same_levels():
+    """Reordering must not change BFS distances (paper §3.2 sanity)."""
+    from repro.core.ordering import auto_order
+    g = gen.clustered(10, 32, seed=7)
+    perm, _ = auto_order(g, w=128)
+    gp = g.permute_fast(perm)
+    fn = make_engine(gp, "blest_lazy")
+    src = 5
+    ref = reference_bfs(g, src)
+    lv = np.asarray(fn(int(perm[src])))
+    np.testing.assert_array_equal(lv[perm], ref)
+
+
+def test_multi_source_matches_singles():
+    from repro.core.multi_source import make_multi_source_bfs
+    g = gen.rmat(7, 6, seed=9)
+    srcs = np.array([0, 3, 17, 42], dtype=np.int32)
+    f = make_multi_source_bfs(g, len(srcs))
+    lv = np.asarray(f(srcs))
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(lv[:, i], reference_bfs(g, int(s)))
+
+
+def test_closeness_centrality_nonnegative():
+    from repro.core.multi_source import closeness_centrality
+    g = gen.rmat(7, 8, seed=10)
+    cc = closeness_centrality(g, np.arange(6, dtype=np.int32))
+    assert (cc >= 0).all() and np.isfinite(cc).all()

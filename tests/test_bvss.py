@@ -1,0 +1,84 @@
+"""BVSS construction invariants (unit + hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_bvss
+from repro.graphs import Graph, from_edges, generators as gen
+
+
+def edge_set_transposed(g: Graph) -> set:
+    tp, ti = g.t_csr
+    out = set()
+    for u in range(g.n):
+        for v in ti[tp[u]:tp[u + 1]]:
+            out.add((int(v), int(u)))
+    return out
+
+
+def check_invariants(g: Graph, sigma: int = 8):
+    b = build_bvss(g, sigma=sigma)
+    # 1. exact edge reconstruction (every edge in exactly one slice bit)
+    s, d = b.reconstruct_edges()
+    assert len(s) == g.m
+    assert set(zip(s.tolist(), d.tolist())) == edge_set_transposed(g)
+    # 2. structural bounds
+    assert b.num_vss >= -(-b.num_slices // b.tau)
+    assert (np.diff(b.real_ptrs) >= 0).all()
+    assert int(b.real_ptrs[-1]) == b.num_vss
+    # 3. virtualToReal consistent with realPtrs
+    v2r = b.virtual_to_real
+    for s_id in range(b.n_sets):
+        lo, hi = b.real_ptrs[s_id], b.real_ptrs[s_id + 1]
+        assert (v2r[lo:hi] == s_id).all()
+    # 4. only the last VSS of a set may be padded
+    if b.num_vss == 0:
+        assert b.num_slices == 0 and g.m == 0
+        return b
+    spw = b.slices_per_word
+    shifts = (np.arange(spw, dtype=np.uint32) * sigma)[None, :, None]
+    sub = ((b.masks[:, None, :] >> shifts)
+           & np.uint32((1 << sigma) - 1)) != 0
+    live_per_vss = sub.reshape(b.num_vss, -1).sum(axis=1)
+    for s_id in range(b.n_sets):
+        lo, hi = b.real_ptrs[s_id], b.real_ptrs[s_id + 1]
+        if hi - lo > 1:
+            assert (live_per_vss[lo:hi - 1] == b.tau).all()
+    # 5. dummy rows only where mask is empty
+    assert ((b.row_ids == g.n) == ~sub).all()
+    # 6. compression ratio = m / (slices * sigma)
+    assert b.compression_ratio() == pytest.approx(
+        g.m / max(b.num_slices * sigma, 1))
+    return b
+
+
+@pytest.mark.parametrize("sigma", [4, 8, 16, 32])
+def test_invariants_families(sigma):
+    for g in (gen.rmat(7, 6, seed=1), gen.grid2d(11, 13), gen.star(67),
+              gen.path(40), gen.erdos_renyi(200, 2.5, seed=3)):
+        check_invariants(g, sigma=sigma)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 120), m=st.integers(0, 500),
+       seed=st.integers(0, 10_000))
+def test_invariants_random(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+    check_invariants(g)
+
+
+def test_update_divergence_orders_matter():
+    g = gen.grid2d(30, 30, shuffle=True, seed=0)
+    from repro.core.ordering import rcm
+    u0 = build_bvss(g).update_divergence()
+    u1 = build_bvss(g.permute_fast(rcm(g))).update_divergence()
+    assert u1 < u0 / 2  # paper Table 1b: RCM slashes divergence
+
+
+def test_memory_breakdown_counts_all_arrays():
+    g = gen.rmat(8, 8, seed=2)
+    b = build_bvss(g)
+    mem = b.memory_bytes()
+    assert mem["total"] == mem["bvss"] + mem["dynamic"] + mem["level"]
+    assert mem["bvss"] >= b.masks.nbytes + b.row_ids.nbytes

@@ -1,0 +1,68 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import bit_spmm, bvss_pull, finalize_sweep
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def u32(shape):
+    return RNG.integers(0, 2 ** 32, shape, dtype=np.uint64).astype(np.uint32)
+
+
+@pytest.mark.parametrize("sigma", [4, 8, 16, 32])
+@pytest.mark.parametrize("B", [1, 5, 127, 128, 129, 513])
+@pytest.mark.parametrize("layout", ["lanes", "rows"])
+def test_bvss_pull_sweep(sigma, B, layout):
+    masks = jnp.asarray(u32((B, 32)))
+    fb = jnp.asarray(u32((B,)))
+    got = np.asarray(bvss_pull(masks, fb, sigma=sigma, layout=layout))
+    want = np.asarray(ref.bvss_pull_ref(masks, fb, sigma=sigma))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("tile", [32, 128, 256])
+def test_bvss_pull_tile_sweep(tile):
+    masks = jnp.asarray(u32((300, 32)))
+    fb = jnp.asarray(u32((300,)))
+    got = np.asarray(bvss_pull(masks, fb, tile=tile))
+    want = np.asarray(ref.bvss_pull_ref(masks, fb))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("R,C,S", [(8, 40, 3), (128, 128, 128),
+                                   (200, 300, 70), (1, 32, 1),
+                                   (130, 260, 129)])
+def test_bit_spmm_sweep(R, C, S):
+    W = (C + 31) // 32
+    a = u32((R, W))
+    keep = C - (W - 1) * 32
+    if keep < 32:
+        a[:, -1] &= np.uint32((1 << keep) - 1)
+    x = RNG.integers(0, 2, (C, S)).astype(np.int8)
+    got = np.asarray(bit_spmm(jnp.asarray(a), jnp.asarray(x)))
+    want = np.asarray(ref.bit_spmm_ref(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(1, 5000), lvl=st.integers(1, 100),
+       seed=st.integers(0, 1000))
+def test_finalize_sweep_property(N, lvl, seed):
+    rng = np.random.default_rng(seed)
+    marks = rng.integers(0, 2, N).astype(np.uint8)
+    levels = np.where(rng.random(N) < 0.5, np.int32(2 ** 31 - 1),
+                      rng.integers(0, lvl, N).astype(np.int32))
+    g_lv, g_new = finalize_sweep(jnp.asarray(marks), jnp.asarray(levels), lvl)
+    w_lv, w_new = ref.finalize_sweep_ref(jnp.asarray(marks),
+                                         jnp.asarray(levels), lvl)
+    np.testing.assert_array_equal(np.asarray(g_lv), np.asarray(w_lv))
+    np.testing.assert_array_equal(np.asarray(g_new), np.asarray(w_new))
+    # invariants: levels only decrease from INF, new implies mark
+    new = np.asarray(g_new)
+    assert (new <= (marks > 0)).all()
+    assert (np.asarray(g_lv)[new] == lvl).all()

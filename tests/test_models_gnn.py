@@ -1,0 +1,180 @@
+"""GNN zoo: message passing, equivariance properties, FM identities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.spatial.transform as st_rot
+
+from repro.models.dimenet import DimeNetConfig, apply_dimenet, init_dimenet
+from repro.models.fm import (FMConfig, apply_fm, apply_fm_bags, fm_loss,
+                             fm_retrieval_scores, init_fm)
+from repro.models.gnn import (EGNNConfig, GNNConfig, apply_egnn, apply_gin,
+                              init_egnn, init_gin)
+from repro.models.nequip import (NequIPConfig, apply_nequip, gaunt_tensors,
+                                 init_nequip, real_sph_harm)
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+N, E = 20, 60
+
+
+def rand_graph():
+    senders = np.concatenate([RNG.integers(0, N, E),
+                              np.full(4, N)]).astype(np.int32)
+    receivers = np.concatenate([RNG.integers(0, N, E),
+                                np.full(4, N)]).astype(np.int32)
+    pos = np.zeros((N + 1, 3), np.float32)
+    pos[:N] = RNG.normal(size=(N, 3))
+    return senders, receivers, pos
+
+
+def rotate(pos, seed=1):
+    R = st_rot.Rotation.random(random_state=seed).as_matrix().astype(
+        np.float32)
+    t = np.array([1.0, -2.0, 0.5], np.float32)
+    out = pos.copy()
+    out[:N] = pos[:N] @ R.T + t
+    return out, R, t
+
+
+def test_gin_shapes_and_gradients():
+    cfg = GNNConfig(name="g", n_layers=3, d_hidden=16, d_in=8, n_classes=4)
+    p = init_gin(KEY, cfg)
+    s, r, _ = rand_graph()
+    feat = np.zeros((N + 1, 8), np.float32)
+    feat[:N] = RNG.normal(size=(N, 8))
+    out = apply_gin(p, cfg, jnp.asarray(feat), jnp.asarray(s), jnp.asarray(r))
+    assert out.shape == (N + 1, 4)
+
+    def loss(p_):
+        lg = apply_gin(p_, cfg, jnp.asarray(feat), jnp.asarray(s),
+                       jnp.asarray(r))
+        return (lg ** 2).mean()
+
+    g = jax.grad(loss)(p)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(g))
+
+
+def test_gin_remat_equivalent():
+    cfg = GNNConfig(name="g", n_layers=3, d_hidden=16, d_in=8, n_classes=4)
+    p = init_gin(KEY, cfg)
+    s, r, _ = rand_graph()
+    feat = np.zeros((N + 1, 8), np.float32)
+    feat[:N] = RNG.normal(size=(N, 8))
+    a = apply_gin(p, cfg, jnp.asarray(feat), jnp.asarray(s), jnp.asarray(r),
+                  remat=False)
+    b = apply_gin(p, cfg, jnp.asarray(feat), jnp.asarray(s), jnp.asarray(r),
+                  remat=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_egnn_equivariance():
+    cfg = EGNNConfig(name="e", n_layers=3, d_hidden=16, d_in=8)
+    p = init_egnn(KEY, cfg)
+    s, r, pos = rand_graph()
+    feat = np.zeros((N + 1, 8), np.float32)
+    feat[:N] = RNG.normal(size=(N, 8))
+    gids = np.concatenate([np.zeros(N, np.int32), [1]]).astype(np.int32)
+    e1, x1 = apply_egnn(p, cfg, jnp.asarray(feat), jnp.asarray(pos),
+                        jnp.asarray(s), jnp.asarray(r), jnp.asarray(gids))
+    pos2, R, t = rotate(pos)
+    e2, x2 = apply_egnn(p, cfg, jnp.asarray(feat), jnp.asarray(pos2),
+                        jnp.asarray(s), jnp.asarray(r), jnp.asarray(gids))
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x2)[:N],
+                               np.asarray(x1)[:N] @ R.T + t, rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_nequip_rotation_invariance():
+    cfg = NequIPConfig(name="n", n_layers=2, channels=8, n_species=4)
+    species = np.concatenate([RNG.integers(0, 4, N), [0]]).astype(np.int32)
+    p = init_nequip(KEY, cfg)
+    s, r, pos = rand_graph()
+    e1 = apply_nequip(p, cfg, jnp.asarray(species), jnp.asarray(pos),
+                      jnp.asarray(s), jnp.asarray(r))
+    pos2, _, _ = rotate(pos)
+    e2 = apply_nequip(p, cfg, jnp.asarray(species), jnp.asarray(pos2),
+                      jnp.asarray(s), jnp.asarray(r))
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-3, atol=1e-5)
+
+
+def test_gaunt_tensors_selection_rules():
+    gt = gaunt_tensors()
+    for (l1, l2, l3) in gt:
+        assert (l1 + l2 + l3) % 2 == 0
+        assert abs(l1 - l2) <= l3 <= l1 + l2
+    # (0,0,0) must integrate to Y00 normalisation
+    np.testing.assert_allclose(gt[(0, 0, 0)][0, 0, 0], 0.28209479,
+                               rtol=1e-5)
+
+
+def test_sph_harm_orthonormal():
+    """Quadrature check: ∫ Y_a Y_b = δ_ab over our real SH basis."""
+    nt, nphi = 64, 128
+    t, wt = np.polynomial.legendre.leggauss(nt)
+    phi = (np.arange(nphi) + 0.5) * (2 * np.pi / nphi)
+    ct = t[:, None] * np.ones(nphi)[None, :]
+    stq = np.sqrt(1 - ct ** 2)
+    xyz = np.stack([stq * np.cos(phi), stq * np.sin(phi), ct], axis=-1)
+    Y = real_sph_harm(jnp.asarray(xyz))
+    Yall = np.concatenate([np.asarray(y) for y in Y], axis=-1)  # (nt,np,9)
+    w = wt[:, None] * (2 * np.pi / nphi)
+    gram = np.einsum("tp,tpa,tpb->ab", w, Yall, Yall)
+    np.testing.assert_allclose(gram, np.eye(9), atol=1e-6)
+
+
+def test_dimenet_rotation_invariance_and_grads():
+    cfg = DimeNetConfig(name="d", n_blocks=2, d_hidden=16, n_species=4)
+    species = np.concatenate([RNG.integers(0, 4, N), [0]]).astype(np.int32)
+    p = init_dimenet(KEY, cfg)
+    s, r, pos = rand_graph()
+    E2 = len(s)
+    trips = [(e1, e2) for e2 in range(E2) for e1 in range(E2)
+             if s[e2] < N and r[e1] == s[e2] and s[e1] != r[e2]
+             and s[e1] < N][:100]
+    trips = np.array(trips or [(E2, E2)], np.int32)
+    args = (jnp.asarray(species), jnp.asarray(pos), jnp.asarray(s),
+            jnp.asarray(r), jnp.asarray(trips[:, 0]), jnp.asarray(trips[:, 1]))
+    e1 = apply_dimenet(p, cfg, *args)
+    pos2, _, _ = rotate(pos)
+    e2 = apply_dimenet(p, cfg, jnp.asarray(species), jnp.asarray(pos2),
+                       *args[2:])
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-3, atol=1e-5)
+    g = jax.grad(lambda pp: apply_dimenet(pp, cfg, *args))(p)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(g))
+
+
+def test_fm_identities():
+    cfg = FMConfig(name="f", n_fields=10, embed_dim=6, rows_per_field=50)
+    p = init_fm(KEY, cfg)
+    ids = jnp.asarray(RNG.integers(0, 50, (16, 10)).astype(np.int32))
+    labels = jnp.asarray(RNG.integers(0, 2, 16).astype(np.float32))
+    loss = fm_loss(p, cfg, ids, labels)
+    assert np.isfinite(float(loss))
+    # sum-square trick == brute-force pairwise
+    v = np.asarray(p["v"])
+    rows = np.asarray(ids) + np.arange(10)[None, :] * 50
+    brute = np.zeros(16)
+    for b in range(16):
+        vecs = v[rows[b]]
+        for i in range(10):
+            for j in range(i + 1, 10):
+                brute[b] += vecs[i] @ vecs[j]
+    fast = np.asarray(apply_fm(p, cfg, ids)) - float(p["b"]) \
+        - np.asarray(p["w"])[rows].sum(1)
+    np.testing.assert_allclose(fast, brute, rtol=1e-4, atol=1e-5)
+    # bags == single-hot
+    flat = rows.astype(np.int32).reshape(-1)
+    bag_ids = np.arange(160, dtype=np.int32)
+    lb = apply_fm_bags(p, cfg, jnp.asarray(flat), jnp.asarray(bag_ids), 160)
+    la = apply_fm(p, cfg, ids) - p["b"]
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(la), rtol=2e-5,
+                               atol=2e-5)
+    sc = fm_retrieval_scores(p, cfg, ids[0, :4],
+                             jnp.asarray(RNG.integers(0, 50, (500, 5))
+                                         .astype(np.int32)))
+    assert sc.shape == (500,) and np.isfinite(np.asarray(sc)).all()

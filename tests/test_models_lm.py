@@ -1,0 +1,154 @@
+"""Transformer variants: loss/grad finiteness, decode==forward consistency,
+rotating-window caches, streaming-CE equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import LMConfig, MoEConfig
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(0)
+B, S, V = 2, 32, 128
+
+VARIANTS = {
+    "gqa_qknorm": LMConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                           n_kv_heads=2, d_head=16, d_ff=128, vocab=V,
+                           qk_norm=True),
+    "swa": LMConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=128, vocab=V, window=8,
+                    local_global=(1, 0), tie_embeddings=False),
+    "local_global": LMConfig(name="t", n_layers=4, d_model=64, n_heads=4,
+                             n_kv_heads=1, d_head=16, d_ff=128, vocab=V,
+                             window=8, local_global=(2, 1)),
+    "moe": LMConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                    n_kv_heads=4, d_head=16, d_ff=128, vocab=V,
+                    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32,
+                                  capacity_factor=16.0)),
+    "mla_ds3_mtp": LMConfig(name="t", n_layers=4, d_model=64, n_heads=4,
+                            n_kv_heads=4, d_head=32, d_ff=128, vocab=V,
+                            attn="mla", q_lora_rank=48, kv_lora_rank=32,
+                            qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16,
+                            moe=MoEConfig(n_experts=8, top_k=2, d_expert=32,
+                                          n_shared=1, router="sigmoid_ds3",
+                                          capacity_factor=16.0),
+                            n_dense_layers=2, dense_d_ff=96, mtp=True),
+}
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_loss_grads_finite(name):
+    cfg = VARIANTS[name]
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.lm_loss(p, cfg, tokens, compute_dtype=jnp.float32,
+                            remat=False))(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(grads))
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_axes_tree_matches_params(name):
+    cfg = VARIANTS[name]
+    params = T.init_lm(KEY, cfg)
+    axes = T.lm_axes(cfg)
+    pt = jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, params))
+    at = jax.tree_util.tree_structure(jax.tree_util.tree_map(
+        lambda x: 0, axes, is_leaf=lambda t: isinstance(t, tuple)))
+    assert pt == at
+    # every leaf's logical tuple matches the param rank
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_a = jax.tree_util.tree_leaves(
+        axes, is_leaf=lambda t: isinstance(t, tuple))
+    for p, a in zip(flat_p, flat_a):
+        assert len(a) == p.ndim or a == ()
+
+
+@pytest.mark.parametrize("name", ["gqa_qknorm", "local_global", "moe",
+                                  "mla_ds3_mtp"])
+def test_decode_matches_forward(name):
+    cfg = VARIANTS[name]
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    logits_full, _ = T.forward(params, cfg, tokens,
+                               compute_dtype=jnp.float32, remat=False)
+    lp, caches = T.prefill(params, cfg, tokens[:, :S // 2], max_len=S,
+                           compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(lp),
+                               np.asarray(logits_full[:, S // 2 - 1]),
+                               rtol=3e-4, atol=3e-4)
+    for pos in range(S // 2, S // 2 + 4):
+        ld, caches = T.decode_step(params, cfg, caches,
+                                   tokens[:, pos:pos + 1], jnp.int32(pos),
+                                   compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(ld),
+                                   np.asarray(logits_full[:, pos]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_window_rotation_long_decode():
+    cfg = VARIANTS["swa"]
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, V)
+    logits_full, _ = T.forward(params, cfg, tokens,
+                               compute_dtype=jnp.float32, remat=False)
+    _, caches = T.prefill(params, cfg, tokens[:, :4], max_len=S,
+                          compute_dtype=jnp.float32)
+    for pos in range(4, 28):  # decode well past the window wraparound
+        ld, caches = T.decode_step(params, cfg, caches,
+                                   tokens[:, pos:pos + 1], jnp.int32(pos),
+                                   compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(ld),
+                                   np.asarray(logits_full[:, pos]),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_chunked_ce_equals_direct():
+    cfg = VARIANTS["gqa_qknorm"]
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, 48), 0, V)
+    logits, h = T.forward(params, cfg, tokens, compute_dtype=jnp.float32,
+                          remat=False)
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    direct = -jnp.take_along_axis(
+        lp, tokens[:, 1:][..., None].astype(jnp.int32), axis=-1).mean()
+    head = params["embed"].T.astype(jnp.float32)
+    chunked = T._chunked_nll(h[:, :-1].astype(jnp.float32), head,
+                             tokens[:, 1:], chunk=16)
+    np.testing.assert_allclose(float(chunked), float(direct), rtol=1e-5)
+
+
+def test_per_slot_positions_decode():
+    """Continuous batching: different positions per slot must equal
+    per-slot independent decodes."""
+    cfg = VARIANTS["gqa_qknorm"]
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0, V)
+    # fill slot 0 with 8 tokens, slot 1 with 5 tokens
+    lens = [8, 5]
+    logits_ind = []
+    caches_ind = []
+    for b in range(2):
+        lg, c = T.prefill(params, cfg, tokens[b:b + 1, :lens[b]], max_len=16,
+                          compute_dtype=jnp.float32)
+        logits_ind.append(lg)
+        caches_ind.append(c)
+    # merge into one batch cache
+    merged = []
+    for lc0, lc1 in zip(*caches_ind):
+        merged.append({k: jnp.concatenate([lc0[k], lc1[k]], axis=0)
+                       for k in lc0})
+    pos = jnp.asarray(lens, jnp.int32)
+    tok = jnp.asarray([[int(tokens[0, lens[0]])], [int(tokens[1, lens[1]])]],
+                      dtype=jnp.int32)
+    lg_b, _ = T.decode_step(params, cfg, merged, tok, pos,
+                            compute_dtype=jnp.float32)
+    for b in range(2):
+        lg_s, _ = T.decode_step(params, cfg, caches_ind[b], tok[b:b + 1],
+                                jnp.int32(lens[b]),
+                                compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(lg_b[b]), np.asarray(lg_s[0]),
+                                   rtol=3e-4, atol=3e-4)

@@ -1,0 +1,64 @@
+"""Ordering heuristics: validity, and the paper's §3.2 effects."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_bvss
+from repro.core.ordering import (auto_order, is_social_like, jaccard_windows,
+                                 natural_order, random_order, rcm,
+                                 shingle_order, social_like_report)
+from repro.graphs import from_edges, generators as gen
+
+
+def is_permutation(perm, n):
+    return sorted(perm.tolist()) == list(range(n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 100), m=st.integers(0, 300),
+       seed=st.integers(0, 1000))
+def test_orderings_are_permutations(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m))
+    for perm in (natural_order(g), random_order(g), shingle_order(g),
+                 rcm(g), jaccard_windows(g, w=64)):
+        assert is_permutation(perm, n)
+
+
+def test_rcm_reduces_bandwidth_on_grid():
+    g = gen.grid2d(25, 25, shuffle=True, seed=1)
+    bw0 = g.bandwidth()
+    bw1 = g.permute_fast(rcm(g)).bandwidth()
+    assert bw1 < bw0 / 5
+
+
+def test_jaccard_windows_improves_compression_on_clusters():
+    g = gen.clustered(20, 32, seed=2)
+    c0 = build_bvss(g).compression_ratio()
+    perm = jaccard_windows(g, w=256, pre_order=shingle_order(g))
+    c1 = build_bvss(g.permute_fast(perm)).compression_ratio()
+    assert c1 > c0 * 1.5  # paper Table 1a: large compression gains
+
+
+def test_window_size_monotone_trend():
+    """Fig. 3: larger windows should not hurt compression (on average)."""
+    g = gen.clustered(16, 32, seed=3)
+    pre = shingle_order(g)
+    comps = []
+    for w in (32, 128, 512):
+        perm = jaccard_windows(g, w=w, pre_order=pre)
+        comps.append(build_bvss(g.permute_fast(perm)).compression_ratio())
+    assert comps[-1] >= comps[0]
+
+
+def test_social_classifier():
+    assert is_social_like(gen.rmat(10, 16, seed=4))          # scale-free
+    assert not is_social_like(gen.grid2d(32, 32))            # road-like
+    rep = social_like_report(gen.rmat(10, 16, seed=4))
+    assert rep.heavy_tail or rep.power_law
+
+
+def test_auto_order_policy():
+    _, kind_soc = auto_order(gen.rmat(9, 16, seed=5), w=256)
+    _, kind_road = auto_order(gen.grid2d(20, 20), w=256)
+    assert kind_soc == "jaccard_windows"
+    assert kind_road == "rcm"

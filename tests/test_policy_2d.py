@@ -1,0 +1,72 @@
+"""Paper §5 static policy pipeline + 2-D distributed BFS."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import reference_bfs
+from repro.core.policy import (choose_update_scheme, parents_from_levels,
+                               prepare)
+from repro.graphs import generators as gen
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_prepared_pipeline_matches_oracle():
+    for g in (gen.rmat(8, 10, seed=2), gen.grid2d(18, 18, shuffle=True)):
+        pb = prepare(g, w=256)
+        for src in (0, g.n // 2):
+            np.testing.assert_array_equal(pb.levels(src),
+                                          reference_bfs(g, src))
+
+
+def test_update_scheme_policy():
+    # high-divergence social graph -> lazy; ordered road graph -> eager
+    from repro.core.bvss import build_bvss
+    from repro.core.ordering import rcm
+    g_soc = gen.rmat(9, 16, seed=1)
+    g_road = gen.grid2d(24, 24)
+    b_soc = build_bvss(g_soc)
+    b_road = build_bvss(g_road.permute_fast(rcm(g_road)))
+    assert choose_update_scheme(b_soc) == "blest_lazy"
+    assert choose_update_scheme(b_road) == "blest"
+
+
+def test_parents_valid_tree():
+    g = gen.rmat(7, 8, seed=3)
+    pb = prepare(g, w=128)
+    lv = pb.levels(0)
+    parents = parents_from_levels(g, lv)
+    INF = np.iinfo(np.int32).max
+    assert parents[0] == -1
+    for u in range(g.n):
+        if lv[u] not in (0, INF):
+            p = parents[u]
+            assert p >= 0 and lv[p] == lv[u] - 1
+            # parent edge must exist
+            assert u in g.indices[g.indptr[p]:g.indptr[p + 1]]
+
+
+def test_distributed_bfs_2d_matches_oracle():
+    code = """
+import jax, numpy as np
+from repro.graphs import generators as gen
+from repro.core import reference_bfs
+from repro.distributed.bfs_dist import shard_bvss_2d, make_distributed_bfs_2d
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+for g in (gen.rmat(8, 8, seed=5), gen.grid2d(17, 13)):
+    sb = shard_bvss_2d(g, 2, 4)
+    f = make_distributed_bfs_2d(sb, mesh)
+    for src in (0, g.n - 1):
+        lv = np.asarray(f(src))
+        ref = reference_bfs(g, src)
+        assert (lv == ref).all(), (src, np.flatnonzero(lv != ref)[:5])
+print("ok")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stdout + out.stderr

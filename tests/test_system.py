@@ -1,0 +1,56 @@
+"""End-to-end behaviour tests for the paper's system: the full BLEST
+pipeline (classify -> order -> BVSS -> fused BFS -> verify) as a user
+would run it."""
+import numpy as np
+
+from repro.core import build_bvss, make_engine, reference_bfs
+from repro.core.ordering import auto_order, social_like_report
+from repro.graphs import generators as gen
+from repro.launch.bfs import ENGINE_VARIANTS, build_graph
+
+
+def test_full_pipeline_social_graph():
+    g = gen.rmat(9, 12, seed=7)
+    assert social_like_report(g).is_social
+    perm, kind = auto_order(g, w=256)
+    assert kind == "jaccard_windows"
+    g_ord = g.permute_fast(perm)
+    b = build_bvss(g_ord)
+    assert 0 < b.compression_ratio() <= 1
+    fn = make_engine(g_ord, "blest_lazy", bvss=b)
+    for src in (0, g.n // 2):
+        lv = np.asarray(fn(int(perm[src])))
+        np.testing.assert_array_equal(lv[perm], reference_bfs(g, src))
+
+
+def test_full_pipeline_road_graph():
+    g = build_graph("road", 9)
+    perm, kind = auto_order(g, w=256)
+    assert kind == "rcm"
+    g_ord = g.permute_fast(perm)
+    u_before = build_bvss(g).update_divergence()
+    u_after = build_bvss(g_ord).update_divergence()
+    assert u_after < u_before  # paper Table 1b property
+    fn = make_engine(g_ord, "blest")
+    lv = np.asarray(fn(int(perm[0])))
+    np.testing.assert_array_equal(lv[perm], reference_bfs(g, 0))
+
+
+def test_all_cli_engine_variants_verify():
+    from repro.launch.bfs import main as bfs_main
+    for engine in ("blest_full", "brs", "dirop"):
+        bfs_main(["--graph", "clustered", "--scale", "9",
+                  "--engine", engine, "--sources", "2"])
+
+
+def test_graph_service_example():
+    import importlib.util, os
+    spec = importlib.util.spec_from_file_location(
+        "bfs_service", os.path.join(os.path.dirname(__file__), "..",
+                                    "examples", "bfs_service.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    g = gen.rmat(8, 8, seed=1)
+    svc = mod.GraphService(g)
+    lv = svc.levels(3)
+    np.testing.assert_array_equal(lv, reference_bfs(g, 3))

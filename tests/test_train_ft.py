@@ -1,0 +1,178 @@
+"""Training substrate + fault tolerance: checkpoint/restart bit-exactness,
+resharding, straggler mitigation, gradient compression convergence."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.ft import (FailureInjector, PrefetchQueue, RestartManager,
+                      SimulatedFailure, elastic_remesh_plan,
+                      latest_checkpoint, restore_checkpoint, save_checkpoint)
+from repro.models import LMConfig
+from repro.models import transformer as T
+from repro.train import TrainConfig, train
+from repro.train import compression, optim
+
+CFG = LMConfig(name="tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+               d_head=16, d_ff=64, vocab=64)
+
+
+def setup_lm():
+    params = T.init_lm(jax.random.PRNGKey(0), CFG)
+    pipe = TokenPipeline(TokenPipelineConfig(vocab=64, seq_len=32,
+                                             global_batch=8))
+    loss_fn = lambda p, b: T.lm_loss(p, CFG, jnp.asarray(b),
+                                     compute_dtype=jnp.float32, remat=False)
+    return params, loss_fn, pipe.batch
+
+
+def test_restart_bit_exact():
+    params, loss_fn, batch_fn = setup_lm()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        t1 = TrainConfig(steps=16, log_every=4, ckpt_every=4, ckpt_dir=d1,
+                         peak_lr=1e-2, warmup=2)
+        r1 = train(loss_fn, params, batch_fn, t1, log_fn=lambda s: None)
+        t2 = TrainConfig(steps=16, log_every=4, ckpt_every=4, ckpt_dir=d2,
+                         peak_lr=1e-2, warmup=2)
+        inj = FailureInjector(fail_at_steps=(10,))
+        mgr = RestartManager(max_restarts=2)
+        r2 = mgr.run(lambda resume: train(loss_fn, params, batch_fn, t2,
+                                          injector=inj,
+                                          log_fn=lambda s: None))
+        assert mgr.stats.restarts == 1
+        for a, b in zip(jax.tree_util.tree_leaves(r1.final_state.params),
+                        jax.tree_util.tree_leaves(r2.final_state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert r1.losses[-1][1] < r1.losses[0][1]
+
+
+def test_restart_gives_up_after_max():
+    mgr = RestartManager(max_restarts=1)
+
+    def always_fail(resume):
+        raise SimulatedFailure("boom")
+
+    with pytest.raises(SimulatedFailure):
+        mgr.run(always_fail)
+    assert mgr.stats.restarts == 2  # initial + one retry counted as failures
+
+
+def test_checkpoint_roundtrip_and_retention():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": [jnp.zeros((4,), jnp.int32), jnp.ones((), jnp.bfloat16)]}
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3):
+            save_checkpoint(d, step, tree, extra={"note": "x"})
+        from repro.ft.checkpoint import list_checkpoints, retain
+        retain(d, keep=2)
+        cks = list_checkpoints(d)
+        assert [s for s, _ in cks] == [2, 3]
+        restored, manifest = restore_checkpoint(cks[-1][1], tree)
+        assert manifest["step"] == 3
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restore_missing_leaf_raises():
+    tree = {"a": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, tree)
+        bigger = {"a": jnp.zeros((2,)), "c": jnp.zeros((3,))}
+        with pytest.raises(ValueError, match="missing"):
+            restore_checkpoint(path, bigger)
+
+
+def test_straggler_backup_batch():
+    def slow_gen():
+        yield np.zeros(3)
+        time.sleep(60)       # simulated stuck data worker
+        yield np.ones(3)
+
+    q = PrefetchQueue(slow_gen(), timeout_s=0.3,
+                      backup_fn=lambda step: np.full(3, step, np.float64))
+    a = q.get(0)
+    b = q.get(1)           # producer is stuck -> backup batch
+    np.testing.assert_array_equal(a, np.zeros(3))
+    np.testing.assert_array_equal(b, np.full(3, 1.0))
+    assert q.stats.timeouts == 1
+
+
+def test_elastic_remesh_plan():
+    plan = elastic_remesh_plan(512, 256, model_parallel=16)
+    assert plan["old_dp"] == 32 and plan["new_dp"] == 16
+    with pytest.raises(ValueError):
+        elastic_remesh_plan(512, 100, model_parallel=16)
+
+
+@pytest.mark.parametrize("opt", ["adamw", "sgd", "adafactor"])
+def test_optimizers_reduce_loss(opt):
+    params, loss_fn, batch_fn = setup_lm()
+    tcfg = TrainConfig(steps=12, optimizer=opt, peak_lr=5e-3, warmup=2,
+                       log_every=3)
+    r = train(loss_fn, params, batch_fn, tcfg, log_fn=lambda s: None)
+    assert r.losses[-1][1] < r.losses[0][1] + 0.05
+
+
+def test_accumulation_matches_big_batch():
+    params, loss_fn, _ = setup_lm()
+    pipe = TokenPipeline(TokenPipelineConfig(vocab=64, seq_len=16,
+                                             global_batch=8))
+    batch = jnp.asarray(pipe.batch(0))
+    from repro.train.loop import init_train_state, make_train_step
+    t_one = TrainConfig(steps=4, peak_lr=1e-3, warmup=1)
+    t_acc = TrainConfig(steps=4, peak_lr=1e-3, warmup=1, accum_steps=4)
+    s0 = init_train_state(params, t_one)
+    s1 = init_train_state(params, t_acc)
+    f0 = make_train_step(loss_fn, t_one, donate=False)
+    f1 = make_train_step(loss_fn, t_acc, donate=False)
+    s0, m0 = f0(s0, batch)
+    s1, m1 = f1(s1, batch)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s0.params),
+                    jax.tree_util.tree_leaves(s1.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-5)
+
+
+def test_quantize_error_feedback_identity():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    res = jnp.zeros((64,))
+    q, scale, new_res = compression.quantize(g, res)
+    deq = compression.dequantize(q, scale)
+    # residual + dequantised = original (error feedback is exact)
+    np.testing.assert_allclose(np.asarray(deq + new_res), np.asarray(g),
+                               rtol=1e-5, atol=1e-6)
+    assert np.abs(np.asarray(deq - g)).max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_compressed_training_converges():
+    """int8+EF gradients still train a toy regression to low loss."""
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(8,)).astype(np.float32)
+    X = rng.normal(size=(256, 8)).astype(np.float32)
+    y = X @ w_true
+
+    params = {"w": jnp.zeros((8,))}
+    res = compression.init_residuals(params)
+    lr = 0.1
+
+    def loss(p):
+        return jnp.mean((X @ p["w"] - y) ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        codes, scales, res = compression.compress_tree(g, res)
+        g_hat = compression.decompress_tree(codes, scales)
+        params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params,
+                                        g_hat)
+    assert float(loss(params)) < 1e-3
+    np.testing.assert_allclose(np.asarray(params["w"]), w_true, atol=0.02)
