@@ -1,0 +1,123 @@
+"""PR-1 fused level-step pipeline benchmark: fused engines vs the seed.
+
+Per graph of the suite, times (median s/BFS over a source set, post-jit):
+
+* ``blest_seed`` / ``blest_lazy_seed`` — the frozen pre-PR implementation
+  (sequential per-block while_loop, jnp pull, three separate dense tail
+  passes; see ``benchmarks/seed_baseline.py``);
+* ``blest_fused`` / ``blest_lazy_fused`` — the live engine: batched
+  bucketed pull through Pallas ``bvss_pull`` + fused
+  ``finalize_pack_sweep`` (interpret mode on CPU, honest numbers);
+* ``blest_fused_jnp`` / ``blest_lazy_fused_jnp`` — the same fused pipeline
+  with the pure-jnp pull/finalise fallbacks, isolating the batching win
+  from Pallas-interpret overhead.
+
+``--json`` writes the machine-readable perf-trajectory artifact
+(``BENCH_pr1.json``): per-engine per-graph seconds, MTEPS, level count,
+plus fused-vs-seed speedups and their geomean.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_row, graph_suite, time_engine
+from benchmarks.seed_baseline import make_seed_blest_bfs
+from repro.core import build_bvss, reference_bfs
+from repro.core.bfs import INF, BlestProblem, make_blest_bfs
+
+
+def _engine_builders():
+    return {
+        "blest_seed": lambda pr: make_seed_blest_bfs(pr, lazy=False),
+        "blest_lazy_seed": lambda pr: make_seed_blest_bfs(pr, lazy=True),
+        "blest_fused": lambda pr: make_blest_bfs(pr, lazy=False),
+        "blest_lazy_fused": lambda pr: make_blest_bfs(pr, lazy=True),
+        "blest_fused_jnp": lambda pr: make_blest_bfs(pr, lazy=False,
+                                                     use_kernels=False),
+        "blest_lazy_fused_jnp": lambda pr: make_blest_bfs(
+            pr, lazy=True, use_kernels=False),
+    }
+
+
+def _geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def run(scale: int = 9, n_sources: int = 2, json_path: str | None = None,
+        verbose: bool = True):
+    import jax
+    suite = graph_suite(scale)
+    builders = _engine_builders()
+    graphs_out = {}
+    for gname, g in suite.items():
+        rng = np.random.default_rng(0)
+        cand = np.flatnonzero(g.out_degree > 0)
+        srcs = rng.choice(cand, size=min(n_sources, len(cand)),
+                          replace=False)
+        b = build_bvss(g)
+        problem = BlestProblem.build(b)
+        ref_levels = reference_bfs(g, int(srcs[0]))
+        n_levels = (int(ref_levels[ref_levels != INF].max())
+                    if (ref_levels != INF).any() else 0)
+        engines_out = {}
+        for ename, build in builders.items():
+            fn = build(problem)
+            sec = time_engine(fn, srcs)
+            mteps = (g.m / sec / 1e6) if sec > 0 else None
+            engines_out[ename] = {"sec": sec, "mteps": mteps}
+            if verbose:
+                mteps_s = f"{mteps:.3f}" if mteps is not None else "inf"
+                print(fmt_row(f"bench_fused/{gname}/{ename}", sec * 1e6,
+                              f"mteps={mteps_s};levels={n_levels}"))
+        speedup = {
+            "blest": engines_out["blest_seed"]["sec"]
+            / max(engines_out["blest_fused"]["sec"], 1e-12),
+            "blest_lazy": engines_out["blest_lazy_seed"]["sec"]
+            / max(engines_out["blest_lazy_fused"]["sec"], 1e-12),
+            "blest_jnp": engines_out["blest_seed"]["sec"]
+            / max(engines_out["blest_fused_jnp"]["sec"], 1e-12),
+            "blest_lazy_jnp": engines_out["blest_lazy_seed"]["sec"]
+            / max(engines_out["blest_lazy_fused_jnp"]["sec"], 1e-12),
+        }
+        graphs_out[gname] = {
+            "n": int(g.n), "m": int(g.m), "num_vss": int(b.num_vss),
+            "levels": n_levels, "engines": engines_out,
+            "speedup_fused_vs_seed": speedup,
+        }
+    summary = {
+        f"geomean_speedup_{k}": _geomean(
+            [go["speedup_fused_vs_seed"][k] for go in graphs_out.values()])
+        for k in ("blest", "blest_lazy", "blest_jnp", "blest_lazy_jnp")
+    }
+    out = {
+        "bench": "pr1_fused_level_pipeline",
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "scale": scale,
+        "n_sources": int(n_sources),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "note": ("wall-clock on this host; on CPU the Pallas kernels run in "
+                 "interpret mode, so *_fused isolates pipeline fusion + "
+                 "batching while *_fused_jnp shows the same pipeline with "
+                 "jnp stand-ins (no interpreter overhead)"),
+        "graphs": graphs_out,
+        "summary": summary,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    if verbose:
+        for k, v in summary.items():
+            print(f"# {k}={v:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_pr1.json")

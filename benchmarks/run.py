@@ -1,10 +1,15 @@
 """Benchmark orchestrator — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+                                            [--fused-only]
 
-Prints ``name,us_per_call,derived`` CSV rows.  Roofline tables (E7) come
-from the dry-run artifacts: run ``python -m repro.launch.dryrun --all``
-first, then ``python -m benchmarks.roofline``.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--json`` additionally runs
+the PR-1 fused-pipeline benchmark (``benchmarks/bench_fused.py``) and
+writes its machine-readable perf-trajectory artifact (default
+``BENCH_pr1.json``); ``--fused-only`` skips the paper tables so CI can
+smoke the JSON path quickly.  Roofline tables (E7) come from the dry-run
+artifacts: run ``python -m repro.launch.dryrun --all`` first, then
+``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
@@ -17,10 +22,28 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
+    ap.add_argument("--json", nargs="?", const="BENCH_pr1.json", default=None,
+                    metavar="PATH",
+                    help="run the fused-pipeline bench and write JSON "
+                         "(default %(const)s)")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="only the fused-pipeline bench (implies --json)")
     args = ap.parse_args(argv)
     scale = 9 if args.quick else 11
     t0 = time.time()
     print("name,us_per_call,derived")
+
+    json_path = args.json
+    if args.fused_only and json_path is None:
+        json_path = "BENCH_pr1.json"
+    if json_path is not None:
+        from benchmarks import bench_fused
+        bench_fused.run(scale=min(scale, 9 if args.quick else 10),
+                        n_sources=2 if args.quick else 3,
+                        json_path=json_path)
+    if args.fused_only:
+        print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+        return
 
     from benchmarks import (fig3_window, kernel_bench, table1a_compression,
                             table1b_divergence, table2_bfs, table4_footprint)

@@ -1,0 +1,103 @@
+"""FROZEN seed BLEST engine — perf baseline only, not a production path.
+
+This is the pre-PR-1 implementation of ``make_blest_bfs`` kept verbatim so
+``benchmarks/bench_fused.py`` can report the fused-pipeline speedup against
+the exact code it replaced: a *sequential* per-block ``jax.lax.while_loop``
+around a pure-jnp pull, followed by three separate dense passes (inline
+finalise, ``_pack_bits``, ``rebuild_queue``).  Do not use it outside
+benchmarks; the live engine lives in ``repro.core.bfs``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bfs import (INF, BlestProblem, PullFn, _frontier_bytes,
+                            _pack_bits, pull_vss_jnp)
+
+
+def make_seed_blest_bfs(problem: BlestProblem, *, lazy: bool,
+                        block: int = 256, pull_impl: PullFn | None = None,
+                        max_levels: int | None = None) -> Callable:
+    """Seed Alg. 2/3 engine: sequential block loop + separate dense passes."""
+    p = problem
+    dev = p.dev
+    sigma = p.sigma
+    qcap = p.num_vss + block  # pad so dynamic_slice blocks always fit
+    dummy_vss = p.num_vss
+    pull = pull_impl or pull_vss_jnp
+    n_setbits = p.n_sets * sigma
+    n_pad = p.n_fwords * 32
+    max_lv = max_levels if max_levels is not None else p.n + 1
+
+    vss_ids_all = jnp.arange(p.num_vss, dtype=jnp.int32)
+
+    def rebuild_queue(new_bits: jnp.ndarray):
+        set_active = new_bits[:n_setbits].reshape(p.n_sets, sigma).any(axis=1)
+        vss_active = set_active[dev.virtual_to_real[:p.num_vss]]
+        pos = jnp.cumsum(vss_active.astype(jnp.int32)) - 1
+        idx = jnp.where(vss_active, pos, qcap)  # OOB -> dropped
+        Q = jnp.full((qcap,), dummy_vss, dtype=jnp.int32)
+        Q = Q.at[idx].set(vss_ids_all, mode="drop")
+        return Q, vss_active.sum().astype(jnp.int32)
+
+    def process_blocks(F, Q, count, lvl, levels, marks):
+        n_blocks = (count + block - 1) // block
+
+        def body(carry):
+            i, levels, marks = carry
+            ids = jax.lax.dynamic_slice(Q, (i * block,), (block,))
+            fbytes = _frontier_bytes(F, dev.virtual_to_real[ids], sigma)
+            hits = pull(dev.masks[ids], fbytes, sigma)      # (B, spw, 32)
+            rows = dev.row_ids[ids].reshape(-1)             # (B*spw*32,)
+            h = hits.reshape(-1)
+            if lazy:
+                marks = marks.at[rows].max(h.astype(jnp.uint8))
+            else:
+                upd = jnp.where(h, lvl, INF).astype(jnp.int32)
+                levels = levels.at[rows].min(upd)
+            return i + 1, levels, marks
+
+        def cond(carry):
+            return carry[0] < n_blocks
+
+        _, levels, marks = jax.lax.while_loop(cond, body, (jnp.int32(0),
+                                                           levels, marks))
+        return levels, marks
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[src].set(0)
+        F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+        init_bits = jnp.zeros((n_pad,), dtype=bool).at[src].set(True)
+        Q, count = rebuild_queue(init_bits)
+        marks0 = jnp.zeros((p.n + 1,), dtype=jnp.uint8)
+
+        def cond(state):
+            levels, F, Q, count, lvl = state
+            return (count > 0) & (lvl < max_lv)
+
+        def body(state):
+            levels, F, Q, count, lvl = state
+            lvl = lvl + 1
+            levels, marks = process_blocks(F, Q, count, lvl, levels, marks0)
+            if lazy:
+                new = (marks[:p.n] > 0) & (levels[:p.n] == INF)
+                levels = levels.at[:p.n].set(
+                    jnp.where(new, lvl, levels[:p.n]))
+            else:
+                new = levels[:p.n] == lvl
+            new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
+            F = _pack_bits(new_pad, p.n_fwords)
+            Q, count = rebuild_queue(new_pad)
+            return levels, F, Q, count, lvl
+
+        state = (levels, F, Q, count, jnp.int32(0))
+        levels, *_ = jax.lax.while_loop(cond, body, state)
+        return levels[:p.n]
+
+    return jax.jit(bfs)

@@ -1,9 +1,9 @@
 """BFS engines (paper §4, Algorithms 2 & 3) plus the baselines of Table 2.
 
-Every device engine runs its *entire* level loop inside one ``jit`` via
-``jax.lax.while_loop`` — the TPU analogue of the paper's fused persistent
-kernel (§4.3): control never returns to the host between levels and the
-convergence test is on-device.
+Every device engine runs its *entire* level loop inside one ``jit`` via the
+shared :mod:`repro.core.level_pipeline` driver — the TPU analogue of the
+paper's fused persistent kernel (§4.3): control never returns to the host
+between levels and the convergence test is on-device.
 
 Engines
 -------
@@ -20,21 +20,35 @@ TPU adaptation notes (DESIGN.md §2): the paper's atomic queue-append becomes
 cumsum stream-compaction; `atomicOr`/`REDG` becomes scatter-max of byte
 marks; the Alg. 3 stage-2 word sweep is a dense vectorised pass, which is
 exactly what the VPU wants.
+
+The ``blest``/``blest_lazy`` level step is FUSED (DESIGN.md §2.3): one
+batched BVSS pull over the compacted queue (Pallas ``bvss_pull`` by
+default), one scatter, and one fused finalise/pack/set-flag sweep
+(``finalize_pack_sweep``).  The queue is processed at one of two static
+widths chosen on-device from the live VSS count ("bucketing") — the
+XLA-compatible stand-in for dynamically-sized kernel launches, so
+small-frontier levels of high-diameter graphs don't pay the full-queue
+cost.  The seed's sequential per-block ``while_loop`` is gone.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bvss import BVSS, BVSSDevice, to_device
+from repro.core.level_pipeline import LevelPipeline, compose_step, run_levels
 from repro.graphs import Graph, src_of_edges, to_dense_bits
+from repro.kernels import finalize_pack_sweep, pull_vss_kernel
+from repro.kernels.ref import finalize_pack_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
+
+PULL_TILE = 128  # queue widths are padded to this (bvss_pull tile size)
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +82,7 @@ def _pack_bits(bits: jnp.ndarray, n_words: int) -> jnp.ndarray:
 
 def pull_vss_jnp(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int
                  ) -> jnp.ndarray:
-    """Pure-jnp pull over one block of VSSs.
+    """Pure-jnp pull over one batch of VSSs (oracle / non-Pallas fallback).
 
     masks:  (B, 32) uint32 — slot j of word l = mask of slice (j, l)
     fbytes: (B,)    uint32 — the σ-bit frontier word of each VSS's slice set
@@ -118,93 +132,130 @@ class BlestProblem:
 PullFn = Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
 
 
-def make_blest_bfs(problem: BlestProblem, *, lazy: bool, block: int = 256,
-                   pull_impl: PullFn | None = None,
-                   max_levels: int | None = None) -> Callable:
-    """Build the jitted BLEST BFS (Alg. 2 eager / Alg. 3 lazy)."""
+class _BlestState(NamedTuple):
+    levels: jnp.ndarray  # (n + 1,) int32, slot n = dummy row sink
+    F: jnp.ndarray       # (n_fwords,) uint32 packed frontier
+    Q: jnp.ndarray       # (qcap,) int32 compacted VSS queue, dummy-padded
+    count: jnp.ndarray   # int32 live VSS count (termination + bucket choice)
+    marks: jnp.ndarray   # (n + 1,) uint8 lazy scratch ((1,) dummy when eager)
+
+
+def _round_width(x: int) -> int:
+    return max(PULL_TILE, ((x + PULL_TILE - 1) // PULL_TILE) * PULL_TILE)
+
+
+def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
+                   pull_impl: PullFn | None = None, use_kernels: bool = True,
+                   buckets: int = 2, max_levels: int | None = None
+                   ) -> Callable:
+    """Build the jitted fused BLEST BFS (Alg. 2 eager / Alg. 3 lazy).
+
+    The level step is one batched pull over the compacted queue at a static
+    width (two cond-selected buckets by default), one scatter (min for
+    eager levels, max for lazy marks), and one fused
+    finalise + frontier-pack + set-flag sweep feeding cumsum compaction.
+
+    pull_impl:   custom pull (masks, fbytes, sigma) -> hits; overrides the
+                 kernel/jnp switch.
+    use_kernels: route pull through Pallas ``bvss_pull`` and the tail
+                 through Pallas ``finalize_pack_sweep`` (interpret-mode on
+                 CPU); False = pure-jnp fallback for both.
+    buckets:     1 = always process the full queue width; >= 2 (default)
+                 = two cond-selected widths, num_vss/8 and full (more
+                 graduations are not implemented — every extra bucket is
+                 another compiled branch).
+    """
     p = problem
     dev = p.dev
-    sigma, spw = p.sigma, 32 // p.sigma
-    qcap = p.num_vss + block  # pad so dynamic_slice blocks always fit
+    sigma = p.sigma
+    qcap = _round_width(p.num_vss)
     dummy_vss = p.num_vss
-    pull = pull_impl or pull_vss_jnp
-    n_setbits = p.n_sets * sigma
-    n_pad = p.n_fwords * 32
     max_lv = max_levels if max_levels is not None else p.n + 1
 
-    vss_ids_all = jnp.arange(p.num_vss, dtype=jnp.int32)
+    if pull_impl is not None:
+        pull = pull_impl
+    elif use_kernels:
+        pull = pull_vss_kernel
+    else:
+        pull = pull_vss_jnp
+    fin_impl = finalize_pack_sweep if use_kernels else finalize_pack_ref
+    fin = functools.partial(fin_impl, sigma=sigma, n_fwords=p.n_fwords,
+                            n_sets=p.n_sets)
 
-    def rebuild_queue(new_bits: jnp.ndarray):
-        """new_bits: (n_pad,) bool. Build Q_next from newly-visited sets by
-        cumsum stream-compaction (the TPU idiom for atomic queue append)."""
-        set_active = new_bits[:n_setbits].reshape(p.n_sets, sigma).any(axis=1)
+    # static queue widths, smallest first; the on-device count picks one
+    widths = [qcap]
+    if buckets >= 2:
+        small = _round_width((p.num_vss + 7) // 8)
+        if small < qcap:
+            widths.insert(0, small)
+
+    vss_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
+
+    def compact(set_active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """set_active (n_sets,) bool -> (Q, count) by cumsum stream-compaction
+        (the TPU idiom for the paper's atomic queue append)."""
         vss_active = set_active[dev.virtual_to_real[:p.num_vss]]
         pos = jnp.cumsum(vss_active.astype(jnp.int32)) - 1
         idx = jnp.where(vss_active, pos, qcap)  # OOB -> dropped
         Q = jnp.full((qcap,), dummy_vss, dtype=jnp.int32)
-        Q = Q.at[idx].set(vss_ids_all, mode="drop")
+        Q = Q.at[idx].set(vss_ids, mode="drop")
         return Q, vss_active.sum().astype(jnp.int32)
 
-    def process_blocks(F, Q, count, lvl, levels, marks):
-        n_blocks = (count + block - 1) // block
+    def pull_update(state: _BlestState, lvl, width: int) -> _BlestState:
+        """gather → pull → update over the first ``width`` queue slots
+        (all live entries: the queue is compacted and count <= width)."""
+        ids = jax.lax.slice_in_dim(state.Q, 0, width)
+        fbytes = _frontier_bytes(state.F, dev.virtual_to_real[ids], sigma)
+        hits = pull(dev.masks[ids], fbytes, sigma)       # (width, spw, 32)
+        rows = dev.row_ids[ids].reshape(-1)
+        h = hits.reshape(-1)
+        if lazy:
+            # Alg. 3 stage 1: fire-and-forget mark (REDG analogue)
+            marks = jnp.zeros((p.n + 1,), dtype=jnp.uint8)
+            marks = marks.at[rows].max(h.astype(jnp.uint8))
+            return state._replace(marks=marks)
+        # Alg. 2: eager visited-check-and-set (ATOMG analogue):
+        # scatter-min leaves already-visited levels untouched
+        upd = jnp.where(h, lvl, INF).astype(jnp.int32)
+        return state._replace(levels=state.levels.at[rows].min(upd))
 
-        def body(carry):
-            i, levels, marks = carry
-            ids = jax.lax.dynamic_slice(Q, (i * block,), (block,))
-            fbytes = _frontier_bytes(F, dev.virtual_to_real[ids], sigma)
-            hits = pull(dev.masks[ids], fbytes, sigma)      # (B, spw, 32)
-            rows = dev.row_ids[ids].reshape(-1)             # (B*spw*32,)
-            h = hits.reshape(-1)
-            if lazy:
-                # Alg. 3 stage 1: fire-and-forget mark (REDG analogue)
-                marks = marks.at[rows].max(h.astype(jnp.uint8))
-            else:
-                # Alg. 2: eager visited-check-and-set (ATOMG analogue):
-                # scatter-min leaves already-visited levels untouched
-                upd = jnp.where(h, lvl, INF).astype(jnp.int32)
-                levels = levels.at[rows].min(upd)
-            return i + 1, levels, marks
+    def step(state: _BlestState, lvl) -> _BlestState:
+        if len(widths) == 1:
+            return pull_update(state, lvl, widths[0])
+        small, full = widths
+        return jax.lax.cond(
+            state.count <= small,
+            lambda s, l: pull_update(s, l, small),
+            lambda s, l: pull_update(s, l, full),
+            state, lvl)
 
-        def cond(carry):
-            return carry[0] < n_blocks
+    def finalize(state: _BlestState, lvl) -> _BlestState:
+        if lazy:
+            # Alg. 3 stage 2 fused: finalise + pack + set flags in one sweep
+            lv_n, fwords, set_active = fin(state.levels[:p.n], lvl,
+                                           marks=state.marks[:p.n])
+            levels = jnp.concatenate([lv_n, state.levels[p.n:]])
+        else:
+            # eager: levels already final; the sweep just packs + flags
+            _, fwords, set_active = fin(state.levels[:p.n], lvl)
+            levels = state.levels
+        Q, count = compact(set_active)
+        return state._replace(levels=levels, F=fwords, Q=Q, count=count)
 
-        _, levels, marks = jax.lax.while_loop(cond, body, (jnp.int32(0),
-                                                           levels, marks))
-        return levels, marks
+    pipe = LevelPipeline(step=step, finalize=finalize,
+                         active=lambda s: s.count > 0)
 
     def bfs(src: jnp.ndarray) -> jnp.ndarray:
         src = jnp.asarray(src, dtype=jnp.int32)
-        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32)
-        levels = levels.at[src].set(0)
+        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32).at[src].set(0)
         F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
         F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
-        init_bits = jnp.zeros((n_pad,), dtype=bool).at[src].set(True)
-        Q, count = rebuild_queue(init_bits)
-        marks0 = jnp.zeros((p.n + 1,), dtype=jnp.uint8)
-
-        def cond(state):
-            levels, F, Q, count, lvl = state
-            return (count > 0) & (lvl < max_lv)
-
-        def body(state):
-            levels, F, Q, count, lvl = state
-            lvl = lvl + 1
-            levels, marks = process_blocks(F, Q, count, lvl, levels, marks0)
-            if lazy:
-                # Alg. 3 stage 2: dense coalesced finalisation sweep
-                new = (marks[:p.n] > 0) & (levels[:p.n] == INF)
-                levels = levels.at[:p.n].set(
-                    jnp.where(new, lvl, levels[:p.n]))
-            else:
-                new = levels[:p.n] == lvl
-            new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
-            F = _pack_bits(new_pad, p.n_fwords)
-            Q, count = rebuild_queue(new_pad)
-            return levels, F, Q, count, lvl
-
-        state = (levels, F, Q, count, jnp.int32(0))
-        levels, *_ = jax.lax.while_loop(cond, body, state)
-        return levels[:p.n]
+        set0 = jnp.zeros((p.n_sets,), dtype=bool).at[src // sigma].set(True)
+        Q, count = compact(set0)
+        marks0 = jnp.zeros((p.n + 1 if lazy else 1,), dtype=jnp.uint8)
+        state = _BlestState(levels, F, Q, count, marks0)
+        state, _ = run_levels(pipe, state, max_levels=max_lv)
+        return state.levels[:p.n]
 
     return jax.jit(bfs)
 
@@ -212,6 +263,12 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool, block: int = 256,
 # ---------------------------------------------------------------------------
 # BRS baseline (BerryBees-like): frontier-oblivious slice-set sweep
 # ---------------------------------------------------------------------------
+class _BrsState(NamedTuple):
+    levels: jnp.ndarray
+    F: jnp.ndarray
+    cont: jnp.ndarray
+
+
 def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
                  ) -> Callable:
     p = problem
@@ -221,34 +278,34 @@ def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
     max_lv = max_levels if max_levels is not None else p.n + 1
     all_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
 
+    # every slice set visited, every level (paper drawback #2)
+    def gather(s: _BrsState):
+        return (dev.masks[all_ids],
+                _frontier_bytes(s.F, dev.virtual_to_real[all_ids], sigma))
+
+    def update(s: _BrsState, hits, lvl) -> _BrsState:
+        rows = dev.row_ids[all_ids].reshape(-1)
+        upd = jnp.where(hits.reshape(-1), lvl, INF).astype(jnp.int32)
+        return s._replace(levels=s.levels.at[rows].min(upd))
+
+    def finalize(s: _BrsState, lvl) -> _BrsState:
+        new = s.levels[:p.n] == lvl
+        new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
+        return s._replace(F=_pack_bits(new_pad, p.n_fwords), cont=new.any())
+
+    pipe = LevelPipeline(
+        step=compose_step(gather, lambda m, fb: pull_vss_jnp(m, fb, sigma),
+                          update),
+        finalize=finalize, active=lambda s: s.cont)
+
     def bfs(src: jnp.ndarray) -> jnp.ndarray:
         src = jnp.asarray(src, dtype=jnp.int32)
-        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32)
-        levels = levels.at[src].set(0)
+        levels = jnp.full((p.n + 1,), INF, dtype=jnp.int32).at[src].set(0)
         F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
         F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
-
-        def cond(state):
-            _, _, cont, lvl = state
-            return cont & (lvl < max_lv)
-
-        def body(state):
-            levels, F, _, lvl = state
-            lvl = lvl + 1
-            # every slice set visited, every level (paper drawback #2)
-            fbytes = _frontier_bytes(F, dev.virtual_to_real[all_ids], sigma)
-            hits = pull_vss_jnp(dev.masks[all_ids], fbytes, sigma)
-            rows = dev.row_ids[all_ids].reshape(-1)
-            upd = jnp.where(hits.reshape(-1), lvl, INF).astype(jnp.int32)
-            levels = levels.at[rows].min(upd)
-            new = levels[:p.n] == lvl
-            new_pad = jnp.zeros((n_pad,), dtype=bool).at[:p.n].set(new)
-            F = _pack_bits(new_pad, p.n_fwords)
-            return levels, F, new.any(), lvl
-
-        state = (levels, F, jnp.bool_(True), jnp.int32(0))
-        levels, *_ = jax.lax.while_loop(cond, body, state)
-        return levels[:p.n]
+        state = _BrsState(levels, F, jnp.bool_(True))
+        state, _ = run_levels(pipe, state, max_levels=max_lv)
+        return state.levels[:p.n]
 
     return jax.jit(bfs)
 
@@ -353,10 +410,17 @@ def make_csr_bfs(g: Graph, mode: str = "push", *, alpha: float = 15.0,
 # ---------------------------------------------------------------------------
 # engine registry
 # ---------------------------------------------------------------------------
-def make_engine(g: Graph, engine: str, *, sigma: int = 8, block: int = 256,
-                bvss: BVSS | None = None, pull_impl: PullFn | None = None
-                ) -> Callable:
-    """Build a jitted BFS callable ``f(src) -> levels`` for the named engine."""
+def make_engine(g: Graph, engine: str, *, sigma: int = 8,
+                bvss: BVSS | None = None, pull_impl: PullFn | None = None,
+                use_kernels: bool = True, buckets: int = 2,
+                block: int | None = None) -> Callable:
+    """Build a jitted BFS callable ``f(src) -> levels`` for the named engine.
+
+    ``block`` is accepted for backwards compatibility and ignored: the fused
+    pipeline batches the whole compacted queue instead of slicing it into
+    sequential blocks.
+    """
+    del block
     if engine == "dense_pull":
         return make_dense_pull_bfs(g)
     if engine in ("csr_push", "csr_pull", "dirop"):
@@ -369,7 +433,8 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8, block: int = 256,
         if engine == "brs":
             return make_brs_bfs(problem)
         return make_blest_bfs(problem, lazy=(engine == "blest_lazy"),
-                              block=block, pull_impl=pull_impl)
+                              pull_impl=pull_impl, use_kernels=use_kernels,
+                              buckets=buckets)
     raise ValueError(f"unknown engine {engine!r}")
 
 

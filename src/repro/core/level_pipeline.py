@@ -1,0 +1,71 @@
+"""Shared BFS level-step skeleton (DESIGN.md §2.3).
+
+Every device engine — eager BLEST (Alg. 2), lazy BLEST (Alg. 3), the BRS
+baseline sweep, and the multi-source bit-SpMM path — performs the same
+four-stage level step:
+
+    gather   frontier operands for the pull (frontier bytes / bit columns)
+    pull     the wide slice×frontier product (Pallas VPU / MXU kernel)
+    update   scatter the hits into levels or marks
+    finalize finalise levels + rebuild the frontier representation
+             (pack words, flag sets, compact the queue)
+
+``LevelPipeline`` captures that shape; ``run_levels`` is the single
+on-device ``while_loop`` driver all engines share, so control never
+returns to the host between levels (the TPU analogue of the paper's
+persistent kernel, §4.3) and the convergence test is on-device.
+
+``step`` is one fused gather→pull→update pass.  Engines whose pull is a
+plain composition use :func:`compose_step`; the BLEST engines build a
+bucketed step instead (two statically-shaped queue widths selected by
+``lax.cond`` on the live VSS count — the XLA-compatible stand-in for the
+paper's dynamically-sized kernel launches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+State = Any  # engine-specific pytree carried through the level loop
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPipeline:
+    """One BFS level = ``step`` (gather → pull → update) then ``finalize``
+    (finalise / pack / compact); ``active`` is the on-device continuation
+    predicate."""
+
+    step: Callable[[State, jnp.ndarray], State]
+    finalize: Callable[[State, jnp.ndarray], State]
+    active: Callable[[State], jnp.ndarray]
+
+
+def compose_step(gather: Callable[[State], tuple],
+                 pull: Callable[..., jnp.ndarray],
+                 update: Callable[[State, jnp.ndarray, jnp.ndarray], State]
+                 ) -> Callable[[State, jnp.ndarray], State]:
+    """Fuse the three leading stages into one ``step`` callable."""
+    def step(state: State, lvl: jnp.ndarray) -> State:
+        return update(state, pull(*gather(state)), lvl)
+    return step
+
+
+def run_levels(pipe: LevelPipeline, state: State, *, max_levels: int
+               ) -> tuple[State, jnp.ndarray]:
+    """Run the whole level loop on device; returns (final state, n_levels)."""
+    def cond(carry):
+        st, lvl = carry
+        return pipe.active(st) & (lvl < max_levels)
+
+    def body(carry):
+        st, lvl = carry
+        lvl = lvl + 1
+        st = pipe.step(st, lvl)
+        st = pipe.finalize(st, lvl)
+        return st, lvl
+
+    state, lvl = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
+    return state, lvl

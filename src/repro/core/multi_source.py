@@ -1,24 +1,34 @@
 """Multi-source BFS as bit-SpMM on the MXU (paper §2 + §7 future work).
 
 Stacking S frontiers column-wise turns the SpMSpV pull into an SpMM; on TPU
-this is where the MXU path pays off (DESIGN §2.2): one 128×128 int8 MMA
+this is where the MXU path pays off (DESIGN.md §2.2): one 128×128 int8 MMA
 resolves 128·128 Boolean dot products.  Used by the closeness-centrality
 example and benchmarked against S independent single-source runs.
+
+The level loop rides the same :class:`~repro.core.level_pipeline.LevelPipeline`
+skeleton as the single-source engines: gather = the stacked frontier
+columns, pull = ``bit_spmm``, update = the dense finalise (no pack/compact —
+the frontier representation *is* the dense column block).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.level_pipeline import LevelPipeline, compose_step, run_levels
 from repro.graphs import Graph, to_dense_bits
 from repro.kernels import bit_spmm
 from repro.kernels.ref import bit_spmm_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
+
+
+class _MSState(NamedTuple):
+    levels: jnp.ndarray  # (n, S) int32
+    X: jnp.ndarray       # (n, S) int8 stacked frontier columns
 
 
 def make_multi_source_bfs(g: Graph, n_sources: int, *,
@@ -31,28 +41,26 @@ def make_multi_source_bfs(g: Graph, n_sources: int, *,
     spmm = bit_spmm if use_kernel else bit_spmm_ref
     max_lv = max_levels if max_levels is not None else n + 1
 
+    def gather(s: _MSState):
+        return adj, s.X
+
+    def update(s: _MSState, pop, lvl) -> _MSState:
+        new = (pop > 0) & (s.levels == INF)
+        return _MSState(levels=jnp.where(new, lvl, s.levels),
+                        X=new.astype(jnp.int8))
+
+    pipe = LevelPipeline(step=compose_step(gather, spmm, update),
+                         finalize=lambda s, lvl: s,
+                         active=lambda s: (s.X != 0).any())
+
     def bfs(sources: jnp.ndarray) -> jnp.ndarray:
         sources = jnp.asarray(sources, dtype=jnp.int32)
         levels = jnp.full((n, S), INF, dtype=jnp.int32)
         levels = levels.at[sources, jnp.arange(S)].set(0)
         X = jnp.zeros((n, S), dtype=jnp.int8)
         X = X.at[sources, jnp.arange(S)].set(1)
-
-        def cond(state):
-            return state[2] & (state[3] < max_lv)
-
-        def body(state):
-            levels, X, _, lvl = state
-            lvl = lvl + 1
-            pop = spmm(adj, X)                       # (n, S) popcounts
-            new = (pop > 0) & (levels == INF)
-            levels = jnp.where(new, lvl, levels)
-            X = new.astype(jnp.int8)
-            return levels, X, new.any(), lvl
-
-        state = (levels, X, jnp.bool_(True), jnp.int32(0))
-        levels, *_ = jax.lax.while_loop(cond, body, state)
-        return levels
+        state, _ = run_levels(pipe, _MSState(levels, X), max_levels=max_lv)
+        return state.levels
 
     return jax.jit(bfs)
 

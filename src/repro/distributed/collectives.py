@@ -17,12 +17,22 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` appeared after 0.4.37; ``psum(1, axis)`` is the
+    portable idiom (constant-folded to the mesh axis size under tracing).
+    Shared by every named-axis user in the repo — don't re-inline the
+    version branch."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 def ring_allgather_matmul(x_blk: jnp.ndarray, w_local: jnp.ndarray,
                           axis_name: str) -> jnp.ndarray:
     """Per-device: x_blk (M, K/n) — this device's K block of x;
     w_local (K, N/n) — full-K rows of this device's N shard.
     Returns y_local (M, N/n) = full_x @ w_local."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     kb = x_blk.shape[1]
     perm = [(i, (i + 1) % n) for i in range(n)]

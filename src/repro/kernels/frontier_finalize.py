@@ -1,16 +1,30 @@
-"""Pallas TPU kernel: lazy-update finalisation sweep (paper Alg. 3 stage 2).
+"""Pallas TPU kernels for the end-of-level sweep (paper Alg. 3 stage 2).
 
 The paper replaces scattered atomic updates with one dense, fully-coalesced
 pass over the visited bitmap.  On TPU this is the *native* idiom — a pure
-elementwise VPU sweep over vertex tiles:
+elementwise VPU sweep over vertex tiles.
 
-    new       = (marks > 0) & (levels == INF)
-    levels'   = new ? lvl : levels
-    new_flags = new                      (consumed by frontier pack + queue
-                                          compaction outside)
+Two entry points:
 
-Fusing the three outputs into one kernel saves two extra HBM passes over the
-level array per BFS level, mirroring the paper's cache-locality argument.
+``finalize_sweep``
+    The original Alg.-3 stage-2 kernel: ``levels' , new`` from ``marks``.
+    Kept as the minimal unit (and as the §Perf baseline for the fused one).
+
+``finalize_pack_sweep``
+    The fused level-step tail (DESIGN.md §2.3).  One sweep over the vertex
+    tiles emits all three per-level dense products at once:
+
+        levels'     = finalised level array
+        fwords      = packed uint32 frontier words (bit v = vertex v new)
+        set_active  = per-slice-set "has a new vertex" flags (the input to
+                      cumsum queue compaction)
+
+    which replaces the seed's three separate dense passes (finalise,
+    ``_pack_bits``, the set-reduction half of ``rebuild_queue``) — three HBM
+    round-trips over the vertex arrays collapse into one, mirroring the
+    paper's cache-locality argument for the stage-2 sweep.  Eager (Alg. 2)
+    mode derives newness from ``levels == lvl`` (the scatter-min already
+    wrote the levels); lazy (Alg. 3) mode finalises from byte marks.
 """
 from __future__ import annotations
 
@@ -21,9 +35,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 INF32 = (1 << 31) - 1  # python literal so the kernel captures no tracers
-TILE = 8 * 128
+TILE = 8 * 128  # divisible by 32 (word pack) and every σ | 32 (set flags)
 
 
+# ---------------------------------------------------------------------------
+# original minimal finalise (kept: unit kernel + baseline)
+# ---------------------------------------------------------------------------
 def _finalize_kernel(marks_ref, levels_ref, lvl_ref, levels_out_ref,
                      new_ref):
     marks = marks_ref[...]
@@ -70,3 +87,101 @@ def finalize_sweep(marks: jnp.ndarray, levels: jnp.ndarray, lvl: jnp.ndarray,
         interpret=interpret,
     )(marks, levels, lvl_arr)
     return levels_out[:N], new[:N].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# fused finalise + frontier-pack + set-active sweep
+# ---------------------------------------------------------------------------
+def _emit_packed(new, fw_out_ref, act_out_ref, sigma: int):
+    """Shared tail: write packed frontier words + set flags."""
+    bits = new.astype(jnp.uint32).reshape(-1, 32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    fw_out_ref[...] = jnp.sum(bits * weights[None, :], axis=1,
+                              dtype=jnp.uint32)
+    act_out_ref[...] = jnp.any(new.reshape(-1, sigma), axis=1
+                               ).astype(jnp.int8)
+
+
+def _finalize_pack_lazy(marks_ref, levels_ref, lvl_ref, lv_out_ref,
+                        fw_out_ref, act_out_ref, *, sigma: int):
+    levels = levels_ref[...]
+    lvl = lvl_ref[0]
+    new = (marks_ref[...] > 0) & (levels == INF32)
+    lv_out_ref[...] = jnp.where(new, lvl, levels)
+    _emit_packed(new, fw_out_ref, act_out_ref, sigma)
+
+
+def _finalize_pack_eager(levels_ref, lvl_ref, fw_out_ref, act_out_ref, *,
+                         sigma: int):
+    # eager scatter-min already wrote the levels: no levels output stream,
+    # so the hot path pays two dense writes (words + flags), not three
+    new = levels_ref[...] == lvl_ref[0]
+    _emit_packed(new, fw_out_ref, act_out_ref, sigma)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "n_fwords", "n_sets",
+                                             "interpret"))
+def finalize_pack_sweep(levels: jnp.ndarray, lvl: jnp.ndarray, *,
+                        sigma: int, n_fwords: int, n_sets: int,
+                        marks: jnp.ndarray | None = None,
+                        interpret: bool | None = None
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One fused sweep: finalise + frontier-pack + set-active flags.
+
+    levels: (N,) int32 over real vertices (N = n).
+    lvl:    scalar int32 current level (>= 1).
+    marks:  (N,) uint8 lazy marks, or None for eager mode
+            (newness = ``levels == lvl``; the returned levels ARE the input
+            array — eager mode emits no levels stream at all).
+    Returns ``(levels' (N,) int32, fwords (n_fwords,) uint32,
+    set_active (n_sets,) bool)``; frontier bit ``v`` of fwords is vertex v,
+    set_active[s] covers vertices ``σs .. σ(s+1)-1``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    N = levels.shape[0]
+    need = max(N, n_fwords * 32, n_sets * sigma)
+    Np = ((need + TILE - 1) // TILE) * TILE
+    # pad with levels=0: for lvl >= 1 padded vertices are never "new" in
+    # either mode (0 != lvl and 0 != INF)
+    levels_p = jnp.pad(levels, (0, Np - N), constant_values=0)
+    lvl_arr = jnp.asarray(lvl, dtype=jnp.int32).reshape(1)
+    grid = (Np // TILE,)
+
+    pack_specs = [
+        pl.BlockSpec((TILE // 32,), lambda i: (i,)),
+        pl.BlockSpec((TILE // sigma,), lambda i: (i,)),
+    ]
+    pack_shape = [
+        jax.ShapeDtypeStruct((Np // 32,), jnp.uint32),
+        jax.ShapeDtypeStruct((Np // sigma,), jnp.int8),
+    ]
+    if marks is None:
+        fwords, act = pl.pallas_call(
+            functools.partial(_finalize_pack_eager, sigma=sigma),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TILE,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pack_specs,
+            out_shape=pack_shape,
+            interpret=interpret,
+        )(levels_p, lvl_arr)
+        lv_out = levels  # untouched by eager finalise: no dense write
+    else:
+        marks_p = jnp.pad(marks, (0, Np - N))
+        lv_full, fwords, act = pl.pallas_call(
+            functools.partial(_finalize_pack_lazy, sigma=sigma),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TILE,), lambda i: (i,)),
+                pl.BlockSpec((TILE,), lambda i: (i,)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=[pl.BlockSpec((TILE,), lambda i: (i,))] + pack_specs,
+            out_shape=[jax.ShapeDtypeStruct((Np,), jnp.int32)] + pack_shape,
+            interpret=interpret,
+        )(marks_p, levels_p, lvl_arr)
+        lv_out = lv_full[:N]
+    return (lv_out, fwords[:n_fwords], act[:n_sets].astype(bool))

@@ -37,3 +37,25 @@ def finalize_sweep_ref(marks: jnp.ndarray, levels: jnp.ndarray,
     """Oracle for kernels.finalize_sweep."""
     new = (marks > 0) & (levels == INF32)
     return jnp.where(new, jnp.int32(lvl), levels), new
+
+
+def finalize_pack_ref(levels: jnp.ndarray, lvl, *, sigma: int,
+                      n_fwords: int, n_sets: int,
+                      marks: jnp.ndarray | None = None
+                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels.finalize_pack_sweep — the inline jnp finalise +
+    ``_pack_bits`` + set-reduction passes the fused kernel replaces."""
+    if marks is None:                       # eager: scatter-min already ran
+        new = levels == jnp.int32(lvl)
+        lv_out = levels
+    else:                                   # lazy: finalise from byte marks
+        new = (marks > 0) & (levels == INF32)
+        lv_out = jnp.where(new, jnp.int32(lvl), levels)
+    n_pad = n_fwords * 32
+    bits = jnp.zeros((n_pad,), dtype=bool).at[:new.shape[0]].set(new)
+    b = bits.reshape(n_fwords, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    fwords = jnp.sum(b * weights[None, :], axis=1, dtype=jnp.uint32)
+    sbits = jnp.zeros((n_sets * sigma,), dtype=bool).at[:new.shape[0]].set(new)
+    set_active = sbits.reshape(n_sets, sigma).any(axis=1)
+    return lv_out, fwords, set_active

@@ -68,8 +68,10 @@ class ServeEngine:
         if len(prompt) > S:
             prompt = prompt[-S:]
         pad = S - len(prompt)
-        # left-pad by repeating the first token (harmless for synthetic LM)
-        padded = np.concatenate([np.full(pad, prompt[0], np.int32), prompt])
+        # left-pad by repeating the first token (harmless for synthetic LM);
+        # an empty prompt degenerates to a BOS/0-token prefill
+        fill = prompt[0] if len(prompt) else np.int32(0)
+        padded = np.concatenate([np.full(pad, fill, np.int32), prompt])
         logits, pc = self._prefill(self.params, jnp.asarray(padded[None, :]))
         nxt = int(jnp.argmax(logits[0]))
         # scatter the single-request cache into the pool at `slot`

@@ -63,9 +63,11 @@ def compressed_psum(grads, residuals, axis_names):
     dequantising the sum with the shared scale is exact too (the only error
     is per-replica rounding, which error feedback carries forward).
     """
+    from repro.distributed.collectives import axis_size
+
     n = 1
     for ax in axis_names:
-        n = n * jax.lax.axis_size(ax)
+        n = n * axis_size(ax)
 
     def reduce_one(g, r):
         local = g.astype(jnp.float32) + r

@@ -1,0 +1,75 @@
+"""Shared test configuration.
+
+Four test modules use ``hypothesis`` property tests.  The library is a
+dev-only dependency (see ``requirements-dev.txt``); when it is absent we
+install a minimal deterministic shim *before* collection so the suite
+still runs: ``@given`` draws a fixed, seeded sample of examples instead
+of hypothesis' adaptive search.  The shim covers exactly the API surface
+the tests use (``given``, ``settings``, ``strategies.integers``,
+``strategies.sampled_from``).
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_SHIM_SEED = 0xB1E57  # deterministic: same examples every run
+_SHIM_MAX_EXAMPLES = 10  # cap so the fallback stays CI-fast
+
+
+def _install_hypothesis_shim() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return  # real library present — use it
+    except ImportError:
+        pass
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    mod.__shim__ = True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def given(**strategies):
+        def deco(f):
+            # NOTE: plain (*args, **kwargs) signature on purpose — pytest
+            # must not mistake the drawn parameters for fixtures.
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples",
+                                _SHIM_MAX_EXAMPLES), _SHIM_MAX_EXAMPLES)
+                rng = random.Random(_SHIM_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    f(*args, **drawn, **kwargs)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            wrapper.__module__ = f.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _SHIM_MAX_EXAMPLES, deadline=None, **_):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    st.integers = integers
+    st.sampled_from = sampled_from
+    mod.strategies = st
+    mod.given = given
+    mod.settings = settings
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_shim()

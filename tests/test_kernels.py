@@ -4,7 +4,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels import bit_spmm, bvss_pull, finalize_sweep
+from repro.kernels import (bit_spmm, bvss_pull, finalize_pack_sweep,
+                           finalize_sweep)
 from repro.kernels import ref
 
 RNG = np.random.default_rng(0)
@@ -66,3 +67,63 @@ def test_finalize_sweep_property(N, lvl, seed):
     new = np.asarray(g_new)
     assert (new <= (marks > 0)).all()
     assert (np.asarray(g_lv)[new] == lvl).all()
+
+
+@pytest.mark.parametrize("sigma", [4, 8, 16, 32])
+@pytest.mark.parametrize("N", [1, 31, 257, 4000])
+@pytest.mark.parametrize("mode", ["eager", "lazy"])
+def test_finalize_pack_sweep_matches_inline_finalise(sigma, N, mode):
+    """The fused finalise + frontier-pack + set-flag kernel must match the
+    three inline jnp passes it replaces (ref.finalize_pack_ref)."""
+    rng = np.random.default_rng(N * sigma)
+    lvl = 2
+    n_sets = (N + sigma - 1) // sigma
+    n_fwords = (n_sets * sigma + 31) // 32
+    levels = np.where(rng.random(N) < 0.5, np.int32(2 ** 31 - 1),
+                      rng.integers(0, lvl + 1, N).astype(np.int32))
+    marks = rng.integers(0, 2, N).astype(np.uint8)
+    kw = dict(sigma=sigma, n_fwords=n_fwords, n_sets=n_sets)
+    if mode == "lazy":
+        kw["marks"] = jnp.asarray(marks)
+    got = finalize_pack_sweep(jnp.asarray(levels), lvl, **kw)
+    want = ref.finalize_pack_ref(jnp.asarray(levels), lvl, **kw)
+    for name, (gt, wt) in zip(("levels", "fwords", "set_active"),
+                              zip(got, want)):
+        np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt),
+                                      err_msg=name)
+    # invariants: every set flagged active contains a new vertex, packed
+    # word bits agree with the new mask
+    lv_out, fwords, act = (np.asarray(x) for x in got)
+    if mode == "lazy":
+        new = (marks > 0) & (levels == np.int32(2 ** 31 - 1))
+    else:
+        new = levels == lvl
+    bits = np.zeros(n_fwords * 32, dtype=bool)
+    bits[:N] = new
+    packed = np.packbits(bits.reshape(n_fwords, 32), axis=1,
+                         bitorder="little").view("<u4").ravel()
+    np.testing.assert_array_equal(fwords, packed)
+    sbits = np.zeros(n_sets * sigma, dtype=bool)
+    sbits[:N] = new
+    np.testing.assert_array_equal(act, sbits.reshape(n_sets, sigma).any(1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.integers(1, 3000), lvl=st.integers(1, 60),
+       seed=st.integers(0, 1000))
+def test_finalize_pack_sweep_property(N, lvl, seed):
+    rng = np.random.default_rng(seed)
+    sigma = 8
+    n_sets = (N + sigma - 1) // sigma
+    n_fwords = (n_sets * sigma + 31) // 32
+    marks = rng.integers(0, 2, N).astype(np.uint8)
+    levels = np.where(rng.random(N) < 0.5, np.int32(2 ** 31 - 1),
+                      rng.integers(0, lvl, N).astype(np.int32))
+    got = finalize_pack_sweep(jnp.asarray(levels), lvl, sigma=sigma,
+                              n_fwords=n_fwords, n_sets=n_sets,
+                              marks=jnp.asarray(marks))
+    want = ref.finalize_pack_ref(jnp.asarray(levels), lvl, sigma=sigma,
+                                 n_fwords=n_fwords, n_sets=n_sets,
+                                 marks=jnp.asarray(marks))
+    for gt, wt in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))

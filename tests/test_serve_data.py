@@ -90,3 +90,20 @@ def test_full_graph_batch_shapes():
     assert fb.node_feat.shape == (g.n + 1, 16)
     assert (fb.node_feat[-1] == 0).all()       # dummy row zero
     assert fb.senders.max() < g.n
+
+
+def test_serve_engine_empty_prompt():
+    """Regression: a zero-length prompt must prefill as BOS/0 padding
+    instead of crashing on ``prompt[0]``."""
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+                   d_head=16, d_ff=64, vocab=64, window=16,
+                   local_global=(1, 1))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, max_batch=2, max_len=32, prompt_len=8)
+    reqs = [Request(prompt=np.array([], dtype=np.int32), max_new_tokens=4),
+            Request(prompt=np.array([3, 5], dtype=np.int32),
+                    max_new_tokens=4)]
+    outs = eng.run(reqs)
+    assert len(outs) == 2
+    assert len(outs[0].tokens) == 4          # empty prompt: only generated
+    assert all(0 <= t < 64 for t in outs[0].tokens)
