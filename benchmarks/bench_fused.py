@@ -19,12 +19,11 @@ plus fused-vs-seed speedups and their geomean.
 from __future__ import annotations
 
 import json
-import math
-import time
 
 import numpy as np
 
-from benchmarks.common import fmt_row, graph_suite, time_engine
+from benchmarks.common import (bench_envelope, fmt_row, geomean, graph_suite,
+                               time_engine)
 from benchmarks.seed_baseline import make_seed_blest_bfs
 from repro.core import build_bvss, reference_bfs
 from repro.core.bfs import INF, BlestProblem, make_blest_bfs
@@ -43,14 +42,8 @@ def _engine_builders():
     }
 
 
-def _geomean(xs):
-    xs = [x for x in xs if x > 0]
-    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
-
-
 def run(scale: int = 9, n_sources: int = 2, json_path: str | None = None,
         verbose: bool = True):
-    import jax
     suite = graph_suite(scale)
     builders = _engine_builders()
     graphs_out = {}
@@ -90,17 +83,13 @@ def run(scale: int = 9, n_sources: int = 2, json_path: str | None = None,
             "speedup_fused_vs_seed": speedup,
         }
     summary = {
-        f"geomean_speedup_{k}": _geomean(
+        f"geomean_speedup_{k}": geomean(
             [go["speedup_fused_vs_seed"][k] for go in graphs_out.values()])
         for k in ("blest", "blest_lazy", "blest_jnp", "blest_lazy_jnp")
     }
     out = {
-        "bench": "pr1_fused_level_pipeline",
-        "backend": jax.default_backend(),
-        "pallas_interpret": jax.default_backend() == "cpu",
-        "scale": scale,
+        **bench_envelope("pr1_fused_level_pipeline", scale),
         "n_sources": int(n_sources),
-        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "note": ("wall-clock on this host; on CPU the Pallas kernels run in "
                  "interpret mode, so *_fused isolates pipeline fusion + "
                  "batching while *_fused_jnp shows the same pipeline with "

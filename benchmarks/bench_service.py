@@ -1,0 +1,195 @@
+"""PR-2 GraphSession serving benchmark: batched waves vs sequential BFS,
+and BVSS vs dense-adjacency multi-source.
+
+Per graph of the suite:
+
+* ``serve`` — N single-source level queries answered (a) sequentially
+  through the fused single-source engine and (b) as one batched
+  multi-source wave through :class:`repro.serve.GraphSession` (slot pool,
+  lock-step levels, mid-flight refills).  Wave answers are verified
+  bit-identical to ``reference_bfs`` per column before timing is reported.
+* ``multi_source`` — the fixed-cohort multi-source engine on the BVSS
+  bit-SpMM path (`core/multi_source.py`) vs the FROZEN pre-PR dense
+  baseline below (``to_dense_bits`` adjacency + ``bit_spmm``), with the
+  adjacency footprint of each (the dense bitmap is O(n²/32) words; the
+  BVSS scales with slices).
+
+``run(..., json_path=...)`` is invoked by ``benchmarks/run.py --json`` and
+feeds the ``service`` suite of ``BENCH_pr2.json``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+from benchmarks.common import bench_envelope, fmt_row, geomean, graph_suite
+from repro.core import INF, reference_bfs
+from repro.serve import GraphSession
+
+
+# ---------------------------------------------------------------------------
+# FROZEN baseline: the seed/PR-1 dense-adjacency multi-source implementation
+# ---------------------------------------------------------------------------
+def make_dense_multi_source_bfs(g, n_sources: int) -> Callable:
+    """The pre-PR-2 implementation, kept verbatim as the perf baseline: a
+    dense ``to_dense_bits`` pull adjacency resolved through ``bit_spmm``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.level_pipeline import (LevelPipeline, compose_step,
+                                           run_levels)
+    from repro.graphs import to_dense_bits
+    from repro.kernels import bit_spmm
+
+    class _MSState(NamedTuple):
+        levels: jnp.ndarray
+        X: jnp.ndarray
+
+    n = g.n
+    adj = jnp.asarray(to_dense_bits(g))      # (n, ceil(n/32)) u32
+    S = n_sources
+
+    def gather(s):
+        return adj, s.X
+
+    def update(s, pop, lvl):
+        new = (pop > 0) & (s.levels == INF)
+        return _MSState(levels=jnp.where(new, lvl, s.levels),
+                        X=new.astype(jnp.int8))
+
+    pipe = LevelPipeline(step=compose_step(gather, bit_spmm, update),
+                         finalize=lambda s, lvl: s,
+                         active=lambda s: (s.X != 0).any())
+
+    def bfs(sources):
+        sources = jnp.asarray(sources, dtype=jnp.int32)
+        levels = jnp.full((n, S), INF, dtype=jnp.int32)
+        levels = levels.at[sources, jnp.arange(S)].set(0)
+        X = jnp.zeros((n, S), dtype=jnp.int8)
+        X = X.at[sources, jnp.arange(S)].set(1)
+        state, _ = run_levels(pipe, _MSState(levels, X), max_levels=n + 1)
+        return state.levels
+
+    return jax.jit(bfs)
+
+
+def _median_time(fn, arg, reps: int = 3) -> float:
+    """Median seconds per call (post-warm), matching time_engine's idiom."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        np.asarray(fn(arg))
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
+        verbose: bool = True) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core.multi_source import make_multi_source_bfs
+
+    suite = graph_suite(scale)
+    graphs_out = {}
+    for gname, g in suite.items():
+        rng = np.random.default_rng(0)
+        sess = GraphSession(g, max_batch=min(8, n_queries), w=512)
+        queries = [int(q) for q in rng.integers(0, g.n, n_queries)]
+
+        # -- serve: batched wave vs N sequential single-source runs --------
+        sess.levels(queries[0])                       # warm both paths
+        sess.levels_batch(queries[: min(2, len(queries))])
+        t0 = time.time()
+        seq = [sess.levels(q) for q in queries]
+        t_seq = time.time() - t0
+        t0 = time.time()
+        wave = sess.levels_batch(queries)
+        t_wave = time.time() - t0
+        verified = all(
+            (lv == reference_bfs(g, q)).all() and (lv == lv_s).all()
+            for q, lv, lv_s in zip(queries, wave, seq))
+        assert verified, f"{gname}: wave levels differ from reference_bfs"
+        serve = {
+            "n_queries": n_queries, "max_batch": sess.max_batch,
+            "sequential_sec": t_seq, "wave_sec": t_wave,
+            "speedup": t_seq / max(t_wave, 1e-12), "verified": verified,
+        }
+
+        # -- multi-source: BVSS bit-SpMM vs frozen dense baseline ----------
+        # the BVSS engine rides the session's prepared (ordered) structure,
+        # so bvss_static_bytes below describes exactly the timed engine;
+        # sources go in internal ids, levels come back out via the perm
+        S = min(8, n_queries)
+        srcs_orig = rng.integers(0, g.n, S).astype(np.int32)
+        assert sess.prepared.problem is not None
+        f_bvss = make_multi_source_bfs(None, S,
+                                       problem=sess.prepared.problem)
+        f_dense = make_dense_multi_source_bfs(g, S)
+        internal = jnp.asarray(sess.perm[srcs_orig].astype(np.int32))
+        srcs = jnp.asarray(srcs_orig)
+        lv_b = np.asarray(f_bvss(internal))           # warm + verify
+        lv_d = np.asarray(f_dense(srcs))
+        np.testing.assert_array_equal(lv_b[sess.perm], lv_d)
+        t_bvss = _median_time(f_bvss, internal)
+        t_dense = _median_time(f_dense, srcs)
+        n_words = (g.n + 31) // 32
+        ms = {
+            "n_sources": S, "bvss_sec": t_bvss, "dense_sec": t_dense,
+            "speedup_bvss_vs_dense": t_dense / max(t_bvss, 1e-12),
+            "dense_adjacency_bytes": int(g.n * n_words * 4),
+            "bvss_static_bytes": int(sess.bvss.memory_bytes()["bvss"]),
+        }
+
+        social = sess.ordering == "jaccard_windows"
+        graphs_out[gname] = {
+            "n": int(g.n), "m": int(g.m),
+            "social_like": social, "ordering": sess.ordering,
+            "engine": sess.engine_name,
+            "serve": serve, "multi_source": ms,
+        }
+        if verbose:
+            print(fmt_row(f"bench_service/{gname}/serve", t_wave * 1e6,
+                          f"speedup={serve['speedup']:.2f};social={social}"))
+            print(fmt_row(f"bench_service/{gname}/multi_source",
+                          t_bvss * 1e6,
+                          f"vs_dense={ms['speedup_bvss_vs_dense']:.2f}"))
+
+    social_graphs = [go for go in graphs_out.values() if go["social_like"]]
+    summary = {
+        "geomean_wave_speedup": geomean(
+            [go["serve"]["speedup"] for go in graphs_out.values()]),
+        "geomean_wave_speedup_social": geomean(
+            [go["serve"]["speedup"] for go in social_graphs]),
+        "geomean_bvss_vs_dense": geomean(
+            [go["multi_source"]["speedup_bvss_vs_dense"]
+             for go in graphs_out.values()]),
+        "all_verified": all(go["serve"]["verified"]
+                            for go in graphs_out.values()),
+    }
+    out = {
+        **bench_envelope("pr2_graph_session_service", scale),
+        "note": ("wave = GraphSession slot-pool serving (one batched BVSS "
+                 "bit-SpMM pull per lock-step level, host refills between "
+                 "levels); sequential = the same queries one-at-a-time "
+                 "through the fused single-source engine; multi_source "
+                 "compares the BVSS SpMM engine against the frozen dense "
+                 "to_dense_bits baseline"),
+        "graphs": graphs_out,
+        "summary": summary,
+    }
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    if verbose:
+        for k, v in summary.items():
+            print(f"# {k}={v if isinstance(v, bool) else f'{v:.2f}x'}")
+    return out
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_service.json")

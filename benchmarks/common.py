@@ -13,6 +13,7 @@ benchmark therefore reports BOTH:
 """
 from __future__ import annotations
 
+import math
 import time
 
 import numpy as np
@@ -70,3 +71,25 @@ def modeled_tc_pulls(g: Graph, b: BVSS, src: int, *,
 
 def fmt_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def geomean(xs) -> float:
+    """Geometric mean of the positive entries (0.0 if none) — the summary
+    statistic shared by every BENCH_prN suite."""
+    xs = [x for x in xs if x and x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def bench_envelope(bench: str, scale: int) -> dict:
+    """The metadata envelope shared by every BENCH_prN artifact/suite
+    (one definition so backend/interpret/scale/timestamp cannot drift
+    between the top-level artifact and its nested suites)."""
+    import jax
+
+    return {
+        "bench": bench,
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() == "cpu",
+        "scale": scale,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }

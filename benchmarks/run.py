@@ -4,16 +4,19 @@
                                             [--fused-only]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--json`` additionally runs
-the PR-1 fused-pipeline benchmark (``benchmarks/bench_fused.py``) and
-writes its machine-readable perf-trajectory artifact (default
-``BENCH_pr1.json``); ``--fused-only`` skips the paper tables so CI can
-smoke the JSON path quickly.  Roofline tables (E7) come from the dry-run
-artifacts: run ``python -m repro.launch.dryrun --all`` first, then
+the perf-trajectory benches — the PR-1 fused-pipeline bench
+(``benchmarks/bench_fused.py``) and the PR-2 GraphSession serving bench
+(``benchmarks/bench_service.py``) — and writes one machine-readable
+artifact (default ``BENCH_pr2.json``) with a ``fused`` and a ``service``
+suite; ``--fused-only`` skips the paper tables so CI can smoke the JSON
+path quickly.  Roofline tables (E7) come from the dry-run artifacts: run
+``python -m repro.launch.dryrun --all`` first, then
 ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -22,12 +25,13 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr1.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr2.json", default=None,
                     metavar="PATH",
-                    help="run the fused-pipeline bench and write JSON "
-                         "(default %(const)s)")
+                    help="run the fused-pipeline + service benches and "
+                         "write JSON (default %(const)s)")
     ap.add_argument("--fused-only", action="store_true",
-                    help="only the fused-pipeline bench (implies --json)")
+                    help="only the JSON perf benches, skip the paper tables "
+                         "(implies --json)")
     args = ap.parse_args(argv)
     scale = 9 if args.quick else 11
     t0 = time.time()
@@ -35,12 +39,25 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr1.json"
+        json_path = "BENCH_pr2.json"
     if json_path is not None:
-        from benchmarks import bench_fused
-        bench_fused.run(scale=min(scale, 9 if args.quick else 10),
-                        n_sources=2 if args.quick else 3,
-                        json_path=json_path)
+        from benchmarks import bench_fused, bench_service
+        from benchmarks.common import bench_envelope
+        bench_scale = min(scale, 9 if args.quick else 10)
+        fused = bench_fused.run(scale=bench_scale,
+                                n_sources=2 if args.quick else 3,
+                                json_path=None)
+        service = bench_service.run(scale=bench_scale,
+                                    n_queries=6 if args.quick else 8,
+                                    json_path=None)
+        out = {
+            **bench_envelope("pr2_graph_session", bench_scale),
+            "fused": fused,
+            "service": service,
+        }
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        print(f"# wrote {json_path}")
     if args.fused_only:
         print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
         return

@@ -2,65 +2,72 @@
 centrality queries with the full BLEST pipeline (the paper's kind of
 workload — serve a graph, not train a model).
 
+All the heavy lifting lives in :class:`repro.serve.GraphSession` (prepared
+ordering/BVSS/engines + wave batching); this example is a thin client.
+
     PYTHONPATH=src python examples/bfs_service.py
 """
 import time
 
 import numpy as np
 
-from repro.core import build_bvss, make_engine, reference_bfs
-from repro.core.multi_source import closeness_centrality
-from repro.core.ordering import auto_order
+from repro.core import reference_bfs
+from repro.serve import GraphSession
 from repro.graphs import generators as gen
 
 
 class GraphService:
-    """Preprocesses a graph once (ordering decision + BVSS + fused engine),
-    then serves single-source level queries and sampled centrality."""
+    """Thin client over GraphSession: single queries, batched waves, and
+    sampled centrality — everything in the caller's original vertex ids."""
 
-    def __init__(self, g, *, seed=0):
-        t0 = time.time()
-        self.perm, self.kind = auto_order(g, w=512, seed=seed)
-        self.g = g.permute_fast(self.perm)
-        self.inv = np.empty(g.n, dtype=np.int64)
-        self.inv[self.perm] = np.arange(g.n)
-        self.bvss = build_bvss(self.g)
-        self.engine = make_engine(self.g, "blest_lazy", bvss=self.bvss)
-        self.engine(0)  # warm up / compile
-        self.preprocess_s = time.time() - t0
+    def __init__(self, g, *, max_batch=4, seed=0):
+        self.session = GraphSession(g, max_batch=max_batch, w=512, seed=seed)
+        self.kind = self.session.ordering
+        self.bvss = self.session.bvss
+        self.preprocess_s = self.session.preprocess_s
 
     def levels(self, src: int) -> np.ndarray:
-        lv = np.asarray(self.engine(int(self.perm[src])))
-        return lv[self.perm]  # back to caller's vertex ids
+        return self.session.levels(src)
 
-    def centrality_sample(self, n_sources: int, seed=0) -> np.ndarray:
-        rng = np.random.default_rng(seed)
-        srcs = self.perm[rng.integers(0, self.g.n, n_sources)]
-        return closeness_centrality(self.g, srcs.astype(np.int32))
+    def levels_batch(self, sources) -> list:
+        return self.session.levels_batch(sources)
+
+    def centrality_sample(self, n_sources: int, seed=0):
+        return self.session.centrality_sample(n_sources, seed=seed)
 
 
 def main():
     g = gen.rmat(10, 10, seed=3)
-    svc = GraphService(g)
+    svc = GraphService(g, max_batch=4)
     print(f"service up: n={g.n} m={g.m} ordering={svc.kind} "
           f"compression={svc.bvss.compression_ratio():.3f} "
           f"preprocess={svc.preprocess_s:.2f}s")
 
     rng = np.random.default_rng(0)
-    queries = rng.integers(0, g.n, 12)
-    t0 = time.time()
-    for q in queries:
-        lv = svc.levels(int(q))
-        ref = reference_bfs(g, int(q))
-        assert (lv == ref).all(), f"query {q} mismatch"
-    dt = time.time() - t0
-    print(f"served {len(queries)} level queries in {dt:.2f}s "
-          f"({dt / len(queries) * 1e3:.1f} ms/query, all verified)")
+    queries = [int(q) for q in rng.integers(0, g.n, 12)]
+    svc.levels(queries[0])           # warm the single-source path
+    svc.levels_batch(queries[:2])    # warm the wave path
 
     t0 = time.time()
-    cc = svc.centrality_sample(8)
-    print(f"closeness-centrality sample (8 sources, MXU bit-SpMM path): "
-          f"{time.time() - t0:.2f}s, mean={cc.mean():.4f}")
+    seq = [svc.levels(q) for q in queries]
+    t_seq = time.time() - t0
+
+    t0 = time.time()
+    lvs = svc.levels_batch(queries)
+    t_wave = time.time() - t0
+    for q, lv_s, lv in zip(queries, seq, lvs):
+        ref = reference_bfs(g, q)
+        assert (lv_s == ref).all(), f"query {q} mismatch"
+        assert (lv == ref).all(), f"wave query {q} mismatch"
+    print(f"served {len(queries)} level queries: sequential {t_seq:.2f}s, "
+          f"batched wave {t_wave:.2f}s "
+          f"({t_seq / max(t_wave, 1e-9):.2f}x, all verified)")
+
+    t0 = time.time()
+    srcs, cc = svc.centrality_sample(8)
+    print(f"closeness-centrality sample (8 sources, BVSS bit-SpMM waves): "
+          f"{time.time() - t0:.2f}s, sources={srcs.tolist()}, "
+          f"mean={cc.mean():.4f}")
 
 
 if __name__ == "__main__":

@@ -103,11 +103,16 @@ def pull_vss_jnp(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int
 
 
 def _frontier_bytes(F: jnp.ndarray, sets: jnp.ndarray, sigma: int) -> jnp.ndarray:
-    """Gather the σ-bit frontier word of slice set ids ``sets`` from packed F."""
+    """Gather the σ-bit frontier word of slice set ids ``sets`` from packed
+    F: (n_fwords,) single frontier -> (B,), or (n_fwords, S) stacked
+    per-source columns -> (B, S)."""
     bitpos = sets.astype(jnp.uint32) * jnp.uint32(sigma)
-    word = F[(bitpos >> jnp.uint32(5)).astype(jnp.int32)]
+    idx = (bitpos >> jnp.uint32(5)).astype(jnp.int32)
     shift = bitpos & jnp.uint32(31)
-    return (word >> shift) & jnp.uint32((1 << sigma) - 1)
+    mask = jnp.uint32((1 << sigma) - 1)
+    if F.ndim == 2:
+        return (F[idx, :] >> shift[:, None]) & mask
+    return (F[idx] >> shift) & mask
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +149,36 @@ def _round_width(x: int) -> int:
     return max(PULL_TILE, ((x + PULL_TILE - 1) // PULL_TILE) * PULL_TILE)
 
 
+def queue_widths(num_vss: int, buckets: int) -> list[int]:
+    """Static queue widths, smallest first; the on-device live VSS count
+    picks one (2 cond-selected buckets by default, DESIGN §2.3)."""
+    widths = [_round_width(num_vss)]
+    if buckets >= 2:
+        small = _round_width((num_vss + 7) // 8)
+        if small < widths[0]:
+            widths.insert(0, small)
+    return widths
+
+
+def make_compactor(dev: BVSSDevice, num_vss: int, qcap: int) -> Callable:
+    """Build ``compact(set_active (n_sets,) bool) -> (Q, count)``: cumsum
+    stream-compaction of active slice sets into the static-width VSS queue
+    (the TPU idiom for the paper's atomic queue append).  Shared by the
+    single-source engines and the multi-source / serving path."""
+    vss_ids = jnp.arange(num_vss, dtype=jnp.int32)
+    dummy_vss = num_vss
+
+    def compact(set_active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        vss_active = set_active[dev.virtual_to_real[:num_vss]]
+        pos = jnp.cumsum(vss_active.astype(jnp.int32)) - 1
+        idx = jnp.where(vss_active, pos, qcap)  # OOB -> dropped
+        Q = jnp.full((qcap,), dummy_vss, dtype=jnp.int32)
+        Q = Q.at[idx].set(vss_ids, mode="drop")
+        return Q, vss_active.sum().astype(jnp.int32)
+
+    return compact
+
+
 def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
                    pull_impl: PullFn | None = None, use_kernels: bool = True,
                    buckets: int = 2, max_levels: int | None = None
@@ -168,8 +203,8 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
     p = problem
     dev = p.dev
     sigma = p.sigma
-    qcap = _round_width(p.num_vss)
-    dummy_vss = p.num_vss
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
     max_lv = max_levels if max_levels is not None else p.n + 1
 
     if pull_impl is not None:
@@ -182,24 +217,7 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
     fin = functools.partial(fin_impl, sigma=sigma, n_fwords=p.n_fwords,
                             n_sets=p.n_sets)
 
-    # static queue widths, smallest first; the on-device count picks one
-    widths = [qcap]
-    if buckets >= 2:
-        small = _round_width((p.num_vss + 7) // 8)
-        if small < qcap:
-            widths.insert(0, small)
-
-    vss_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
-
-    def compact(set_active: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """set_active (n_sets,) bool -> (Q, count) by cumsum stream-compaction
-        (the TPU idiom for the paper's atomic queue append)."""
-        vss_active = set_active[dev.virtual_to_real[:p.num_vss]]
-        pos = jnp.cumsum(vss_active.astype(jnp.int32)) - 1
-        idx = jnp.where(vss_active, pos, qcap)  # OOB -> dropped
-        Q = jnp.full((qcap,), dummy_vss, dtype=jnp.int32)
-        Q = Q.at[idx].set(vss_ids, mode="drop")
-        return Q, vss_active.sum().astype(jnp.int32)
+    compact = make_compactor(dev, p.num_vss, qcap)
 
     def pull_update(state: _BlestState, lvl, width: int) -> _BlestState:
         """gather → pull → update over the first ``width`` queue slots
@@ -411,11 +429,18 @@ def make_csr_bfs(g: Graph, mode: str = "push", *, alpha: float = 15.0,
 # engine registry
 # ---------------------------------------------------------------------------
 def make_engine(g: Graph, engine: str, *, sigma: int = 8,
-                bvss: BVSS | None = None, pull_impl: PullFn | None = None,
+                bvss: BVSS | None = None,
+                problem: BlestProblem | None = None,
+                pull_impl: PullFn | None = None,
                 use_kernels: bool = True, buckets: int = 2,
+                n_sources: int | None = None,
                 block: int | None = None) -> Callable:
     """Build a jitted BFS callable ``f(src) -> levels`` for the named engine.
 
+    ``problem`` lets callers that already hold a :class:`BlestProblem`
+    (core.policy.prepare, GraphSession) skip rebuilding the device BVSS.
+    ``engine="multi_source"`` builds the batched BVSS bit-SpMM engine
+    ``f(sources (S,)) -> levels (n, S)`` and requires ``n_sources``.
     ``block`` is accepted for backwards compatibility and ignored: the fused
     pipeline batches the whole compacted queue instead of slicing it into
     sequential blocks.
@@ -426,10 +451,18 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
     if engine in ("csr_push", "csr_pull", "dirop"):
         mode = {"csr_push": "push", "csr_pull": "pull", "dirop": "dirop"}[engine]
         return make_csr_bfs(g, mode)
-    if engine in ("brs", "blest", "blest_lazy"):
-        from repro.core.bvss import build_bvss
-        b = bvss if bvss is not None else build_bvss(g, sigma=sigma)
-        problem = BlestProblem.build(b)
+    if engine in ("brs", "blest", "blest_lazy", "multi_source"):
+        if problem is None:
+            from repro.core.bvss import build_bvss
+            b = bvss if bvss is not None else build_bvss(g, sigma=sigma)
+            problem = BlestProblem.build(b)
+        if engine == "multi_source":
+            from repro.core.multi_source import make_multi_source_bfs
+            if n_sources is None:
+                raise ValueError("multi_source engine needs n_sources")
+            return make_multi_source_bfs(g, n_sources, problem=problem,
+                                         use_kernel=use_kernels,
+                                         buckets=buckets)
         if engine == "brs":
             return make_brs_bfs(problem)
         return make_blest_bfs(problem, lazy=(engine == "blest_lazy"),
@@ -440,3 +473,5 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
 
 ENGINES = ("dense_pull", "csr_push", "csr_pull", "dirop", "brs", "blest",
            "blest_lazy")
+# engines with a (sources (S,)) -> (n, S) signature, built via n_sources=
+MULTI_ENGINES = ("multi_source",)

@@ -1,75 +1,206 @@
-"""Multi-source BFS as bit-SpMM on the MXU (paper §2 + §7 future work).
+"""Multi-source BFS as batched BVSS bit-SpMM (paper §2 + §7, DESIGN §2.5).
 
 Stacking S frontiers column-wise turns the SpMSpV pull into an SpMM; on TPU
-this is where the MXU path pays off (DESIGN.md §2.2): one 128×128 int8 MMA
-resolves 128·128 Boolean dot products.  Used by the closeness-centrality
-example and benchmarked against S independent single-source runs.
+this is where the MXU path pays off (DESIGN.md §2.2): the slices of every
+queued VSS are contracted against the S stacked σ-bit frontier bytes of its
+slice set as small bit-SpMM tiles (``kernels.bvss_spmm``).  Unlike the seed
+implementation, the hot path never materialises the O(n²/32) dense
+``to_dense_bits`` adjacency — peak device memory scales with BVSS words.
 
 The level loop rides the same :class:`~repro.core.level_pipeline.LevelPipeline`
-skeleton as the single-source engines: gather = the stacked frontier
-columns, pull = ``bit_spmm``, update = the dense finalise (no pack/compact —
-the frontier representation *is* the dense column block).
+skeleton as the single-source engines, and reuses their bucketed static-width
+queue: one compacted *union* queue of VSSs (a slice set is live if ANY source
+column's frontier touches it), the per-column frontier kept as packed words.
+
+:func:`make_ms_engine` exposes the jit-able building blocks (init / insert /
+requeue / one lock-step level) so GraphSession (``repro.serve``) can drive
+the same step with host control between levels — the wave-serving loop with
+mid-flight slot refills — while :func:`make_multi_source_bfs` fuses the whole
+loop on device for the fixed-cohort case (closeness centrality).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.level_pipeline import LevelPipeline, compose_step, run_levels
-from repro.graphs import Graph, to_dense_bits
-from repro.kernels import bit_spmm
-from repro.kernels.ref import bit_spmm_ref
+from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
+                            queue_widths)
+from repro.core.level_pipeline import LevelPipeline, run_levels
+from repro.graphs import Graph
+from repro.kernels import bvss_spmm
+from repro.kernels.ref import bvss_spmm_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
 
 
-class _MSState(NamedTuple):
-    levels: jnp.ndarray  # (n, S) int32
-    X: jnp.ndarray       # (n, S) int8 stacked frontier columns
+class MSState(NamedTuple):
+    levels: jnp.ndarray   # (n+1, S) int32; row n is the dummy-row sink
+    F: jnp.ndarray        # (n_fwords, S) uint32 per-column packed frontier
+    Q: jnp.ndarray        # (qcap,) int32 union VSS queue, dummy-padded
+    count: jnp.ndarray    # int32 live VSS count (termination + bucket pick)
+    col_lvl: jnp.ndarray  # (S,) int32 per-column BFS depth reached so far
 
 
-def make_multi_source_bfs(g: Graph, n_sources: int, *,
+@dataclasses.dataclass(frozen=True)
+class MSEngine:
+    """Jit-able building blocks of the batched BVSS SpMM level step.
+
+    ``step``/``finalize`` plug into :class:`LevelPipeline` for the fused
+    on-device loop; ``insert``/``requeue``/``level_step``/``col_live`` are
+    the wave-serving surface (jitted, host-driven between levels)."""
+
+    problem: BlestProblem
+    n_slots: int
+    init: Callable        # (sources (S,) i32) -> MSState, queue rebuilt
+    idle: Callable        # () -> MSState with no live columns
+    insert: Callable      # (state, slot, src) -> MSState (requeue after!)
+    requeue: Callable     # (state) -> state with Q/count rebuilt from F
+    step: Callable        # (state) -> state after gather+pull+update
+    finalize: Callable    # (state) -> state after pack+requeue
+    level_step: Callable  # jitted (state) -> (state, live (S,) bool) after
+                          # one full level — liveness piggybacks on the
+                          # step so serving pays ONE dispatch per level
+    col_live: Callable    # jitted (state) -> (S,) bool frontier non-empty
+
+
+def make_ms_engine(problem: BlestProblem, n_slots: int, *,
+                   use_kernel: bool = True, buckets: int = 2) -> MSEngine:
+    """Build the S-column lock-step BVSS level machinery."""
+    p = problem
+    dev = p.dev
+    sigma = p.sigma
+    S = n_slots
+    n, n_fwords = p.n, p.n_fwords
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    compact = make_compactor(dev, p.num_vss, qcap)
+    all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
+    n_pad = n_fwords * 32
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+    def pull_update(state: MSState, width: int) -> MSState:
+        ids = jax.lax.slice_in_dim(state.Q, 0, width)
+        fb = _frontier_bytes(state.F, dev.virtual_to_real[ids], sigma)
+        counts = spmm(dev.masks[ids], fb, sigma=sigma)  # (w, spw, 32, S)
+        rows = dev.row_ids[ids].reshape(-1)
+        cand = (state.col_lvl + 1)[None, :]
+        upd = jnp.where(counts.reshape(-1, S) > 0, cand, INF
+                        ).astype(jnp.int32)
+        # eager scatter-min: an already-visited row keeps its smaller level;
+        # dummy rows land in the level sink (row n)
+        return state._replace(levels=state.levels.at[rows].min(upd))
+
+    def step(state: MSState) -> MSState:
+        if len(widths) == 1:
+            return pull_update(state, widths[0])
+        small, full = widths
+        return jax.lax.cond(state.count <= small,
+                            lambda s: pull_update(s, small),
+                            lambda s: pull_update(s, full), state)
+
+    def requeue(state: MSState) -> MSState:
+        """Rebuild the union queue from the per-column frontiers: a slice
+        set is live iff any column's σ-bit frontier byte is non-zero."""
+        set_active = (_frontier_bytes(state.F, all_sets, sigma) != 0
+                      ).any(axis=1)
+        Q, count = compact(set_active)
+        return state._replace(Q=Q, count=count)
+
+    def finalize(state: MSState) -> MSState:
+        nxt = (state.col_lvl + 1)[None, :]
+        new = state.levels[:n] == nxt                     # (n, S)
+        bits = jnp.zeros((n_pad, S), dtype=bool).at[:n].set(new)
+        F = jnp.sum(bits.reshape(n_fwords, 32, S).astype(jnp.uint32)
+                    * weights[None, :, None], axis=1, dtype=jnp.uint32)
+        state = state._replace(F=F, col_lvl=state.col_lvl + new.any(axis=0))
+        return requeue(state)
+
+    def init(sources: jnp.ndarray) -> MSState:
+        sources = jnp.asarray(sources, dtype=jnp.int32)
+        cols = jnp.arange(S)
+        levels = jnp.full((n + 1, S), INF, dtype=jnp.int32)
+        levels = levels.at[sources, cols].set(0)
+        F = jnp.zeros((n_fwords, S), dtype=jnp.uint32)
+        F = F.at[sources // 32, cols].set(
+            jnp.uint32(1) << (sources % 32).astype(jnp.uint32))
+        st = MSState(levels=levels, F=F,
+                     Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
+                     count=jnp.int32(0),
+                     col_lvl=jnp.zeros((S,), dtype=jnp.int32))
+        return requeue(st)
+
+    def idle() -> MSState:
+        return MSState(levels=jnp.full((n + 1, S), INF, dtype=jnp.int32),
+                       F=jnp.zeros((n_fwords, S), dtype=jnp.uint32),
+                       Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
+                       count=jnp.int32(0),
+                       col_lvl=jnp.zeros((S,), dtype=jnp.int32))
+
+    def insert(state: MSState, slot: jnp.ndarray, src: jnp.ndarray
+               ) -> MSState:
+        """Reset column ``slot`` to a fresh query from ``src`` (internal
+        ids).  Call ``requeue`` once after a refill round."""
+        slot = jnp.asarray(slot, dtype=jnp.int32)
+        src = jnp.asarray(src, dtype=jnp.int32)
+        levels = state.levels.at[:, slot].set(INF).at[src, slot].set(0)
+        F = state.F.at[:, slot].set(jnp.uint32(0))
+        F = F.at[src // 32, slot].set(
+            jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+        return state._replace(levels=levels, F=F,
+                              col_lvl=state.col_lvl.at[slot].set(0))
+
+    def level_step(state: MSState) -> tuple[MSState, jnp.ndarray]:
+        state = finalize(step(state))
+        return state, (state.F != 0).any(axis=0)
+
+    return MSEngine(
+        problem=p, n_slots=S, init=jax.jit(init), idle=idle,
+        insert=jax.jit(insert), requeue=jax.jit(requeue),
+        step=step, finalize=finalize,
+        level_step=jax.jit(level_step),
+        col_live=jax.jit(lambda st: (st.F != 0).any(axis=0)))
+
+
+def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
                           use_kernel: bool = True,
-                          max_levels: int | None = None) -> Callable:
-    """Build jitted ``f(sources (S,) i32) -> levels (n, S) i32``."""
-    n = g.n
-    adj = jnp.asarray(to_dense_bits(g))      # (n, ceil(n/32)) u32, pull view
-    S = n_sources
-    spmm = bit_spmm if use_kernel else bit_spmm_ref
-    max_lv = max_levels if max_levels is not None else n + 1
-
-    def gather(s: _MSState):
-        return adj, s.X
-
-    def update(s: _MSState, pop, lvl) -> _MSState:
-        new = (pop > 0) & (s.levels == INF)
-        return _MSState(levels=jnp.where(new, lvl, s.levels),
-                        X=new.astype(jnp.int8))
-
-    pipe = LevelPipeline(step=compose_step(gather, spmm, update),
-                         finalize=lambda s, lvl: s,
-                         active=lambda s: (s.X != 0).any())
+                          max_levels: int | None = None,
+                          bvss=None, problem: BlestProblem | None = None,
+                          buckets: int = 2) -> Callable:
+    """Build jitted ``f(sources (S,) i32) -> levels (n, S) i32`` with the
+    whole level loop fused on device (fixed source cohort)."""
+    if problem is None:
+        if bvss is None:
+            from repro.core.bvss import build_bvss
+            bvss = build_bvss(g)
+        problem = BlestProblem.build(bvss)
+    eng = make_ms_engine(problem, n_sources, use_kernel=use_kernel,
+                         buckets=buckets)
+    max_lv = max_levels if max_levels is not None else problem.n + 1
+    pipe = LevelPipeline(step=lambda s, lvl: eng.step(s),
+                         finalize=lambda s, lvl: eng.finalize(s),
+                         active=lambda s: s.count > 0)
 
     def bfs(sources: jnp.ndarray) -> jnp.ndarray:
-        sources = jnp.asarray(sources, dtype=jnp.int32)
-        levels = jnp.full((n, S), INF, dtype=jnp.int32)
-        levels = levels.at[sources, jnp.arange(S)].set(0)
-        X = jnp.zeros((n, S), dtype=jnp.int8)
-        X = X.at[sources, jnp.arange(S)].set(1)
-        state, _ = run_levels(pipe, _MSState(levels, X), max_levels=max_lv)
-        return state.levels
+        state, _ = run_levels(pipe, eng.init(sources), max_levels=max_lv)
+        return state.levels[:problem.n]
 
     return jax.jit(bfs)
 
 
 def closeness_centrality(g: Graph, sources: np.ndarray, *,
-                         use_kernel: bool = True) -> np.ndarray:
+                         use_kernel: bool = True,
+                         problem: BlestProblem | None = None) -> np.ndarray:
     """Approximate closeness centrality from a source sample (paper §7's
-    target application for multi-source BFS)."""
-    f = make_multi_source_bfs(g, len(sources), use_kernel=use_kernel)
+    target application for multi-source BFS).  ``sources`` and the scores
+    are in the id space of ``g`` (pass ``problem`` to reuse prepared
+    state — sources must then be in the prepared graph's ids)."""
+    f = make_multi_source_bfs(g, len(sources), use_kernel=use_kernel,
+                              problem=problem)
     levels = np.asarray(f(jnp.asarray(sources)))     # (n, S)
     finite = levels != INF
     dist_sum = np.where(finite, levels, 0).sum(axis=0).astype(np.float64)

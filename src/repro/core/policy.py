@@ -8,7 +8,10 @@ The paper's pipeline makes two static decisions per graph:
      high-diameter graphs (Spielman_k600's 600 levels in the paper).
 
 ``prepare(graph)`` runs the whole static pipeline and returns a ready
-engine; this is exactly what BLEST (full) does before the first BFS.
+engine; this is exactly what BLEST (full) does before the first BFS.  It is
+the ONE ordering/BVSS/engine preparation in the tree: the launcher, the
+serving layer (``repro.serve.GraphSession``) and the examples all go
+through it rather than re-implementing order -> permute -> BVSS -> engine.
 """
 from __future__ import annotations
 
@@ -17,9 +20,9 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.bfs import make_engine, reference_bfs
+from repro.core.bfs import BlestProblem, make_engine
 from repro.core.bvss import BVSS, build_bvss
-from repro.core.ordering import auto_order, is_social_like
+from repro.core.ordering import auto_order
 from repro.graphs import Graph
 
 # paper §5: fixed threshold for switching to lazy vertex updates
@@ -33,9 +36,13 @@ LAZY_UDIV_FRACTION = 0.1
 class PreparedBFS:
     graph: Graph           # reordered graph
     perm: np.ndarray       # old id -> new id
+    inv: np.ndarray        # new id -> old id (perm's inverse)
     ordering: str
     engine_name: str
     bvss: BVSS
+    # device-resident BVSS bundle, shared with the engine; None when the
+    # prepared engine is a CSR/dense baseline that never touches the BVSS
+    problem: BlestProblem | None
     update_divergence: float
     _fn: Callable = None
 
@@ -56,31 +63,51 @@ def choose_update_scheme(bvss: BVSS, *, threshold: float | None = None
 
 
 def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
-            lazy_threshold: float | None = None) -> PreparedBFS:
-    perm, kind = auto_order(g, sigma=sigma, w=w, seed=seed)
-    g_ord = g.permute_fast(perm)
+            lazy_threshold: float | None = None, order: bool = True,
+            engine: str | None = None, use_kernels: bool = True,
+            buckets: int = 2) -> PreparedBFS:
+    """The full static pipeline: (optionally) order, build the BVSS, pick
+    the update scheme (or honour an explicit ``engine`` override, e.g. the
+    Table-2 ablation variants), build the fused engine."""
+    if order:
+        perm, kind = auto_order(g, sigma=sigma, w=w, seed=seed)
+        g_ord = g.permute_fast(perm)
+    else:
+        perm, kind = np.arange(g.n, dtype=np.int64), "natural"
+        g_ord = g
+    inv = np.empty(g.n, dtype=np.int64)
+    inv[perm] = np.arange(g.n)
     bvss = build_bvss(g_ord, sigma=sigma)
-    engine_name = choose_update_scheme(bvss, threshold=lazy_threshold)
-    fn = make_engine(g_ord, engine_name, bvss=bvss)
-    return PreparedBFS(graph=g_ord, perm=perm, ordering=kind,
-                       engine_name=engine_name, bvss=bvss,
+    engine_name = engine if engine is not None else \
+        choose_update_scheme(bvss, threshold=lazy_threshold)
+    # only BVSS-consuming single-source engines need the device upload;
+    # the host bvss alone backs the stats printouts and the policy
+    problem = BlestProblem.build(bvss) if engine_name in (
+        "brs", "blest", "blest_lazy") else None
+    fn = make_engine(g_ord, engine_name, bvss=bvss, problem=problem,
+                     use_kernels=use_kernels, buckets=buckets)
+    return PreparedBFS(graph=g_ord, perm=perm, inv=inv, ordering=kind,
+                       engine_name=engine_name, bvss=bvss, problem=problem,
                        update_divergence=bvss.update_divergence(), _fn=fn)
 
 
 def parents_from_levels(g: Graph, levels: np.ndarray) -> np.ndarray:
     """BFS parent array (paper §2: the kernel may return either form).
 
-    Pull semantics: parent[u] is any in-neighbour of u at level[u]-1.
-    Host-side NumPy pass over the in-CSR (one sweep, vectorisable)."""
+    Pull semantics: parent[u] is any in-neighbour of u at level[u]-1 (the
+    first in in-CSR order).  One vectorised NumPy sweep over the in-CSR."""
     INF = np.iinfo(np.int32).max
     t_indptr, t_indices = g.t_csr
+    levels = np.asarray(levels)
+    u_of = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(t_indptr))
+    lu = levels[u_of]
+    nbrs = t_indices.astype(np.int64)
+    ok = (lu != 0) & (lu != INF) & (levels[nbrs] == lu - 1)
     parents = np.full(g.n, -1, dtype=np.int64)
-    for u in range(g.n):
-        lu = levels[u]
-        if lu == 0 or lu == INF:
-            continue
-        nbrs = t_indices[t_indptr[u]:t_indptr[u + 1]]
-        ok = nbrs[levels[nbrs] == lu - 1]
-        if len(ok):
-            parents[u] = ok[0]
+    idx = np.flatnonzero(ok)
+    if len(idx):
+        # first qualifying in-edge per vertex: idx ascends within each
+        # CSR row, so unique's first occurrence is the CSR-order choice
+        uu, first = np.unique(u_of[idx], return_index=True)
+        parents[uu] = nbrs[idx[first]]
     return parents

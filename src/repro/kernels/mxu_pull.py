@@ -14,6 +14,14 @@ MXU output entry useful (128·S dot products per call vs the paper's 64).
 
 Grid = (row_tiles, s_tiles, k_stripes); the K dimension accumulates into the
 output block (revisiting pattern), so K is the innermost grid axis.
+
+``bvss_spmm`` is the *compressed* counterpart (DESIGN §2.5): instead of the
+dense bit-adjacency it takes one batch of queued BVSS mask rows plus the S
+stacked σ-bit frontier bytes of each VSS's slice set, and resolves every
+(slice, source) Boolean dot product as a block of small bit-SpMM tiles —
+per VSS an (τ, σ) slice-bit tile contracted against its (σ, S) frontier-bit
+tile on the MXU.  This is the serving hot path: multi-source BFS touches
+only BVSS words, never the O(n²/32) dense adjacency.
 """
 from __future__ import annotations
 
@@ -89,3 +97,82 @@ def bit_spmm(a_packed: jnp.ndarray, x: jnp.ndarray, *,
         interpret=interpret,
     )(a_packed, x)
     return y[:R, :S]
+
+
+# ---------------------------------------------------------------------------
+# batched BVSS bit-SpMM: the compressed multi-source pull (DESIGN §2.5)
+# ---------------------------------------------------------------------------
+def _bvss_spmm_kernel(masks_ref, fb_ref, y_ref, *, sigma: int):
+    """masks_ref (TB, 32) u32; fb_ref (TB, TS) u32;
+    y_ref (TB, spw*32, TS) i32: per-VSS (τ, σ) @ (σ, TS) bit-SpMM tiles.
+
+    Slice k = j*32 + l of VSS b carries mask bits σj+i of word masks[b, l];
+    unpacking those σ bits against the σ unpacked frontier bits of each of
+    the TS stacked sources turns every (slice, source) Boolean dot product
+    into one entry of a batched int8 matmul — the BVSS restatement of the
+    ``bit_spmm`` tile, with the contraction length σ instead of 128.
+    """
+    spw = 32 // sigma
+    tb = masks_ref.shape[0]
+    masks = masks_ref[...]                                   # (TB, 32)
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+    bits = (masks[:, :, None] >> bitpos[None, None, :]) & jnp.uint32(1)
+    # bit p = σj + i of lane l -> slice row k = j*32 + l, contraction col i
+    a = bits.reshape(tb, 32, spw, sigma).transpose(0, 2, 1, 3)
+    a = a.reshape(tb, spw * 32, sigma).astype(jnp.int8)      # (TB, τ, σ)
+    ib = jnp.arange(sigma, dtype=jnp.uint32)
+    x = ((fb_ref[...][:, None, :] >> ib[None, :, None])
+         & jnp.uint32(1)).astype(jnp.int8)                   # (TB, σ, TS)
+    y_ref[...] = jax.lax.dot_general(
+        a, x, dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "tile_b", "tile_s",
+                                             "interpret"))
+def bvss_spmm(masks: jnp.ndarray, fbytes: jnp.ndarray, *, sigma: int = 8,
+              tile_b: int | None = None, tile_s: int | None = None,
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Batched multi-source BVSS pull as bit-SpMM tiles.
+
+    masks:  (B, 32) uint32 queued VSS mask rows (row-major BVSS layout).
+    fbytes: (B, S) uint32 — the σ-bit frontier byte of each VSS's slice set,
+            one column per stacked source.
+    returns (B, spw, 32, S) int32 popcounts of slice∧frontier per source
+            (threshold >0 for Boolean BFS); [b, j, l, s] is slice k=j*32+l.
+
+    Tile defaults: on TPU the batch tile is 8 so the (TB, τ, TS) int32
+    accumulator fits VMEM; in interpret mode (CPU) a 128-wide batch tile
+    amortises the interpreter's per-grid-cell cost.  The source tile rounds
+    S up to a sublane multiple (pass ``tile_s=128`` for full MXU lanes).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S = masks.shape[0], fbytes.shape[1]
+    spw = 32 // sigma
+    if tile_b is None:
+        tile_b = 128 if interpret else 8
+    if tile_s is None:
+        tile_s = min(128, ((S + 7) // 8) * 8)
+    pb, ps = (-B) % tile_b, (-S) % tile_s
+    if pb:
+        masks = jnp.pad(masks, ((0, pb), (0, 0)))
+        fbytes = jnp.pad(fbytes, ((0, pb), (0, 0)))
+    if ps:
+        fbytes = jnp.pad(fbytes, ((0, 0), (0, ps)))
+    Bp, Sp = B + pb, S + ps
+    grid = (Bp // tile_b, Sp // tile_s)
+
+    y = pl.pallas_call(
+        functools.partial(_bvss_spmm_kernel, sigma=sigma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 32), lambda b, s: (b, 0)),
+            pl.BlockSpec((tile_b, tile_s), lambda b, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, spw * 32, tile_s),
+                               lambda b, s: (b, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((Bp, spw * 32, Sp), jnp.int32),
+        interpret=interpret,
+    )(masks, fbytes)
+    return y[:B, :, :S].reshape(B, spw, 32, S)

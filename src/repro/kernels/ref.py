@@ -22,6 +22,21 @@ def bvss_pull_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
     return jnp.stack(hits, axis=1)
 
 
+def bvss_spmm_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
+                  ) -> jnp.ndarray:
+    """Oracle for kernels.bvss_spmm: (B, 32/σ, 32, S) int32 popcounts of
+    slice∧frontier per stacked source column."""
+    spw = 32 // sigma
+    p = (jnp.arange(spw, dtype=jnp.uint32)[:, None] * jnp.uint32(sigma)
+         + jnp.arange(sigma, dtype=jnp.uint32)[None, :])     # (spw, σ)
+    abits = ((masks[:, None, :, None] >> p[None, :, None, :])
+             & jnp.uint32(1)).astype(jnp.int32)              # (B, spw, 32, σ)
+    ib = jnp.arange(sigma, dtype=jnp.uint32)
+    xbits = ((fbytes[:, None, :] >> ib[None, :, None])
+             & jnp.uint32(1)).astype(jnp.int32)              # (B, σ, S)
+    return jnp.einsum("bjli,bis->bjls", abits, xbits)
+
+
 def bit_spmm_ref(a_packed: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.bit_spmm: Y (R, S) int32 popcounts."""
     R, W = a_packed.shape

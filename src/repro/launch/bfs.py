@@ -5,7 +5,13 @@
 
 Pipeline per the paper: classify the graph (social-like?), pick the
 ordering (JaccardWithWindows+shingle vs RCM), build the BVSS, run the fused
-BFS engine, verify against the host oracle.
+BFS engine, verify against the host oracle.  All preparation goes through
+the ONE static pipeline in :func:`repro.core.policy.prepare` (the serving
+layer and examples use the same one).
+
+``--service`` instead serves the queries through
+:class:`repro.serve.GraphSession` — batched multi-source waves over the
+slot pool — and reports wave vs sequential timing.
 """
 from __future__ import annotations
 
@@ -14,8 +20,9 @@ import time
 
 import numpy as np
 
-from repro.core import build_bvss, make_engine, reference_bfs
-from repro.core.ordering import auto_order, social_like_report
+from repro.core import reference_bfs
+from repro.core.ordering import social_like_report
+from repro.core.policy import prepare
 from repro.graphs import generators as gen
 
 
@@ -34,16 +41,50 @@ def build_graph(name: str, scale: int, seed: int = 0):
 
 ENGINE_VARIANTS = {
     # paper Table-2 variants; "full" picks lazy-vs-eager by the update-
-    # divergence threshold (paper §5 static policy, core/policy.py)
-    "blest_a": dict(engine="blest", order=False, lazy=False),
-    "blest_ab": dict(engine="blest", order=True, lazy=False),
-    "blest_ac": dict(engine="blest_lazy", order=False, lazy=True),
-    "blest_full": dict(engine="policy", order=True, lazy=True),
-    "brs": dict(engine="brs", order=False, lazy=False),
-    "csr_push": dict(engine="csr_push", order=False, lazy=False),
-    "csr_pull": dict(engine="csr_pull", order=False, lazy=False),
-    "dirop": dict(engine="dirop", order=False, lazy=False),
+    # divergence threshold (paper §5 static policy, core/policy.py);
+    # engine=None means "let the policy choose"
+    "blest_a": dict(engine="blest", order=False),
+    "blest_ab": dict(engine="blest", order=True),
+    "blest_ac": dict(engine="blest_lazy", order=False),
+    "blest_full": dict(engine=None, order=True),
+    "brs": dict(engine="brs", order=False),
+    "csr_push": dict(engine="csr_push", order=False),
+    "csr_pull": dict(engine="csr_pull", order=False),
+    "dirop": dict(engine="dirop", order=False),
 }
+
+
+def run_service(g, args) -> None:
+    """--service: wave-batched serving through GraphSession."""
+    from repro.serve import GraphSession
+    variant = ENGINE_VARIANTS[args.engine]
+    sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
+                        order=variant["order"], engine=variant["engine"])
+    print(f"[bfs] session up: ordering={sess.ordering} "
+          f"engine={sess.engine_name} "
+          f"compression={sess.bvss.compression_ratio():.3f} "
+          f"preprocess={sess.preprocess_s:.2f}s")
+    rng = np.random.default_rng(args.seed)
+    queries = [int(q) for q in rng.integers(0, g.n, args.sources)]
+    sess.levels(queries[0])                      # warm both paths
+    sess.levels_batch(queries[: min(2, len(queries))])
+    t0 = time.time()
+    lvs = sess.levels_batch(queries)
+    t_wave = time.time() - t0
+    t0 = time.time()
+    seq = [sess.levels(q) for q in queries]
+    t_seq = time.time() - t0
+    if args.verify:
+        for q, lv, lv_seq in zip(queries, lvs, seq):
+            ref = reference_bfs(g, q)
+            assert (lv == ref).all(), f"wave mismatch from source {q}"
+            assert (lv_seq == ref).all(), f"seq mismatch from source {q}"
+    print(f"[bfs] service: {len(queries)} queries, "
+          f"wave={t_wave * 1e3:.1f}ms "
+          f"sequential={t_seq * 1e3:.1f}ms "
+          f"speedup={t_seq / max(t_wave, 1e-9):.2f}x "
+          f"(max_batch={args.max_batch})"
+          + ("; VERIFIED vs oracle" if args.verify else ""))
 
 
 def main(argv=None):
@@ -56,6 +97,11 @@ def main(argv=None):
     ap.add_argument("--sources", type=int, default=4)
     ap.add_argument("--verify", action="store_true", default=True)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--service", action="store_true",
+                    help="serve the sources as one batched wave through "
+                         "GraphSession instead of sequential BFS runs")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="wave slot-pool width for --service")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.seed)
@@ -64,33 +110,34 @@ def main(argv=None):
           f"social_like={rep.is_social} (top1={rep.top1_share:.2f} "
           f"slope={rep.ll_slope:.2f})")
 
+    if args.service:
+        run_service(g, args)
+        return
+
     variant = ENGINE_VARIANTS[args.engine]
     t0 = time.time()
+    prep = prepare(g, w=512, seed=args.seed, order=variant["order"],
+                   engine=variant["engine"])
+    prep_s = time.time() - t0
     if variant["order"]:
-        perm, kind = auto_order(g, w=512)
-        g = g.permute_fast(perm)
-        print(f"[bfs] ordering={kind} ({time.time() - t0:.2f}s), "
-              f"bandwidth={g.bandwidth()}")
-    b = build_bvss(g)
+        print(f"[bfs] ordering={prep.ordering} "
+              f"(prepare={prep_s:.2f}s incl. BVSS+engine), "
+              f"bandwidth={prep.graph.bandwidth()}")
+    b = prep.bvss
     print(f"[bfs] BVSS: num_vss={b.num_vss} slices={b.num_slices} "
           f"compression={b.compression_ratio():.3f} "
           f"update_divergence={b.update_divergence():.0f} "
           f"memory={b.memory_bytes()['total'] / 1e6:.1f}MB")
-    engine = variant["engine"]
-    if engine == "policy":
-        from repro.core.policy import choose_update_scheme
-        engine = choose_update_scheme(b)
-        print(f"[bfs] policy chose update scheme: {engine}")
-    fn = make_engine(g, engine, bvss=b
-                     if engine.startswith(("brs", "blest")) else None)
+    if variant["engine"] is None:
+        print(f"[bfs] policy chose update scheme: {prep.engine_name}")
 
     rng = np.random.default_rng(args.seed)
     srcs = rng.integers(0, g.n, args.sources)
-    lv = np.asarray(fn(int(srcs[0])))  # compile
+    lv = prep.levels(int(srcs[0]))  # compile
     times = []
     for s in srcs:
         t0 = time.time()
-        lv = np.asarray(fn(int(s)))
+        lv = prep.levels(int(s))
         times.append(time.time() - t0)
         if args.verify:
             ref = reference_bfs(g, int(s))

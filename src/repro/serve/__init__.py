@@ -1,3 +1,4 @@
 from .engine import Completion, Request, ServeEngine
+from .graph_session import GraphSession
 
-__all__ = ["Completion", "Request", "ServeEngine"]
+__all__ = ["Completion", "Request", "ServeEngine", "GraphSession"]

@@ -1,0 +1,166 @@
+"""GraphSession: batched BFS query serving over one prepared graph
+(DESIGN §2.5).
+
+A session owns ALL prepared state for one graph — ordering decision,
+permutation + inverse, BVSS, the compiled single-source engine, and the
+batched multi-source wave machinery — via the single static pipeline in
+:func:`repro.core.policy.prepare`.
+
+Concurrent single-source level queries are served in *waves*,
+ServeEngine-style (``repro.serve.engine``): a fixed pool of ``max_batch``
+source columns advances in lock-step levels through one batched BVSS
+bit-SpMM pull per level; a column whose frontier empties is harvested and
+its slot refilled from the request queue mid-flight, so queries that arrive
+together share every adjacency read regardless of how their depths differ.
+Singleton traffic falls back to the fused single-source engine (whole level
+loop on device, no per-level host sync).
+
+Id-space contract: callers speak ORIGINAL vertex ids everywhere — sources
+in, level arrays / centrality scores out.  The internal reordering is
+invisible (the regression the old example got wrong).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.multi_source import closeness_centrality, make_ms_engine
+from repro.core.policy import PreparedBFS, prepare
+from repro.graphs import Graph
+
+
+class GraphSession:
+    """Prepared, query-serving state for one graph.
+
+    Parameters mirror :func:`repro.core.policy.prepare`; ``max_batch`` is
+    the wave slot-pool width (the S of the stacked bit-SpMM frontier).
+    """
+
+    def __init__(self, g: Graph, *, max_batch: int = 8, sigma: int = 8,
+                 w: int = 512, seed: int = 0,
+                 lazy_threshold: float | None = None, order: bool = True,
+                 engine: str | None = None, use_kernel: bool = True,
+                 max_steps: int | None = None):
+        t0 = time.time()
+        self.prepared: PreparedBFS = prepare(
+            g, sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
+            order=order, engine=engine, use_kernels=use_kernel)
+        if self.prepared.problem is not None:
+            self._problem = self.prepared.problem
+        else:
+            # non-BVSS engine override: the wave pool still needs the
+            # device BVSS; keep it session-local so PreparedBFS keeps its
+            # "problem is None for non-BVSS engines" invariant
+            from repro.core.bfs import BlestProblem
+            self._problem = BlestProblem.build(self.prepared.bvss)
+        self.max_batch = int(max_batch)
+        self._ms = make_ms_engine(self._problem, self.max_batch,
+                                  use_kernel=use_kernel)
+        self.max_steps = max_steps
+        self.preprocess_s = time.time() - t0
+
+    # ------------------------------------------------------------------
+    # prepared-state passthrough
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.prepared.graph.n
+
+    @property
+    def perm(self) -> np.ndarray:
+        return self.prepared.perm
+
+    @property
+    def inv(self) -> np.ndarray:
+        return self.prepared.inv
+
+    @property
+    def bvss(self):
+        return self.prepared.bvss
+
+    @property
+    def ordering(self) -> str:
+        return self.prepared.ordering
+
+    @property
+    def engine_name(self) -> str:
+        return self.prepared.engine_name
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+    def levels(self, src: int) -> np.ndarray:
+        """Single-source BFS levels in caller ids (fused device loop)."""
+        return self.prepared.levels(int(src))
+
+    def levels_batch(self, sources: Sequence[int]) -> list[np.ndarray]:
+        """Serve concurrent level queries as batched multi-source waves.
+
+        Returns one level array per query, aligned with ``sources``, in
+        the caller's vertex ids.  More queries than ``max_batch`` are
+        queued and refilled into freed slots mid-flight.
+        """
+        srcs = [int(s) for s in sources]
+        if not srcs:
+            return []
+        if len(srcs) == 1:  # singleton traffic: no batching win available
+            return [self.levels(srcs[0])]
+        eng = self._ms
+        perm = self.perm
+        queue = deque(enumerate(srcs))
+        owner: list[int | None] = [None] * self.max_batch
+        results: dict[int, np.ndarray] = {}
+        st = eng.idle()
+        limit = self.max_steps if self.max_steps is not None else \
+            (len(srcs) + self.max_batch) * (self.n + 1)
+        steps = 0
+        while queue or any(o is not None for o in owner):
+            refilled = False
+            for slot in range(self.max_batch):
+                if owner[slot] is None and queue:
+                    rid, src = queue.popleft()
+                    st = eng.insert(st, jnp.int32(slot),
+                                    jnp.int32(perm[src]))
+                    owner[slot] = rid
+                    refilled = True
+            if refilled:
+                st = eng.requeue(st)
+            st, live_dev = eng.level_step(st)
+            live = np.asarray(live_dev)
+            for slot in range(self.max_batch):
+                if owner[slot] is not None and not live[slot]:
+                    lv = np.asarray(st.levels[:self.n, slot])
+                    results[owner[slot]] = lv[perm]
+                    owner[slot] = None
+            steps += 1
+            if steps > limit:
+                raise RuntimeError(
+                    f"wave serving did not converge in {limit} level steps")
+        return [results[i] for i in range(len(srcs))]
+
+    # ------------------------------------------------------------------
+    # centrality
+    # ------------------------------------------------------------------
+    def closeness(self, sources: Sequence[int]) -> np.ndarray:
+        """Closeness centrality of the given sources (caller ids in, one
+        score per source out).  Fixed cohort, so this skips the host-driven
+        wave loop and runs the fused on-device multi-source engine
+        (DESIGN §2.5); scores are invariant under the internal reordering."""
+        srcs = [int(s) for s in sources]
+        if not srcs:
+            return np.zeros(0, dtype=np.float64)
+        internal = self.perm[np.asarray(srcs)].astype(np.int32)
+        return closeness_centrality(self.prepared.graph, internal,
+                                    problem=self._problem)
+
+    def centrality_sample(self, n_sources: int, seed: int = 0
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Sample ``n_sources`` vertices (caller ids) and return
+        ``(sources, closeness scores)`` aligned index-by-index."""
+        rng = np.random.default_rng(seed)
+        srcs = rng.integers(0, self.n, n_sources)
+        return srcs, self.closeness(srcs)
