@@ -1,0 +1,217 @@
+"""PR-3 mesh-native benchmark: the sharded stack vs its single-device twin.
+
+Per graph of the (small) suite:
+
+* ``engine`` — the fused single-source engine prepared single-device vs
+  prepared with ``mesh=...`` (same policy decisions, same LevelPipeline,
+  the sharded one under ``shard_map``).  Levels of BOTH are verified
+  against ``reference_bfs`` before timing is reported.
+* ``serve`` — N level queries through the SHARDED GraphSession, (a)
+  sequentially via the fused sharded single-source engine and (b) as one
+  batched wave over the sharded slot pool (mid-flight refills, lock-step
+  levels).  Wave answers verified against the oracle per query.
+
+On this container the "devices" are simulated host-platform CPU devices,
+so wall-clock ratios measure dispatch + collective overhead, not ICI
+bandwidth — the honest claim is *parity* (verified levels through one
+code path), with the sharded/single ratio recorded for trajectory.
+
+``run(...)`` re-invokes itself in a subprocess with
+``--xla_force_host_platform_device_count`` when the current process has
+too few devices (the flag binds at backend init), so
+``benchmarks/run.py --json`` can emit the ``dist`` suite of
+``BENCH_pr3.json`` from an ordinary single-device session.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_envelope, fmt_row, geomean
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _dist_suite(scale: int) -> dict:
+    """Small suite: one social-like and one high-diameter graph (the two
+    regimes the update-scheme policy splits on)."""
+    from repro.graphs import generators as gen
+    side = int((1 << scale) ** 0.5)
+    return {
+        "kron": gen.rmat(scale, 16, seed=1),
+        "road": gen.grid2d(side, side, shuffle=True, seed=3),
+    }
+
+
+def _median_bfs_time(levels_fn, sources) -> float:
+    ts = []
+    for s in sources:
+        t0 = time.time()
+        np.asarray(levels_fn(int(s)))
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def _run_inline(scale: int, devices: int, n_queries: int,
+                verbose: bool) -> dict:
+    from repro.core import reference_bfs
+    from repro.core.policy import prepare
+    from repro.distributed.bfs_dist import bfs_mesh
+    from repro.serve import GraphSession
+
+    mesh = bfs_mesh(devices)
+    graphs_out = {}
+    for gname, g in _dist_suite(scale).items():
+        rng = np.random.default_rng(0)
+        srcs = [int(s) for s in rng.integers(0, g.n, 3)]
+
+        # -- engine: sharded vs single-device fused single-source ----------
+        prep1 = prepare(g, w=512)
+        prepD = prepare(g, w=512, mesh=mesh)
+        verified = True
+        for s in srcs:
+            ref = reference_bfs(g, s)
+            verified &= bool((prep1.levels(s) == ref).all())
+            verified &= bool((prepD.levels(s) == ref).all())
+        assert verified, f"{gname}: sharded engine diverges from oracle"
+        t_1 = _median_bfs_time(prep1.levels, srcs)
+        t_D = _median_bfs_time(prepD.levels, srcs)
+        engine = {
+            "n_sources": len(srcs),
+            "single_sec": t_1, "sharded_sec": t_D,
+            "ratio_sharded_vs_single": t_D / max(t_1, 1e-12),
+            "verified": verified,
+        }
+
+        # -- serve: sharded wave vs sequential through the sharded engine --
+        sess = GraphSession(g, max_batch=min(4, n_queries), w=512, mesh=mesh)
+        queries = [int(q) for q in rng.integers(0, g.n, n_queries)]
+        sess.levels(queries[0])                        # warm both paths
+        sess.levels_batch(queries[: min(2, len(queries))])
+        t0 = time.time()
+        seq = [sess.levels(q) for q in queries]
+        t_seq = time.time() - t0
+        t0 = time.time()
+        wave = sess.levels_batch(queries)
+        t_wave = time.time() - t0
+        sverified = all(
+            (lv == reference_bfs(g, q)).all() and (lv == lv_s).all()
+            for q, lv, lv_s in zip(queries, wave, seq))
+        assert sverified, f"{gname}: sharded wave diverges from oracle"
+        serve = {
+            "n_queries": n_queries, "max_batch": sess.max_batch,
+            "sequential_sec": t_seq, "wave_sec": t_wave,
+            "speedup": t_seq / max(t_wave, 1e-12), "verified": sverified,
+        }
+
+        graphs_out[gname] = {
+            "n": int(g.n), "m": int(g.m),
+            "ordering": prepD.ordering, "engine": prepD.engine_name,
+            "rows_per_shard": int(prepD.problem.rows_per_shard),
+            "vss_per_shard": int(prepD.problem.num_vss),
+            "frontier_bytes_per_level": int(prepD.problem.n_fwords * 4),
+            "engine_dist": engine, "serve_dist": serve,
+        }
+        if verbose:
+            print(fmt_row(f"bench_dist/{gname}/engine", t_D * 1e6,
+                          f"vs_single={engine['ratio_sharded_vs_single']:.2f}"))
+            print(fmt_row(f"bench_dist/{gname}/serve", t_wave * 1e6,
+                          f"speedup={serve['speedup']:.2f}"))
+
+    summary = {
+        "geomean_ratio_sharded_vs_single": geomean(
+            [go["engine_dist"]["ratio_sharded_vs_single"]
+             for go in graphs_out.values()]),
+        "geomean_wave_speedup": geomean(
+            [go["serve_dist"]["speedup"] for go in graphs_out.values()]),
+        "all_verified": all(
+            go["engine_dist"]["verified"] and go["serve_dist"]["verified"]
+            for go in graphs_out.values()),
+    }
+    out = {
+        **bench_envelope("pr3_dist", scale),
+        "devices": devices,
+        "note": ("engine = fused single-source BFS, prepared single-device "
+                 "vs mesh-native (row-sharded BVSS, shard_map'd "
+                 "LevelPipeline, frontier all-gather + psum convergence); "
+                 "serve = sharded GraphSession batched waves vs sequential "
+                 "queries through the sharded engine; devices are simulated "
+                 "host-platform CPU devices, so ratios measure dispatch + "
+                 "collective overhead, not ICI"),
+        "graphs": graphs_out,
+        "summary": summary,
+    }
+    if verbose:
+        for k, v in summary.items():
+            print(f"# {k}={v if isinstance(v, bool) else f'{v:.2f}x'}")
+    return out
+
+
+def run(scale: int = 8, devices: int = 2, n_queries: int = 6,
+        json_path: str | None = None, verbose: bool = True) -> dict:
+    import jax
+
+    if len(jax.devices()) >= devices:
+        out = _run_inline(scale, devices, n_queries, verbose)
+    else:
+        # too few devices in this process: the device-count flag binds at
+        # backend init, so re-run this module in a child with it set
+        flag = f"--xla_force_host_platform_device_count={devices}"
+        if flag in os.environ.get("XLA_FLAGS", ""):
+            # the flag is already set but didn't take (non-CPU backend):
+            # recursing would spawn children forever
+            raise RuntimeError(
+                f"{flag} set but only {len(jax.devices())} devices came up")
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            tmp = f.name
+        try:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                                + flag).strip()
+            env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                                 + env.get("PYTHONPATH", "")
+                                 ).rstrip(os.pathsep)
+            cmd = [sys.executable, "-m", "benchmarks.bench_dist",
+                   "--scale", str(scale), "--devices", str(devices),
+                   "--queries", str(n_queries), "--json", tmp]
+            res = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                                 text=True, timeout=3000)
+            if res.returncode != 0:
+                raise RuntimeError(
+                    f"bench_dist subprocess failed:\n{res.stdout}\n"
+                    f"{res.stderr}")
+            if verbose and res.stdout:
+                print("\n".join(l for l in res.stdout.splitlines()
+                                if not l.startswith("# wrote ")))
+            with open(tmp) as f:
+                out = json.load(f)
+        finally:
+            os.unlink(tmp)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=2)
+    ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    run(scale=args.scale, devices=args.devices, n_queries=args.queries,
+        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,10 @@
-from .bvss import BVSS, BVSSDevice, build_bvss, to_device
+from .bvss import (BVSS, BVSSDevice, ShardedBVSS, build_bvss,
+                   build_sharded_bvss, to_device)
 from .bfs import (BlestProblem, ENGINES, INF, make_engine, reference_bfs,
                   pull_vss_jnp)
 from . import ordering
 
-__all__ = ["BVSS", "BVSSDevice", "build_bvss", "to_device", "BlestProblem",
-           "ENGINES", "INF", "make_engine", "reference_bfs", "pull_vss_jnp",
+__all__ = ["BVSS", "BVSSDevice", "ShardedBVSS", "build_bvss",
+           "build_sharded_bvss", "to_device", "BlestProblem", "ENGINES",
+           "INF", "make_engine", "reference_bfs", "pull_vss_jnp",
            "ordering"]

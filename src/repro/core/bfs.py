@@ -29,6 +29,14 @@ widths chosen on-device from the live VSS count ("bucketing") — the
 XLA-compatible stand-in for dynamically-sized kernel launches, so
 small-frontier levels of high-diameter graphs don't pay the full-queue
 cost.  The seed's sequential per-block ``while_loop`` is gone.
+
+The BVSS engines are MESH-NATIVE (DESIGN.md §2.4): a
+:class:`BlestProblem` built from a row-sharded BVSS
+(``BlestProblem.build_sharded``) runs the SAME step/finalize skeleton
+under ``shard_map`` — the pull, scatter and finalise sweep stay local to
+each shard's row block, the per-shard frontier words are all-gathered once
+per level, and the convergence test is a ``psum`` inside the single fused
+``while_loop`` (no host sync across devices, paper §4.3 preserved).
 """
 from __future__ import annotations
 
@@ -39,9 +47,12 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
-from repro.core.bvss import BVSS, BVSSDevice, to_device
-from repro.core.level_pipeline import LevelPipeline, compose_step, run_levels
+from repro.core.bvss import (BVSS, BVSSDevice, ShardedBVSS,
+                             ShardedBVSSDevice, shard_to_device, to_device)
+from repro.core.level_pipeline import (LevelPipeline, compose_step,
+                                       global_any, run_levels)
 from repro.graphs import Graph, src_of_edges, to_dense_bits
 from repro.kernels import finalize_pack_sweep, pull_vss_kernel
 from repro.kernels.ref import finalize_pack_ref
@@ -122,10 +133,15 @@ def _frontier_bytes(F: jnp.ndarray, sets: jnp.ndarray, sigma: int) -> jnp.ndarra
 class BlestProblem:
     n: int
     sigma: int
-    n_sets: int
-    num_vss: int
-    n_fwords: int
-    dev: BVSSDevice
+    n_sets: int       # GLOBAL slice sets (columns) in either mode
+    num_vss: int      # per-shard padded VSS count when sharded
+    n_fwords: int     # gathered (global) frontier words when sharded
+    dev: BVSSDevice | ShardedBVSSDevice
+    # mesh-native row partition (DESIGN §2.4); mesh=None = single-device
+    mesh: Mesh | None = None
+    axis: str = "data"
+    n_shards: int = 1
+    rows_per_shard: int = 0
 
     @staticmethod
     def build(bvss: BVSS) -> "BlestProblem":
@@ -133,16 +149,36 @@ class BlestProblem:
                             num_vss=bvss.num_vss,
                             n_fwords=bvss.n_frontier_words, dev=to_device(bvss))
 
+    @staticmethod
+    def build_sharded(sb: ShardedBVSS, mesh: Mesh, axis: str = "data"
+                      ) -> "BlestProblem":
+        """Row-sharded problem: ``dev`` holds the shard-stacked arrays
+        committed with their ``P(axis)`` placement; the engines run the
+        level loop under ``shard_map`` over ``axis``."""
+        if mesh.shape[axis] != sb.n_shards:
+            raise ValueError(
+                f"mesh axis {axis!r} has {mesh.shape[axis]} devices but the "
+                f"BVSS is built for {sb.n_shards} shards")
+        return BlestProblem(n=sb.n, sigma=sb.sigma, n_sets=sb.n_sets,
+                            num_vss=sb.num_vss_pad,
+                            n_fwords=sb.n_frontier_words,
+                            dev=shard_to_device(sb, mesh, axis),
+                            mesh=mesh, axis=axis, n_shards=sb.n_shards,
+                            rows_per_shard=sb.rows_per_shard)
+
 
 PullFn = Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
 
 
 class _BlestState(NamedTuple):
     levels: jnp.ndarray  # (n + 1,) int32, slot n = dummy row sink
-    F: jnp.ndarray       # (n_fwords,) uint32 packed frontier
+                         #   (sharded: (rps + 1,) LOCAL rows, dummy = rps)
+    F: jnp.ndarray       # (n_fwords,) uint32 packed frontier (global; under
+                         #   shard_map each shard carries the gathered copy)
     Q: jnp.ndarray       # (qcap,) int32 compacted VSS queue, dummy-padded
-    count: jnp.ndarray   # int32 live VSS count (termination + bucket choice)
+    count: jnp.ndarray   # int32 live VSS count (LOCAL: bucket choice)
     marks: jnp.ndarray   # (n + 1,) uint8 lazy scratch ((1,) dummy when eager)
+    cont: jnp.ndarray    # bool continue flag (mesh-global via psum)
 
 
 def _round_width(x: int) -> int:
@@ -179,45 +215,14 @@ def make_compactor(dev: BVSSDevice, num_vss: int, qcap: int) -> Callable:
     return compact
 
 
-def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
-                   pull_impl: PullFn | None = None, use_kernels: bool = True,
-                   buckets: int = 2, max_levels: int | None = None
-                   ) -> Callable:
-    """Build the jitted fused BLEST BFS (Alg. 2 eager / Alg. 3 lazy).
+def _make_pull_step(dev, pull: PullFn, sigma: int, n_rows: int,
+                    widths: list[int], *, lazy: bool) -> Callable:
+    """The bucketed gather → pull → update step, parameterised over the
+    (device-local) BVSS views and the row extent — the ONE step body both
+    the single-device and the shard_map'd engines run (DESIGN §2.3/§2.4).
 
-    The level step is one batched pull over the compacted queue at a static
-    width (two cond-selected buckets by default), one scatter (min for
-    eager levels, max for lazy marks), and one fused
-    finalise + frontier-pack + set-flag sweep feeding cumsum compaction.
-
-    pull_impl:   custom pull (masks, fbytes, sigma) -> hits; overrides the
-                 kernel/jnp switch.
-    use_kernels: route pull through Pallas ``bvss_pull`` and the tail
-                 through Pallas ``finalize_pack_sweep`` (interpret-mode on
-                 CPU); False = pure-jnp fallback for both.
-    buckets:     1 = always process the full queue width; >= 2 (default)
-                 = two cond-selected widths, num_vss/8 and full (more
-                 graduations are not implemented — every extra bucket is
-                 another compiled branch).
-    """
-    p = problem
-    dev = p.dev
-    sigma = p.sigma
-    widths = queue_widths(p.num_vss, buckets)
-    qcap = widths[-1]
-    max_lv = max_levels if max_levels is not None else p.n + 1
-
-    if pull_impl is not None:
-        pull = pull_impl
-    elif use_kernels:
-        pull = pull_vss_kernel
-    else:
-        pull = pull_vss_jnp
-    fin_impl = finalize_pack_sweep if use_kernels else finalize_pack_ref
-    fin = functools.partial(fin_impl, sigma=sigma, n_fwords=p.n_fwords,
-                            n_sets=p.n_sets)
-
-    compact = make_compactor(dev, p.num_vss, qcap)
+    ``n_rows`` is the scatter extent: the global ``n`` single-device, the
+    shard's ``rows_per_shard`` under a mesh (row ids are local there)."""
 
     def pull_update(state: _BlestState, lvl, width: int) -> _BlestState:
         """gather → pull → update over the first ``width`` queue slots
@@ -229,7 +234,7 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
         h = hits.reshape(-1)
         if lazy:
             # Alg. 3 stage 1: fire-and-forget mark (REDG analogue)
-            marks = jnp.zeros((p.n + 1,), dtype=jnp.uint8)
+            marks = jnp.zeros((n_rows + 1,), dtype=jnp.uint8)
             marks = marks.at[rows].max(h.astype(jnp.uint8))
             return state._replace(marks=marks)
         # Alg. 2: eager visited-check-and-set (ATOMG analogue):
@@ -247,6 +252,57 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
             lambda s, l: pull_update(s, l, full),
             state, lvl)
 
+    return step
+
+
+def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
+                   pull_impl: PullFn | None = None, use_kernels: bool = True,
+                   buckets: int = 2, max_levels: int | None = None
+                   ) -> Callable:
+    """Build the jitted fused BLEST BFS (Alg. 2 eager / Alg. 3 lazy).
+
+    The level step is one batched pull over the compacted queue at a static
+    width (two cond-selected buckets by default), one scatter (min for
+    eager levels, max for lazy marks), and one fused
+    finalise + frontier-pack + set-flag sweep feeding cumsum compaction.
+    A mesh-sharded ``problem`` runs the same pipeline under ``shard_map``
+    (local pull/scatter/finalise, frontier all-gather, psum convergence).
+
+    pull_impl:   custom pull (masks, fbytes, sigma) -> hits; overrides the
+                 kernel/jnp switch.
+    use_kernels: route pull through Pallas ``bvss_pull`` and the tail
+                 through Pallas ``finalize_pack_sweep`` (interpret-mode on
+                 CPU); False = pure-jnp fallback for both.
+    buckets:     1 = always process the full queue width; >= 2 (default)
+                 = two cond-selected widths, num_vss/8 and full (more
+                 graduations are not implemented — every extra bucket is
+                 another compiled branch).
+    """
+    p = problem
+    sigma = p.sigma
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    max_lv = max_levels if max_levels is not None else p.n + 1
+
+    if pull_impl is not None:
+        pull = pull_impl
+    elif use_kernels:
+        pull = pull_vss_kernel
+    else:
+        pull = pull_vss_jnp
+    fin_impl = finalize_pack_sweep if use_kernels else finalize_pack_ref
+
+    if p.mesh is not None:
+        return _make_blest_bfs_sharded(p, lazy=lazy, pull=pull,
+                                       fin_impl=fin_impl, widths=widths,
+                                       qcap=qcap, max_lv=max_lv)
+
+    dev = p.dev
+    fin = functools.partial(fin_impl, sigma=sigma, n_fwords=p.n_fwords,
+                            n_sets=p.n_sets)
+    compact = make_compactor(dev, p.num_vss, qcap)
+    step = _make_pull_step(dev, pull, sigma, p.n, widths, lazy=lazy)
+
     def finalize(state: _BlestState, lvl) -> _BlestState:
         if lazy:
             # Alg. 3 stage 2 fused: finalise + pack + set flags in one sweep
@@ -258,10 +314,11 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
             _, fwords, set_active = fin(state.levels[:p.n], lvl)
             levels = state.levels
         Q, count = compact(set_active)
-        return state._replace(levels=levels, F=fwords, Q=Q, count=count)
+        return state._replace(levels=levels, F=fwords, Q=Q, count=count,
+                              cont=count > 0)
 
     pipe = LevelPipeline(step=step, finalize=finalize,
-                         active=lambda s: s.count > 0)
+                         active=lambda s: s.cont)
 
     def bfs(src: jnp.ndarray) -> jnp.ndarray:
         src = jnp.asarray(src, dtype=jnp.int32)
@@ -271,9 +328,87 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
         set0 = jnp.zeros((p.n_sets,), dtype=bool).at[src // sigma].set(True)
         Q, count = compact(set0)
         marks0 = jnp.zeros((p.n + 1 if lazy else 1,), dtype=jnp.uint8)
-        state = _BlestState(levels, F, Q, count, marks0)
+        state = _BlestState(levels, F, Q, count, marks0, count > 0)
         state, _ = run_levels(pipe, state, max_levels=max_lv)
         return state.levels[:p.n]
+
+    return jax.jit(bfs)
+
+
+def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
+                            fin_impl, widths: list[int], qcap: int,
+                            max_lv: int) -> Callable:
+    """The mesh-native BLEST engine (DESIGN §2.4): the whole level loop is
+    ONE ``shard_map``'d ``while_loop`` over the row partition.  Per level,
+    each shard runs the same fused step as the single-device engine on its
+    local rows (``bvss_pull`` + scatter + ``finalize_pack_sweep``), the
+    per-shard frontier words are all-gathered into the global frontier, and
+    the compacted per-shard queues feed a psum'd convergence test — no host
+    sync anywhere inside the loop."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    lwords = rps // 32
+    all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
+    fin = functools.partial(fin_impl, sigma=sigma, n_fwords=lwords,
+                            n_sets=rps // sigma)
+
+    def local_loop(masks, row_ids, v2r, src):
+        """One shard's slice of the fused BFS (runs under shard_map)."""
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+        compact = make_compactor(dev, p.num_vss, qcap)
+        step = _make_pull_step(dev, pull, sigma, rps, widths, lazy=lazy)
+        d = jax.lax.axis_index(axis)
+
+        def finalize(state: _BlestState, lvl) -> _BlestState:
+            # local fused sweep over THIS shard's rows; its local set flags
+            # are meaningless (sets are global) and discarded
+            if lazy:
+                lv_loc, fw_loc, _ = fin(state.levels[:rps], lvl,
+                                        marks=state.marks[:rps])
+                levels = jnp.concatenate([lv_loc, state.levels[rps:]])
+            else:
+                _, fw_loc, _ = fin(state.levels[:rps], lvl)
+                levels = state.levels
+            # the one cross-device term: σ-bit frontier words, all-gathered
+            F = jax.lax.all_gather(fw_loc, axis, tiled=True)  # (n_fwords,)
+            set_active = _frontier_bytes(F, all_sets, sigma) != 0
+            Q, count = compact(set_active)
+            return state._replace(levels=levels, F=F, Q=Q, count=count,
+                                  cont=global_any(count > 0, axis))
+
+        pipe = LevelPipeline(step=step, finalize=finalize,
+                             active=lambda s: s.cont)
+
+        # init: local levels/marks, global frontier + per-shard queue
+        lsrc = src - d * rps
+        own = (lsrc >= 0) & (lsrc < rps)
+        levels = jnp.full((rps + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[jnp.where(own, lsrc, rps)].set(
+            jnp.where(own, 0, INF))
+        F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+        set0 = jnp.zeros((p.n_sets,), dtype=bool).at[src // sigma].set(True)
+        Q, count = compact(set0)
+        marks0 = jnp.zeros((rps + 1 if lazy else 1,), dtype=jnp.uint8)
+        state = _BlestState(levels, F, Q, count, marks0,
+                            global_any(count > 0, axis))
+        state, _ = run_levels(pipe, state, max_levels=max_lv)
+        return state.levels[None, :rps]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(),),
+                   out_specs=P(axis), check_rep=False)
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 jnp.asarray(src, dtype=jnp.int32))
+        return out.reshape(-1)[:p.n]
 
     return jax.jit(bfs)
 
@@ -290,6 +425,8 @@ class _BrsState(NamedTuple):
 def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
                  ) -> Callable:
     p = problem
+    if p.mesh is not None:
+        return _make_brs_bfs_sharded(p, max_levels=max_levels)
     dev = p.dev
     sigma = p.sigma
     n_pad = p.n_fwords * 32
@@ -324,6 +461,72 @@ def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
         state = _BrsState(levels, F, jnp.bool_(True))
         state, _ = run_levels(pipe, state, max_levels=max_lv)
         return state.levels[:p.n]
+
+    return jax.jit(bfs)
+
+
+def _make_brs_bfs_sharded(p: BlestProblem, *, max_levels: int | None
+                          ) -> Callable:
+    """Mesh-native BRS: the frontier-oblivious sweep visits every VSS of
+    every SHARD each level (paper drawback #2 doesn't shrink under a mesh —
+    that is the point of the baseline); only the frontier words cross
+    devices."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    lwords = rps // 32
+    max_lv = max_levels if max_levels is not None else p.n + 1
+    all_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
+
+    def local_loop(masks, row_ids, v2r, src):
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+        d = jax.lax.axis_index(axis)
+
+        def gather(s: _BrsState):
+            return (dev.masks[all_ids],
+                    _frontier_bytes(s.F, dev.virtual_to_real[all_ids], sigma))
+
+        def update(s: _BrsState, hits, lvl) -> _BrsState:
+            rows = dev.row_ids[all_ids].reshape(-1)
+            upd = jnp.where(hits.reshape(-1), lvl, INF).astype(jnp.int32)
+            return s._replace(levels=s.levels.at[rows].min(upd))
+
+        def finalize(s: _BrsState, lvl) -> _BrsState:
+            new = s.levels[:rps] == lvl
+            fw_loc = _pack_bits(new, lwords)
+            F = jax.lax.all_gather(fw_loc, axis, tiled=True)
+            return s._replace(F=F, cont=global_any(new.any(), axis))
+
+        pipe = LevelPipeline(
+            step=compose_step(gather,
+                              lambda m, fb: pull_vss_jnp(m, fb, sigma),
+                              update),
+            finalize=finalize, active=lambda s: s.cont)
+
+        lsrc = src - d * rps
+        own = (lsrc >= 0) & (lsrc < rps)
+        levels = jnp.full((rps + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[jnp.where(own, lsrc, rps)].set(
+            jnp.where(own, 0, INF))
+        F = jnp.zeros((p.n_fwords,), dtype=jnp.uint32)
+        F = F.at[src // 32].set(jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+        state = _BrsState(levels, F, jnp.bool_(True))
+        state, _ = run_levels(pipe, state, max_levels=max_lv)
+        return state.levels[None, :rps]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(),),
+                   out_specs=P(axis), check_rep=False)
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 jnp.asarray(src, dtype=jnp.int32))
+        return out.reshape(-1)[:p.n]
 
     return jax.jit(bfs)
 
@@ -438,7 +641,9 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
     """Build a jitted BFS callable ``f(src) -> levels`` for the named engine.
 
     ``problem`` lets callers that already hold a :class:`BlestProblem`
-    (core.policy.prepare, GraphSession) skip rebuilding the device BVSS.
+    (core.policy.prepare, GraphSession) skip rebuilding the device BVSS;
+    a mesh-sharded problem routes the BVSS engines through the
+    ``shard_map``'d pipeline (DESIGN §2.4).
     ``engine="multi_source"`` builds the batched BVSS bit-SpMM engine
     ``f(sources (S,)) -> levels (n, S)`` and requires ``n_sources``.
     ``block`` is accepted for backwards compatibility and ignored: the fused

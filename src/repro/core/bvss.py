@@ -170,6 +170,128 @@ def build_bvss(g: Graph, sigma: int = 8) -> BVSS:
                 virtual_to_real=virtual_to_real)
 
 
+# ---------------------------------------------------------------------------
+# Row-sharded BVSS (mesh-native build path, DESIGN §2.4)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardedBVSS:
+    """Row-partitioned BVSS: shard d owns destination rows
+    [d·rows_per_shard, (d+1)·rows_per_shard), i.e. the slices that pull INTO
+    its vertex range.  Row ids are LOCAL (dummy = rows_per_shard); slice-set
+    ids stay GLOBAL, because columns (frontier bits) are global — the σ-bit
+    frontier words are the one all-gathered array.  All shards are padded to
+    a common VSS count so one SPMD program serves every shard."""
+
+    n: int                       # global vertex count
+    m: int                       # global edge count
+    sigma: int
+    n_shards: int
+    rows_per_shard: int          # 32-aligned so row blocks = frontier words
+    num_vss_pad: int             # per-shard VSS count (padded to common max)
+    n_sets: int                  # GLOBAL slice sets (columns)
+    masks: np.ndarray            # (D, num_vss_pad, LANES) uint32
+    row_ids: np.ndarray          # (D, num_vss_pad, spw, LANES) int32 LOCAL
+    virtual_to_real: np.ndarray  # (D, num_vss_pad) int32 GLOBAL set ids
+
+    @property
+    def slices_per_word(self) -> int:
+        return 32 // self.sigma
+
+    @property
+    def n_frontier_words(self) -> int:
+        """Gathered (global) frontier length in uint32 words: the all-gather
+        of every shard's rows_per_shard//32 local words.  Covers n_sets·σ
+        bits because rows_per_shard·D ≥ n rounded up to 32."""
+        return self.n_shards * (self.rows_per_shard // 32)
+
+
+def build_sharded_bvss(g: Graph, n_shards: int, sigma: int = 8
+                       ) -> ShardedBVSS:
+    """Row-partition ``g`` into ``n_shards`` rectangular (local rows ×
+    global columns) BVSS blocks (absorbs the old distributed ``shard_bvss``).
+
+    Each shard's block is built by :func:`build_bvss` over the subgraph of
+    edges whose DESTINATION lands in the shard's row range, destinations
+    relabelled locally and sources (columns / frontier ids) kept global."""
+    from repro.graphs import from_edges, src_of_edges
+
+    n = g.n
+    rows_per_shard = -(-n // n_shards)
+    rows_per_shard = ((rows_per_shard + 31) // 32) * 32  # align frontier words
+    spw = 32 // sigma
+    src = src_of_edges(g)
+    dst = g.indices.astype(np.int64)
+    per_shard = []
+    for d in range(n_shards):
+        lo, hi = d * rows_per_shard, min((d + 1) * rows_per_shard, n)
+        keep = (dst >= lo) & (dst < hi)
+        # drop_loops=False: local dst ids numerically colliding with global
+        # src ids are NOT self loops
+        sub = from_edges(n, src[keep], dst[keep] - lo,
+                         dedup=True, drop_loops=False)
+        per_shard.append(build_bvss(sub, sigma=sigma))
+    num_vss_pad = max(max(b.num_vss for b in per_shard), 1)
+    D = n_shards
+    masks = np.zeros((D, num_vss_pad, LANES), np.uint32)
+    row_ids = np.full((D, num_vss_pad, spw, LANES), rows_per_shard, np.int32)
+    # pad VSS entries keep set id 0: their masks are all-zero, so a level
+    # whose frontier touches set 0 enqueues them as exact no-op pulls
+    v2r = np.zeros((D, num_vss_pad), np.int32)
+    for d, b in enumerate(per_shard):
+        if b.num_vss == 0:
+            continue
+        masks[d, :b.num_vss] = b.masks
+        rid = b.row_ids.copy()
+        rid[rid == b.n] = rows_per_shard           # dummy -> local dummy
+        row_ids[d, :b.num_vss] = np.minimum(rid, rows_per_shard)
+        v2r[d, :b.num_vss] = b.virtual_to_real
+    return ShardedBVSS(n=n, m=g.m, sigma=sigma, n_shards=D,
+                       rows_per_shard=rows_per_shard,
+                       num_vss_pad=num_vss_pad,
+                       n_sets=(n + sigma - 1) // sigma,
+                       masks=masks, row_ids=row_ids, virtual_to_real=v2r)
+
+
+class ShardedBVSSDevice(NamedTuple):
+    """Per-shard device views of a :class:`ShardedBVSS` (a pytree).  The
+    leading axis is the shard axis; inside ``shard_map`` each device sees
+    its (1, ...) block and strips it to the same (masks, row_ids,
+    virtual_to_real) surface the single-device engines consume.  One
+    all-zero dummy VSS (index ``num_vss_pad``) is appended per shard, its
+    rows mapped to the local dummy level slot ``rows_per_shard``."""
+
+    masks: "jnp.ndarray"            # (D, num_vss_pad + 1, LANES) uint32
+    row_ids: "jnp.ndarray"          # (D, num_vss_pad + 1, spw, LANES) int32
+    virtual_to_real: "jnp.ndarray"  # (D, num_vss_pad + 1) int32
+
+
+def shard_to_device(sb: ShardedBVSS, mesh=None, axis: str = "data"
+                    ) -> ShardedBVSSDevice:
+    """Append the per-shard dummy VSS and (when ``mesh`` is given) commit
+    the stacked arrays with their row-partition sharding so every engine
+    build and serving call starts from already-placed shards."""
+    import jax
+    import jax.numpy as jnp
+
+    D = sb.n_shards
+    spw = sb.slices_per_word
+    masks = np.concatenate(
+        [sb.masks, np.zeros((D, 1, LANES), np.uint32)], axis=1)
+    row_ids = np.concatenate(
+        [sb.row_ids,
+         np.full((D, 1, spw, LANES), sb.rows_per_shard, np.int32)], axis=1)
+    v2r = np.concatenate([sb.virtual_to_real, np.zeros((D, 1), np.int32)],
+                         axis=1)
+    if mesh is not None:
+        from repro.distributed.bfs_dist import problem_sharding
+        sharding = problem_sharding(mesh, axis)
+        put = lambda x: jax.device_put(x, sharding)
+    else:
+        put = jnp.asarray
+    return ShardedBVSSDevice(masks=put(masks), row_ids=put(row_ids),
+                             virtual_to_real=put(v2r))
+
+
 class BVSSDevice(NamedTuple):
     """Device-resident BVSS (a pytree). One extra all-zero dummy VSS is
     appended so padded queue entries are harmless, and the level array gets

@@ -20,6 +20,14 @@ plain composition use :func:`compose_step`; the BLEST engines build a
 bucketed step instead (two statically-shaped queue widths selected by
 ``lax.cond`` on the live VSS count — the XLA-compatible stand-in for the
 paper's dynamically-sized kernel launches).
+
+The same skeleton is mesh-native (DESIGN §2.4): under ``shard_map`` the
+``step`` stays purely local (each shard pulls/scatters its row block), the
+``finalize`` all-gathers the per-shard frontier words, and the ``active``
+predicate is made globally consistent with :func:`global_any` — a ``psum``
+convergence test INSIDE the fused ``while_loop``, so the paper's
+no-host-sync discipline (§4.3) holds across devices too.  ``run_levels``
+is unchanged in either mode: one driver, any mesh shape.
 """
 from __future__ import annotations
 
@@ -51,6 +59,16 @@ def compose_step(gather: Callable[[State], tuple],
     def step(state: State, lvl: jnp.ndarray) -> State:
         return update(state, pull(*gather(state)), lvl)
     return step
+
+
+def global_any(pred: jnp.ndarray, axis: str | None) -> jnp.ndarray:
+    """Continuation predicate across the mesh: ``pred`` is this shard's
+    local "still work to do" bool; the result is True iff ANY shard says so
+    (identical on every device, so the shared ``while_loop`` stays in
+    lock-step).  ``axis=None`` is the single-device identity."""
+    if axis is None:
+        return pred
+    return jax.lax.psum(pred.astype(jnp.int32), axis) > 0
 
 
 def run_levels(pipe: LevelPipeline, state: State, *, max_levels: int

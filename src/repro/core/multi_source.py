@@ -17,6 +17,14 @@ requeue / one lock-step level) so GraphSession (``repro.serve``) can drive
 the same step with host control between levels — the wave-serving loop with
 mid-flight slot refills — while :func:`make_multi_source_bfs` fuses the whole
 loop on device for the fixed-cohort case (closeness centrality).
+
+Both are MESH-NATIVE (DESIGN §2.4): a row-sharded
+:class:`~repro.core.bfs.BlestProblem` runs the same step/finalize under
+``shard_map`` — each shard pulls/scatters its local ``(rows_per_shard, S)``
+level block, every shard carries a replica of the stacked global frontier
+words (that replica IS each device's pull operand), and one frontier-word
+all-gather per level refreshes it.  The host-visible wave state then has a
+leading shard axis on every field.
 """
 from __future__ import annotations
 
@@ -29,7 +37,8 @@ import numpy as np
 
 from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
                             queue_widths)
-from repro.core.level_pipeline import LevelPipeline, run_levels
+from repro.core.bvss import ShardedBVSSDevice
+from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
 from repro.graphs import Graph
 from repro.kernels import bvss_spmm
 from repro.kernels.ref import bvss_spmm_ref
@@ -39,10 +48,16 @@ INF = np.int32(np.iinfo(np.int32).max)
 
 class MSState(NamedTuple):
     levels: jnp.ndarray   # (n+1, S) int32; row n is the dummy-row sink
+                          #   sharded: (D, rps+1, S), LOCAL rows per shard
     F: jnp.ndarray        # (n_fwords, S) uint32 per-column packed frontier
+                          #   sharded: (D, n_fwords, S), one global replica
+                          #   per shard (each device's pull operand)
     Q: jnp.ndarray        # (qcap,) int32 union VSS queue, dummy-padded
-    count: jnp.ndarray    # int32 live VSS count (termination + bucket pick)
+                          #   sharded: (D, qcap), one queue per shard
+    count: jnp.ndarray    # int32 live VSS count (bucket pick; sharded (D,))
     col_lvl: jnp.ndarray  # (S,) int32 per-column BFS depth reached so far
+                          #   sharded: (D, S) identical replicas
+    cont: jnp.ndarray     # bool: any live VSS anywhere (mesh-global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,7 +66,10 @@ class MSEngine:
 
     ``step``/``finalize`` plug into :class:`LevelPipeline` for the fused
     on-device loop; ``insert``/``requeue``/``level_step``/``col_live`` are
-    the wave-serving surface (jitted, host-driven between levels)."""
+    the wave-serving surface (jitted, host-driven between levels).
+    ``levels_of(state, slot)`` extracts one column's ``(n,)`` levels in
+    global row ids so the serving layer never needs to know the shard
+    layout."""
 
     problem: BlestProblem
     n_slots: int
@@ -65,19 +83,24 @@ class MSEngine:
                           # one full level — liveness piggybacks on the
                           # step so serving pays ONE dispatch per level
     col_live: Callable    # jitted (state) -> (S,) bool frontier non-empty
+    levels_of: Callable   # (state, slot) -> (n,) levels in global row ids
 
 
 def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                    use_kernel: bool = True, buckets: int = 2) -> MSEngine:
-    """Build the S-column lock-step BVSS level machinery."""
+    """Build the S-column lock-step BVSS level machinery (mesh-native when
+    ``problem`` is sharded)."""
     p = problem
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    if p.mesh is not None:
+        return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
+                                       buckets=buckets)
     dev = p.dev
     sigma = p.sigma
     S = n_slots
     n, n_fwords = p.n, p.n_fwords
     widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
-    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
     compact = make_compactor(dev, p.num_vss, qcap)
     all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
     n_pad = n_fwords * 32
@@ -109,7 +132,7 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         set_active = (_frontier_bytes(state.F, all_sets, sigma) != 0
                       ).any(axis=1)
         Q, count = compact(set_active)
-        return state._replace(Q=Q, count=count)
+        return state._replace(Q=Q, count=count, cont=count > 0)
 
     def finalize(state: MSState) -> MSState:
         nxt = (state.col_lvl + 1)[None, :]
@@ -131,7 +154,8 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         st = MSState(levels=levels, F=F,
                      Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
                      count=jnp.int32(0),
-                     col_lvl=jnp.zeros((S,), dtype=jnp.int32))
+                     col_lvl=jnp.zeros((S,), dtype=jnp.int32),
+                     cont=jnp.bool_(False))
         return requeue(st)
 
     def idle() -> MSState:
@@ -139,7 +163,8 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                        F=jnp.zeros((n_fwords, S), dtype=jnp.uint32),
                        Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
                        count=jnp.int32(0),
-                       col_lvl=jnp.zeros((S,), dtype=jnp.int32))
+                       col_lvl=jnp.zeros((S,), dtype=jnp.int32),
+                       cont=jnp.bool_(False))
 
     def insert(state: MSState, slot: jnp.ndarray, src: jnp.ndarray
                ) -> MSState:
@@ -163,7 +188,199 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         insert=jax.jit(insert), requeue=jax.jit(requeue),
         step=step, finalize=finalize,
         level_step=jax.jit(level_step),
-        col_live=jax.jit(lambda st: (st.F != 0).any(axis=0)))
+        col_live=jax.jit(lambda st: (st.F != 0).any(axis=0)),
+        levels_of=lambda st, slot: st.levels[:n, slot])
+
+
+# ---------------------------------------------------------------------------
+# mesh-native wave machinery (DESIGN §2.4): shard_map'd step/finalize
+# ---------------------------------------------------------------------------
+class _MSLocals(NamedTuple):
+    """The per-shard (unstacked-state) wave ops, shared by the host-driven
+    serving surface and the fused on-device loop."""
+    init: Callable
+    insert: Callable
+    requeue: Callable
+    step: Callable
+    finalize: Callable
+
+
+def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
+                    qcap: int) -> Callable:
+    """Build ``locals_for(dev) -> _MSLocals`` closing over one shard's BVSS
+    views.  State fields here are LOCAL: levels (rps+1, S), F (n_fwords, S)
+    global replica, Q (qcap,), count/cont scalars, col_lvl (S,)."""
+    axis = p.axis
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    lwords = rps // 32
+    all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+    def locals_for(dev: ShardedBVSSDevice) -> _MSLocals:
+        compact = make_compactor(dev, p.num_vss, qcap)
+
+        def pull_update(st: MSState, width: int) -> MSState:
+            ids = jax.lax.slice_in_dim(st.Q, 0, width)
+            fb = _frontier_bytes(st.F, dev.virtual_to_real[ids], sigma)
+            counts = spmm(dev.masks[ids], fb, sigma=sigma)
+            rows = dev.row_ids[ids].reshape(-1)   # LOCAL rows, dummy = rps
+            cand = (st.col_lvl + 1)[None, :]
+            upd = jnp.where(counts.reshape(-1, S) > 0, cand, INF
+                            ).astype(jnp.int32)
+            return st._replace(levels=st.levels.at[rows].min(upd))
+
+        def step(st: MSState) -> MSState:
+            if len(widths) == 1:
+                return pull_update(st, widths[0])
+            small, full = widths
+            return jax.lax.cond(st.count <= small,
+                                lambda s: pull_update(s, small),
+                                lambda s: pull_update(s, full), st)
+
+        def requeue(st: MSState) -> MSState:
+            # F is already the global replica: no gather needed here
+            set_active = (_frontier_bytes(st.F, all_sets, sigma) != 0
+                          ).any(axis=1)
+            Q, count = compact(set_active)
+            return st._replace(Q=Q, count=count,
+                               cont=global_any(count > 0, axis))
+
+        def finalize(st: MSState) -> MSState:
+            nxt = (st.col_lvl + 1)[None, :]
+            new = st.levels[:rps] == nxt                     # (rps, S)
+            fw = jnp.sum(new.reshape(lwords, 32, S).astype(jnp.uint32)
+                         * weights[None, :, None], axis=1, dtype=jnp.uint32)
+            advanced = global_any(new.any(axis=0), axis)     # (S,)
+            # the one cross-device term per level: refresh every shard's
+            # global frontier replica from the per-shard new words
+            F = jax.lax.all_gather(fw, axis, tiled=True)     # (n_fwords, S)
+            st = st._replace(F=F, col_lvl=st.col_lvl + advanced)
+            return requeue(st)
+
+        def init(sources: jnp.ndarray) -> MSState:
+            d = jax.lax.axis_index(axis)
+            cols = jnp.arange(S)
+            lsrc = sources - d * rps
+            own = (lsrc >= 0) & (lsrc < rps)
+            levels = jnp.full((rps + 1, S), INF, dtype=jnp.int32)
+            levels = levels.at[jnp.where(own, lsrc, rps), cols].set(
+                jnp.where(own, 0, INF))
+            F = jnp.zeros((p.n_fwords, S), dtype=jnp.uint32)
+            F = F.at[sources // 32, cols].set(
+                jnp.uint32(1) << (sources % 32).astype(jnp.uint32))
+            st = MSState(levels=levels, F=F,
+                         Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
+                         count=jnp.int32(0),
+                         col_lvl=jnp.zeros((S,), dtype=jnp.int32),
+                         cont=jnp.bool_(False))
+            return requeue(st)
+
+        def insert(st: MSState, slot, src) -> MSState:
+            d = jax.lax.axis_index(axis)
+            slot = jnp.asarray(slot, dtype=jnp.int32)
+            src = jnp.asarray(src, dtype=jnp.int32)
+            lsrc = src - d * rps
+            own = (lsrc >= 0) & (lsrc < rps)
+            levels = st.levels.at[:, slot].set(INF)
+            levels = levels.at[jnp.where(own, lsrc, rps), slot].set(
+                jnp.where(own, 0, INF))
+            # F is the global replica: every shard sets the same bit
+            F = st.F.at[:, slot].set(jnp.uint32(0))
+            F = F.at[src // 32, slot].set(
+                jnp.uint32(1) << (src % 32).astype(jnp.uint32))
+            return st._replace(levels=levels, F=F,
+                               col_lvl=st.col_lvl.at[slot].set(0))
+
+        return _MSLocals(init=init, insert=insert, requeue=requeue,
+                         step=step, finalize=finalize)
+
+    return locals_for
+
+
+def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
+                            buckets: int) -> MSEngine:
+    """Host-driven wave surface over the shard_map'd local ops: every state
+    field gains a leading shard axis; each public fn is one jitted
+    shard_map dispatch."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs, state_specs
+
+    mesh, axis = p.mesh, p.axis
+    D, rps = p.n_shards, p.rows_per_shard
+    S = n_slots
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    locals_for = _make_ms_locals(p, S, spmm, widths, qcap)
+
+    state_spec = state_specs(axis)
+    dev_specs = problem_specs(axis)
+    dev_args = (p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real)
+
+    def _unstack(st: MSState) -> MSState:
+        return jax.tree_util.tree_map(lambda x: x[0], st)
+
+    def _stack(st: MSState) -> MSState:
+        return jax.tree_util.tree_map(lambda x: x[None], st)
+
+    def sm(f, in_specs, out_specs):
+        fn = shard_map(f, mesh=mesh, in_specs=dev_specs + in_specs,
+                       out_specs=out_specs, check_rep=False)
+        return lambda *args: fn(*dev_args, *args)
+
+    def _init(masks, row_ids, v2r, sources):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        return _stack(loc.init(sources))
+
+    def _insert(masks, row_ids, v2r, st, slot, src):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        return _stack(loc.insert(_unstack(st), slot, src))
+
+    def _requeue(masks, row_ids, v2r, st):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        return _stack(loc.requeue(_unstack(st)))
+
+    def _level_step(masks, row_ids, v2r, st):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        st = loc.finalize(loc.step(_unstack(st)))
+        return _stack(st), (st.F != 0).any(axis=0)[None]
+
+    init_sm = sm(_init, (P(),), state_spec)
+    insert_sm = sm(_insert, (state_spec, P(), P()), state_spec)
+    requeue_sm = sm(_requeue, (state_spec,), state_spec)
+    level_sm = sm(_level_step, (state_spec,), (state_spec, P(axis)))
+
+    def idle() -> MSState:
+        sh = lambda a: jax.device_put(a, NamedSharding(mesh, P(axis)))
+        return MSState(
+            levels=sh(np.full((D, rps + 1, S), INF, np.int32)),
+            F=sh(np.zeros((D, p.n_fwords, S), np.uint32)),
+            Q=sh(np.full((D, qcap), p.num_vss, np.int32)),
+            count=sh(np.zeros((D,), np.int32)),
+            col_lvl=sh(np.zeros((D, S), np.int32)),
+            cont=sh(np.zeros((D,), bool)))
+
+    def level_step(st: MSState) -> tuple[MSState, jnp.ndarray]:
+        st, live = level_sm(st)
+        return st, live[0]
+
+    def levels_of(st: MSState, slot) -> jnp.ndarray:
+        # slice the column first: moves one (n,) column, not (n, S)
+        return st.levels[:, :rps, slot].reshape(-1)[:p.n]
+
+    return MSEngine(
+        problem=p, n_slots=S,
+        init=jax.jit(lambda sources: init_sm(
+            jnp.asarray(sources, dtype=jnp.int32))),
+        idle=idle,
+        insert=jax.jit(lambda st, slot, src: insert_sm(st, slot, src)),
+        requeue=jax.jit(requeue_sm),
+        step=None, finalize=None,   # fused via make_multi_source_bfs
+        level_step=jax.jit(level_step),
+        col_live=jax.jit(lambda st: (st.F[0] != 0).any(axis=0)),
+        levels_of=levels_of)
 
 
 def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
@@ -172,22 +389,66 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
                           bvss=None, problem: BlestProblem | None = None,
                           buckets: int = 2) -> Callable:
     """Build jitted ``f(sources (S,) i32) -> levels (n, S) i32`` with the
-    whole level loop fused on device (fixed source cohort)."""
+    whole level loop fused on device (fixed source cohort).  A sharded
+    ``problem`` runs the loop as one ``shard_map``'d ``while_loop``."""
     if problem is None:
         if bvss is None:
             from repro.core.bvss import build_bvss
             bvss = build_bvss(g)
         problem = BlestProblem.build(bvss)
+    max_lv = max_levels if max_levels is not None else problem.n + 1
+    if problem.mesh is not None:
+        return _make_multi_source_bfs_sharded(
+            problem, n_sources, use_kernel=use_kernel, buckets=buckets,
+            max_lv=max_lv)
     eng = make_ms_engine(problem, n_sources, use_kernel=use_kernel,
                          buckets=buckets)
-    max_lv = max_levels if max_levels is not None else problem.n + 1
     pipe = LevelPipeline(step=lambda s, lvl: eng.step(s),
                          finalize=lambda s, lvl: eng.finalize(s),
-                         active=lambda s: s.count > 0)
+                         active=lambda s: s.cont)
 
     def bfs(sources: jnp.ndarray) -> jnp.ndarray:
         state, _ = run_levels(pipe, eng.init(sources), max_levels=max_lv)
         return state.levels[:problem.n]
+
+    return jax.jit(bfs)
+
+
+def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
+                                   use_kernel: bool, buckets: int,
+                                   max_lv: int) -> Callable:
+    """Fixed-cohort multi-source over the mesh: the SAME local step/finalize
+    as the serving surface, with the whole level loop inside one
+    ``shard_map``'d ``while_loop`` (no host sync, paper §4.3)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    rps = p.rows_per_shard
+    S = n_sources
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    locals_for = _make_ms_locals(p, S, spmm, widths, qcap)
+
+    def local_loop(masks, row_ids, v2r, sources):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
+                             finalize=lambda s, lvl: loc.finalize(s),
+                             active=lambda s: s.cont)
+        state, _ = run_levels(pipe, loc.init(sources), max_levels=max_lv)
+        return state.levels[None, :rps]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(),),
+                   out_specs=P(axis), check_rep=False)
+
+    def bfs(sources: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 jnp.asarray(sources, dtype=jnp.int32))
+        return out.reshape(-1, S)[:p.n]
 
     return jax.jit(bfs)
 

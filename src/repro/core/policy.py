@@ -12,6 +12,11 @@ engine; this is exactly what BLEST (full) does before the first BFS.  It is
 the ONE ordering/BVSS/engine preparation in the tree: the launcher, the
 serving layer (``repro.serve.GraphSession``) and the examples all go
 through it rather than re-implementing order -> permute -> BVSS -> engine.
+
+``prepare(graph, mesh=...)`` is the one SHARDED preparation too (DESIGN
+§2.4): the same classify/order/scheme decisions run on the global BVSS,
+then the problem is built row-sharded over the mesh axis and the engines
+run the same fused pipeline under ``shard_map``.
 """
 from __future__ import annotations
 
@@ -19,9 +24,10 @@ import dataclasses
 from typing import Callable
 
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.bfs import BlestProblem, make_engine
-from repro.core.bvss import BVSS, build_bvss
+from repro.core.bvss import BVSS, build_bvss, build_sharded_bvss
 from repro.core.ordering import auto_order
 from repro.graphs import Graph
 
@@ -44,7 +50,9 @@ class PreparedBFS:
     # prepared engine is a CSR/dense baseline that never touches the BVSS
     problem: BlestProblem | None
     update_divergence: float
-    _fn: Callable = None
+    # mesh the problem is row-sharded over; None = single-device
+    mesh: Mesh | None = None
+    _fn: Callable | None = dataclasses.field(default=None)
 
     def levels(self, src: int) -> np.ndarray:
         """BFS levels in the caller's (original) vertex ids."""
@@ -62,13 +70,22 @@ def choose_update_scheme(bvss: BVSS, *, threshold: float | None = None
     return "blest_lazy" if udiv > threshold else "blest"
 
 
+BVSS_ENGINES = ("brs", "blest", "blest_lazy")
+
+
 def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             lazy_threshold: float | None = None, order: bool = True,
             engine: str | None = None, use_kernels: bool = True,
-            buckets: int = 2) -> PreparedBFS:
+            buckets: int = 2, mesh: Mesh | None = None,
+            mesh_axis: str = "data") -> PreparedBFS:
     """The full static pipeline: (optionally) order, build the BVSS, pick
     the update scheme (or honour an explicit ``engine`` override, e.g. the
-    Table-2 ablation variants), build the fused engine."""
+    Table-2 ablation variants), build the fused engine.
+
+    ``mesh`` row-shards the problem over ``mesh_axis`` and builds the
+    mesh-native engine (DESIGN §2.4): the policy decisions (ordering,
+    update scheme) still come from the global BVSS, the level loop runs
+    under ``shard_map``.  This is the ONE sharded-prep entry point."""
     if order:
         perm, kind = auto_order(g, sigma=sigma, w=w, seed=seed)
         g_ord = g.permute_fast(perm)
@@ -80,15 +97,25 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
     bvss = build_bvss(g_ord, sigma=sigma)
     engine_name = engine if engine is not None else \
         choose_update_scheme(bvss, threshold=lazy_threshold)
-    # only BVSS-consuming single-source engines need the device upload;
-    # the host bvss alone backs the stats printouts and the policy
-    problem = BlestProblem.build(bvss) if engine_name in (
-        "brs", "blest", "blest_lazy") else None
+    if mesh is not None:
+        if engine_name not in BVSS_ENGINES:
+            raise ValueError(
+                f"mesh-native prepare supports the BVSS engines "
+                f"{BVSS_ENGINES}, not {engine_name!r} (the CSR/dense "
+                f"baselines have no row-sharded representation)")
+        sb = build_sharded_bvss(g_ord, mesh.shape[mesh_axis], sigma=sigma)
+        problem = BlestProblem.build_sharded(sb, mesh, mesh_axis)
+    else:
+        # only BVSS-consuming single-source engines need the device upload;
+        # the host bvss alone backs the stats printouts and the policy
+        problem = BlestProblem.build(bvss) if engine_name in BVSS_ENGINES \
+            else None
     fn = make_engine(g_ord, engine_name, bvss=bvss, problem=problem,
                      use_kernels=use_kernels, buckets=buckets)
     return PreparedBFS(graph=g_ord, perm=perm, inv=inv, ordering=kind,
                        engine_name=engine_name, bvss=bvss, problem=problem,
-                       update_divergence=bvss.update_divergence(), _fn=fn)
+                       update_divergence=bvss.update_divergence(),
+                       mesh=mesh, _fn=fn)
 
 
 def parents_from_levels(g: Graph, levels: np.ndarray) -> np.ndarray:

@@ -1,327 +1,68 @@
-"""Distributed BLEST BFS (DESIGN §2.4).
+"""Sharding specs and mesh helpers for mesh-native BLEST BFS (DESIGN §2.4).
 
-1-D row partition: each device owns a contiguous block of BVSS rows
-(destination vertices) — i.e. the slices that pull INTO its vertex range —
-and the full frontier bitmap is all-gathered once per level (n/8 bytes; at
-n = 134M that is 17 MB/level, trivially ICI-safe).  Pulls, marks and level
-updates are purely local; the convergence test is a psum of local
-new-vertex counts inside the fused `while_loop` (no host sync, paper §4.3
-preserved across devices).
+This module is deliberately thin.  The distributed BFS used to live here as
+a parallel implementation — its own ``ShardedBVSS`` build and two bespoke
+``lax.while_loop`` level loops that bypassed ``policy.prepare``, the fused
+``bvss_pull``/``finalize_pack_sweep`` kernels and the bucketed queue.  All
+of that now rides the ONE mesh-parameterised stack:
 
-Partitioning happens host-side on the BVSS: device d owns slice sets
-[d·n_sets/D, (d+1)·n_sets/D) — but note slices are grouped by COLUMN
-interval, so the row partition is realised by re-bucketing slices by row
-block: we rebuild a per-device BVSS whose "columns" stay global while the
-row ids (and the level/mark arrays) are local.  For the dry-run mesh the
-partition axis is the full device set.
+* build: :func:`repro.core.bvss.build_sharded_bvss` (row partition, padded
+  to a common per-shard VSS count);
+* prep:  :func:`repro.core.policy.prepare` with ``mesh=...`` — the single
+  sharded-prep entry point;
+* loop:  the same :class:`~repro.core.level_pipeline.LevelPipeline`
+  step/finalize under ``shard_map`` (``core/bfs.py``,
+  ``core/multi_source.py``), frontier-word all-gather + psum convergence
+  inside the fused ``while_loop``;
+* serve: ``repro.serve.GraphSession(g, mesh=...)``.
+
+What remains here is the sharding vocabulary those layers share: the 1-D
+row-partition mesh and the PartitionSpecs of the shard-stacked problem
+arrays and wave state.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.bvss import BVSS, build_bvss
-from repro.graphs import Graph, from_edges, src_of_edges
-
-INF = np.int32(np.iinfo(np.int32).max)
+#: the mesh axis the BVSS row partition maps onto
+BFS_AXIS = "data"
 
 
-@dataclasses.dataclass(frozen=True)
-class ShardedBVSS:
-    """Stacked per-device BVSS arrays (leading axis = device)."""
-    n: int
-    sigma: int
-    n_devices: int
-    rows_per_dev: int
-    num_vss_pad: int            # per-device VSS count (padded to common max)
-    masks: np.ndarray           # (D, num_vss_pad, 32) uint32
-    row_ids: np.ndarray         # (D, num_vss_pad, spw, 32) int32 LOCAL rows
-    fbyte_word: np.ndarray      # (D, num_vss_pad) int32: frontier word idx
-    fbyte_shift: np.ndarray     # (D, num_vss_pad) uint32: shift in word
-    n_fwords: int
+def bfs_mesh(n_devices: int | None = None, axis: str = BFS_AXIS) -> Mesh:
+    """A 1-D mesh over the first ``n_devices`` devices (default: all).
+
+    The BFS row partition is 1-D: device d owns BVSS rows
+    [d·rows_per_shard, (d+1)·rows_per_shard) — the slices that pull INTO
+    its vertex range — and the σ-bit frontier words are the one
+    all-gathered array (ButterFly-BFS-style: the frontier exchange is the
+    single cross-device term worth engineering)."""
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices, only {len(devices)} "
+                f"available (on CPU, relaunch with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_devices})")
+        devices = devices[:n_devices]
+    return Mesh(devices, (axis,))
 
 
-def shard_bvss(g: Graph, n_devices: int, sigma: int = 8) -> ShardedBVSS:
-    """Row-partition the graph: device d owns rows [d*rpd, (d+1)*rpd)."""
-    n = g.n
-    rows_per_dev = -(-n // n_devices)
-    rows_per_dev = ((rows_per_dev + 31) // 32) * 32   # align frontier words
-    n_pad = rows_per_dev * n_devices
-    spw = 32 // sigma
-    per_dev = []
-    src = src_of_edges(g)
-    dst = g.indices.astype(np.int64)
-    for d in range(n_devices):
-        lo, hi = d * rows_per_dev, min((d + 1) * rows_per_dev, n)
-        # edges whose DESTINATION lives on this device; relabel dst locally,
-        # keep src (columns / frontier ids) global
-        keep = (dst >= lo) & (dst < hi)
-        sub_src = src[keep]
-        sub_dst = dst[keep] - lo
-        # build a BVSS over a (rows_per_dev x n) rectangular slice: reuse
-        # build_bvss on a graph with n columns but local rows via an
-        # n-vertex graph whose rows >= rows_per_dev are empty.
-        # drop_loops=False: local dst ids numerically colliding with global
-        # src ids are NOT self loops.
-        sub = from_edges(n, sub_src, sub_dst, dedup=True, drop_loops=False)
-        per_dev.append(build_bvss(sub, sigma=sigma))
-    num_vss_pad = max(max(b.num_vss for b in per_dev), 1)
-    D = n_devices
-    masks = np.zeros((D, num_vss_pad, 32), np.uint32)
-    row_ids = np.full((D, num_vss_pad, spw, 32), rows_per_dev, np.int32)
-    fword = np.zeros((D, num_vss_pad), np.int32)
-    fshift = np.zeros((D, num_vss_pad), np.uint32)
-    for d, b in enumerate(per_dev):
-        if b.num_vss == 0:
-            continue
-        masks[d, :b.num_vss] = b.masks
-        rid = b.row_ids.copy()
-        rid[rid == b.n] = rows_per_dev            # dummy -> local dummy
-        row_ids[d, :b.num_vss] = np.minimum(rid, rows_per_dev)
-        sets = b.virtual_to_real.astype(np.int64)
-        bitpos = sets * sigma
-        fword[d, :b.num_vss] = (bitpos // 32).astype(np.int32)
-        fshift[d, :b.num_vss] = (bitpos % 32).astype(np.uint32)
-    n_fwords = (n_pad + 31) // 32
-    return ShardedBVSS(n=n, sigma=sigma, n_devices=D,
-                       rows_per_dev=rows_per_dev, num_vss_pad=num_vss_pad,
-                       masks=masks, row_ids=row_ids, fbyte_word=fword,
-                       fbyte_shift=fshift, n_fwords=n_fwords)
+def problem_specs(axis: str = BFS_AXIS) -> tuple[P, P, P]:
+    """PartitionSpecs of the shard-stacked problem arrays
+    ``(masks, row_ids, virtual_to_real)`` (leading axis = shard)."""
+    return (P(axis), P(axis), P(axis))
 
 
-def make_distributed_bfs(sb: ShardedBVSS, mesh: Mesh, axis: str = "data"):
-    """Jitted distributed BFS: f(src) -> levels (n,). Runs the whole level
-    loop inside one shard_map'd while_loop."""
-    from jax.experimental.shard_map import shard_map
-
-    sigma, spw = sb.sigma, 32 // sb.sigma
-    smask = jnp.uint32((1 << sigma) - 1)
-    rpd = sb.rows_per_dev
-    assert rpd % 32 == 0, "row blocks must be frontier-word aligned"
-    n_fwords = sb.n_fwords
-    lwords = rpd // 32
-    max_lv = sb.n + 1
-
-    def local_loop(masks, row_ids, fword, fshift, src):
-        """One device's slice of the fused BFS (runs under shard_map)."""
-        d = jax.lax.axis_index(axis)
-        masks, row_ids = masks[0], row_ids[0]
-        fword, fshift = fword[0], fshift[0]
-        levels = jnp.full((rpd + 1,), INF, dtype=jnp.int32)
-        local_src = src - d * rpd
-        own = (local_src >= 0) & (local_src < rpd)
-        levels = levels.at[jnp.where(own, local_src, rpd)].set(
-            jnp.where(own, 0, INF))
-        # local frontier words (this device's row block), then all-gather
-        lw = jnp.zeros((lwords,), jnp.uint32)
-        lw = lw.at[jnp.where(own, local_src // 32, 0)].set(
-            jnp.where(own, jnp.uint32(1) << (local_src % 32).astype(jnp.uint32),
-                      jnp.uint32(0)))
-
-        def body(state):
-            levels, lw, _, lvl = state
-            lvl = lvl + 1
-            F = jax.lax.all_gather(lw, axis, tiled=True)      # (n_fwords,)
-            F = F[:n_fwords]
-            fb = (F[fword] >> fshift) & smask                 # (V,)
-            rep = jnp.zeros_like(fb)
-            for j in range(spw):
-                rep = rep | (fb << jnp.uint32(sigma * j))
-            anded = masks & rep[:, None]                      # (V, 32)
-            upd = []
-            for j in range(spw):
-                sub = (anded >> jnp.uint32(sigma * j)) & smask
-                upd.append(sub != 0)
-            hits = jnp.stack(upd, axis=1).reshape(-1)         # (V*spw*32,)
-            rows = row_ids.reshape(-1)
-            new_lv = jnp.where(hits, lvl, INF).astype(jnp.int32)
-            levels = levels.at[rows].min(new_lv)
-            new = levels[:rpd] == lvl
-            pad = jnp.zeros((lwords * 32,), bool).at[:rpd].set(new)
-            bits = pad.reshape(lwords, 32).astype(jnp.uint32)
-            w = (bits * (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-                 ).sum(axis=1, dtype=jnp.uint32)
-            cnt = jax.lax.psum(new.sum(), axis)
-            return levels, w, cnt > 0, lvl
-
-        def cond(state):
-            return state[2] & (state[3] < max_lv)
-
-        state = (levels, lw, jnp.bool_(True), jnp.int32(0))
-        levels, *_ = jax.lax.while_loop(cond, body, state)
-        return levels[None, :rpd]
-
-    fn = shard_map(
-        local_loop, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis),
-        check_rep=False)
-
-    def bfs(src):
-        out = fn(jnp.asarray(sb.masks), jnp.asarray(sb.row_ids),
-                 jnp.asarray(sb.fbyte_word), jnp.asarray(sb.fbyte_shift),
-                 jnp.asarray(src, jnp.int32))
-        return out.reshape(-1)[:sb.n]
-
-    return jax.jit(bfs)
+def problem_sharding(mesh: Mesh, axis: str = BFS_AXIS) -> NamedSharding:
+    """The NamedSharding every shard-stacked array is committed with."""
+    return NamedSharding(mesh, P(axis))
 
 
-# ---------------------------------------------------------------------------
-# 2-D (pod x data) partition: pods own ROW blocks, the data axis owns
-# COLUMN blocks (DESIGN §2.4).  Each device holds the BVSS of its
-# (row-block x column-block) rectangle; per level the frontier segment is
-# all-gathered along the row axis only (1/pods of the 1-D payload per
-# device) and the partial next-frontier marks are OR-reduced (psum of
-# bytes) along the column axis.  Profitable past ~1k chips where the 1-D
-# frontier broadcast saturates ICI.
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class ShardedBVSS2D:
-    n: int
-    sigma: int
-    rows_axis: int              # devices along rows (pods)
-    cols_axis: int              # devices along columns (data)
-    rows_per_dev: int
-    cols_per_dev: int
-    num_vss_pad: int
-    masks: np.ndarray           # (R, C, V, 32) uint32
-    row_ids: np.ndarray         # (R, C, V, spw, 32) int32, LOCAL rows
-    fbyte_word: np.ndarray      # (R, C, V) int32 LOCAL column-word index
-    fbyte_shift: np.ndarray     # (R, C, V) uint32
-
-
-def shard_bvss_2d(g: Graph, rows_axis: int, cols_axis: int,
-                  sigma: int = 8) -> ShardedBVSS2D:
-    n = g.n
-    rpd = ((-(-n // rows_axis) + 31) // 32) * 32
-    cpd = ((-(-n // cols_axis) + 31) // 32) * 32
-    spw = 32 // sigma
-    src = src_of_edges(g)
-    dst = g.indices.astype(np.int64)
-    blocks = []
-    for r in range(rows_axis):
-        row = []
-        for c in range(cols_axis):
-            keep = ((dst >= r * rpd) & (dst < (r + 1) * rpd)
-                    & (src >= c * cpd) & (src < (c + 1) * cpd))
-            # vertex-id space must cover BOTH local row ids (< rpd) and
-            # local column ids (< cpd); columns beyond cpd stay empty
-            sub = from_edges(max(rpd, cpd), src[keep] - c * cpd,
-                             dst[keep] - r * rpd,
-                             dedup=True, drop_loops=False)
-            row.append(build_bvss(sub, sigma=sigma))
-        blocks.append(row)
-    V = max(max(b.num_vss for row in blocks for b in row), 1)
-    R, C = rows_axis, cols_axis
-    masks = np.zeros((R, C, V, 32), np.uint32)
-    row_ids = np.full((R, C, V, spw, 32), rpd, np.int32)
-    fword = np.zeros((R, C, V), np.int32)
-    fshift = np.zeros((R, C, V), np.uint32)
-    for r in range(R):
-        for c in range(C):
-            b = blocks[r][c]
-            if b.num_vss == 0:
-                continue
-            masks[r, c, :b.num_vss] = b.masks
-            rid = b.row_ids.copy()
-            rid[rid == b.n] = rpd
-            row_ids[r, c, :b.num_vss] = np.minimum(rid, rpd)
-            bit = b.virtual_to_real.astype(np.int64) * sigma
-            fword[r, c, :b.num_vss] = (bit // 32).astype(np.int32)
-            fshift[r, c, :b.num_vss] = (bit % 32).astype(np.uint32)
-    return ShardedBVSS2D(n=n, sigma=sigma, rows_axis=R, cols_axis=C,
-                         rows_per_dev=rpd, cols_per_dev=cpd, num_vss_pad=V,
-                         masks=masks, row_ids=row_ids, fbyte_word=fword,
-                         fbyte_shift=fshift)
-
-
-def make_distributed_bfs_2d(sb: ShardedBVSS2D, mesh: Mesh,
-                            row_axis: str = "pod", col_axis: str = "data"):
-    """Jitted 2-D distributed BFS: f(src) -> levels (n,)."""
-    from jax.experimental.shard_map import shard_map
-
-    sigma, spw = sb.sigma, 32 // sb.sigma
-    smask = jnp.uint32((1 << sigma) - 1)
-    rpd, cpd = sb.rows_per_dev, sb.cols_per_dev
-    lwords = rpd // 32
-    cwords = cpd // 32
-    max_lv = sb.n + 1
-
-    def local_loop(masks, row_ids, fword, fshift, src):
-        r = jax.lax.axis_index(row_axis)
-        c = jax.lax.axis_index(col_axis)
-        masks = masks[0, 0]
-        row_ids = row_ids[0, 0]
-        fword, fshift = fword[0, 0], fshift[0, 0]
-        levels = jnp.full((rpd + 1,), INF, dtype=jnp.int32)
-        lsrc = src - r * rpd
-        own = (lsrc >= 0) & (lsrc < rpd)
-        levels = levels.at[jnp.where(own, lsrc, rpd)].set(
-            jnp.where(own, 0, INF))
-        lw = jnp.zeros((lwords,), jnp.uint32)
-        lw = lw.at[jnp.where(own, lsrc // 32, 0)].set(
-            jnp.where(own, jnp.uint32(1) << (lsrc % 32).astype(jnp.uint32),
-                      jnp.uint32(0)))
-
-        def body(state):
-            levels, lw, _, lvl = state
-            lvl = lvl + 1
-            # 1. gather the GLOBAL frontier along the row axis, then slice
-            # this device's COLUMN window (global bits c*cpd ..)
-            F = jax.lax.all_gather(lw, row_axis, tiled=True)  # row-block bits
-            # row blocks are rpd-aligned; global frontier = concat over rows.
-            # column window starts at c*cpd bits = c*cwords words.
-            Fpad = jnp.concatenate(
-                [F, jnp.zeros((cwords,), jnp.uint32)])
-            Fc = jax.lax.dynamic_slice(Fpad, (c * cwords,), (cwords,))
-            fb = (Fc[fword] >> fshift) & smask
-            rep = jnp.zeros_like(fb)
-            for j in range(spw):
-                rep = rep | (fb << jnp.uint32(sigma * j))
-            anded = masks & rep[:, None]
-            hits = []
-            for j in range(spw):
-                hits.append(((anded >> jnp.uint32(sigma * j)) & smask) != 0)
-            hits = jnp.stack(hits, axis=1).reshape(-1)
-            rows = row_ids.reshape(-1)
-            # 2. partial marks from THIS column block; OR across columns
-            marks = jnp.zeros((rpd + 1,), jnp.uint8).at[rows].max(
-                hits.astype(jnp.uint8))
-            marks = jax.lax.pmax(marks, col_axis)          # reduce-OR
-            new = (marks[:rpd] > 0) & (levels[:rpd] == INF)
-            levels = levels.at[:rpd].set(
-                jnp.where(new, lvl, levels[:rpd]))
-            pad = jnp.zeros((lwords * 32,), bool).at[:rpd].set(new)
-            bits = pad.reshape(lwords, 32).astype(jnp.uint32)
-            w = (bits * (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-                 ).sum(axis=1, dtype=jnp.uint32)
-            cnt = jax.lax.psum(new.sum(), row_axis)
-            return levels, w, cnt > 0, lvl
-
-        def cond(state):
-            return state[2] & (state[3] < max_lv)
-
-        state = (levels, lw, jnp.bool_(True), jnp.int32(0))
-        levels, *_ = jax.lax.while_loop(cond, body, state)
-        return levels[None, None, :rpd]
-
-    fn = shard_map(
-        local_loop, mesh=mesh,
-        in_specs=(P(row_axis, col_axis), P(row_axis, col_axis),
-                  P(row_axis, col_axis), P(row_axis, col_axis), P()),
-        out_specs=P(row_axis, col_axis),
-        check_rep=False)
-
-    def bfs(src):
-        out = fn(jnp.asarray(sb.masks), jnp.asarray(sb.row_ids),
-                 jnp.asarray(sb.fbyte_word), jnp.asarray(sb.fbyte_shift),
-                 jnp.asarray(src, jnp.int32))
-        # out (R, C*?, rpd) — columns replicated post-pmax; take column 0
-        return out[:, 0].reshape(-1)[:sb.n]
-
-    return jax.jit(bfs)
+def state_specs(axis: str = BFS_AXIS):
+    """PartitionSpecs of the host-visible sharded wave state
+    (:class:`repro.core.multi_source.MSState`): every field carries a
+    leading shard axis — local ``(rps+1, S)`` level blocks, one global
+    frontier replica per shard, one queue per shard."""
+    from repro.core.multi_source import MSState
+    return MSState(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis))

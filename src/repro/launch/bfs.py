@@ -12,17 +12,26 @@ layer and examples use the same one).
 ``--service`` instead serves the queries through
 :class:`repro.serve.GraphSession` — batched multi-source waves over the
 slot pool — and reports wave vs sequential timing.
+
+``--devices N`` runs the whole pipeline mesh-native (DESIGN §2.4):
+``prepare(g, mesh=...)`` row-shards the BVSS over a 1-D mesh and the same
+fused level loop runs under ``shard_map``.  On CPU the devices are
+simulated: if the process was started with fewer devices than requested it
+re-execs itself once with ``--xla_force_host_platform_device_count`` (the
+flag only takes effect before the JAX backend initialises).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
 from repro.core import reference_bfs
 from repro.core.ordering import social_like_report
-from repro.core.policy import prepare
+from repro.core.policy import BVSS_ENGINES, prepare
 from repro.graphs import generators as gen
 
 
@@ -54,12 +63,34 @@ ENGINE_VARIANTS = {
 }
 
 
-def run_service(g, args) -> None:
+def ensure_devices(n: int, argv) -> "object | None":
+    """Return the 1-D BFS mesh for ``n`` devices, re-execing once with the
+    host-platform device-count flag if this process has too few (CPU
+    simulation; the flag is read only at backend init)."""
+    if n <= 1:
+        return None
+    import jax
+    if len(jax.devices()) < n:
+        flag = f"--xla_force_host_platform_device_count={n}"
+        if flag in os.environ.get("XLA_FLAGS", ""):
+            raise RuntimeError(
+                f"{flag} set but only {len(jax.devices())} devices came up")
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+        cmd = [sys.executable, "-m", "repro.launch.bfs",
+               *(argv if argv is not None else sys.argv[1:])]
+        os.execvpe(cmd[0], cmd, env)                 # does not return
+    from repro.distributed.bfs_dist import bfs_mesh
+    return bfs_mesh(n)
+
+
+def run_service(g, mesh, args) -> None:
     """--service: wave-batched serving through GraphSession."""
     from repro.serve import GraphSession
     variant = ENGINE_VARIANTS[args.engine]
     sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
-                        order=variant["order"], engine=variant["engine"])
+                        order=variant["order"], engine=variant["engine"],
+                        mesh=mesh)
     print(f"[bfs] session up: ordering={sess.ordering} "
           f"engine={sess.engine_name} "
           f"compression={sess.bvss.compression_ratio():.3f} "
@@ -102,23 +133,36 @@ def main(argv=None):
                          "GraphSession instead of sequential BFS runs")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="wave slot-pool width for --service")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="row-shard the BFS over an N-device 1-D mesh "
+                         "(simulated via the host-platform device count "
+                         "on CPU; the process re-execs once if needed)")
     args = ap.parse_args(argv)
 
+    mesh = ensure_devices(args.devices, argv)
     g = build_graph(args.graph, args.scale, args.seed)
     rep = social_like_report(g)
     print(f"[bfs] graph={args.graph} n={g.n} m={g.m} "
           f"social_like={rep.is_social} (top1={rep.top1_share:.2f} "
-          f"slope={rep.ll_slope:.2f})")
+          f"slope={rep.ll_slope:.2f})"
+          + (f" mesh={args.devices}x1" if mesh is not None else ""))
 
     if args.service:
-        run_service(g, args)
+        run_service(g, mesh, args)
         return
 
     variant = ENGINE_VARIANTS[args.engine]
+    if mesh is not None and variant["engine"] not in (None, *BVSS_ENGINES):
+        ap.error(f"--devices requires a BVSS engine, not {args.engine}")
     t0 = time.time()
     prep = prepare(g, w=512, seed=args.seed, order=variant["order"],
-                   engine=variant["engine"])
+                   engine=variant["engine"], mesh=mesh)
     prep_s = time.time() - t0
+    if mesh is not None:
+        pb = prep.problem
+        print(f"[bfs] sharded: {pb.n_shards} shards x "
+              f"{pb.rows_per_shard} rows, {pb.num_vss} VSS/shard (padded), "
+              f"frontier={pb.n_fwords * 4}B/level all-gather")
     if variant["order"]:
         print(f"[bfs] ordering={prep.ordering} "
               f"(prepare={prep_s:.2f}s incl. BVSS+engine), "

@@ -18,6 +18,13 @@ loop on device, no per-level host sync).
 Id-space contract: callers speak ORIGINAL vertex ids everywhere — sources
 in, level arrays / centrality scores out.  The internal reordering is
 invisible (the regression the old example got wrong).
+
+A session is MESH-NATIVE (DESIGN §2.4): pass ``mesh=...`` and the whole
+stack — prepare, the fused single-source engine, the wave machinery —
+runs row-sharded under ``shard_map``.  The serving loop and the caller-id
+contract are identical in either mode; the only difference is the shape
+of the wave state (a leading shard axis), which the engine's
+``levels_of`` view hides from this layer.
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.multi_source import closeness_centrality, make_ms_engine
 from repro.core.policy import PreparedBFS, prepare
@@ -37,18 +45,21 @@ class GraphSession:
     """Prepared, query-serving state for one graph.
 
     Parameters mirror :func:`repro.core.policy.prepare`; ``max_batch`` is
-    the wave slot-pool width (the S of the stacked bit-SpMM frontier).
+    the wave slot-pool width (the S of the stacked bit-SpMM frontier);
+    ``mesh`` row-shards the session over a device mesh.
     """
 
     def __init__(self, g: Graph, *, max_batch: int = 8, sigma: int = 8,
                  w: int = 512, seed: int = 0,
                  lazy_threshold: float | None = None, order: bool = True,
                  engine: str | None = None, use_kernel: bool = True,
-                 max_steps: int | None = None):
+                 max_steps: int | None = None, mesh: Mesh | None = None,
+                 mesh_axis: str = "data"):
         t0 = time.time()
         self.prepared: PreparedBFS = prepare(
             g, sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
-            order=order, engine=engine, use_kernels=use_kernel)
+            order=order, engine=engine, use_kernels=use_kernel,
+            mesh=mesh, mesh_axis=mesh_axis)
         if self.prepared.problem is not None:
             self._problem = self.prepared.problem
         else:
@@ -89,6 +100,10 @@ class GraphSession:
     @property
     def engine_name(self) -> str:
         return self.prepared.engine_name
+
+    @property
+    def mesh(self) -> Mesh | None:
+        return self.prepared.mesh
 
     # ------------------------------------------------------------------
     # queries
@@ -133,7 +148,8 @@ class GraphSession:
             live = np.asarray(live_dev)
             for slot in range(self.max_batch):
                 if owner[slot] is not None and not live[slot]:
-                    lv = np.asarray(st.levels[:self.n, slot])
+                    # levels_of hides the shard layout (global (n,) column)
+                    lv = np.asarray(eng.levels_of(st, slot))
                     results[owner[slot]] = lv[perm]
                     owner[slot] = None
             steps += 1

@@ -21,20 +21,111 @@ def run_py(code: str, n_devices: int = 8, timeout: int = 560):
     return out.stdout
 
 
-def test_distributed_bfs_matches_oracle():
-    run_py("""
-import jax, numpy as np
+@pytest.mark.parametrize("n_devices", [1, 2, 8])
+def test_sharded_prepare_matches_oracle(n_devices):
+    """Mesh-native prepare (the ONE sharded entry point): levels must be
+    bit-for-bit the host oracle's on every device count — same fused
+    LevelPipeline, any mesh shape."""
+    run_py(f"""
+import numpy as np
 from repro.graphs import generators as gen
 from repro.core import reference_bfs
-from repro.distributed.bfs_dist import shard_bvss, make_distributed_bfs
-mesh = jax.make_mesh((8,), ("data",))
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh
+mesh = bfs_mesh({n_devices})
 for g in (gen.rmat(8, 8, seed=3), gen.grid2d(20, 16)):
-    sb = shard_bvss(g, 8)
-    f = make_distributed_bfs(sb, mesh)
+    pb = prepare(g, w=256, mesh=mesh)
     for src in (0, g.n // 3, g.n - 1):
-        assert (np.asarray(f(src)) == reference_bfs(g, src)).all()
+        assert (pb.levels(src) == reference_bfs(g, src)).all(), src
 print("ok")
-""")
+""", n_devices=max(n_devices, 1))
+
+
+def test_sharded_engine_variants_match_oracle():
+    """Every BVSS engine (eager, lazy, brs) through the same sharded
+    pipeline; the kernel/jnp switch must not change levels either."""
+    run_py("""
+import numpy as np
+from repro.graphs import generators as gen
+from repro.core import reference_bfs
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh
+mesh = bfs_mesh(4)
+g = gen.rmat(8, 8, seed=5)
+for eng in ("blest", "blest_lazy", "brs"):
+    for use_kernels in (True, False):
+        pb = prepare(g, w=256, mesh=mesh, engine=eng,
+                     use_kernels=use_kernels)
+        for src in (0, g.n - 1):
+            assert (pb.levels(src) == reference_bfs(g, src)).all(), \\
+                (eng, use_kernels, src)
+print("ok")
+""", n_devices=4)
+
+
+def test_sharded_prepare_rejects_non_bvss_engines():
+    run_py("""
+from repro.graphs import generators as gen
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh
+try:
+    prepare(gen.rmat(6, 4, seed=0), mesh=bfs_mesh(2), engine="csr_push")
+except ValueError as e:
+    assert "mesh-native" in str(e)
+else:
+    raise AssertionError("csr_push must be rejected under a mesh")
+print("ok")
+""", n_devices=2)
+
+
+def test_sharded_graph_session_caller_id_contract():
+    """The caller-id contract cases of tests/test_graph_session.py, over a
+    2-device mesh: wave serving with mid-flight refills, duplicate
+    queries, mixed depths, closeness — all in ORIGINAL vertex ids."""
+    run_py("""
+import numpy as np
+from repro.graphs import from_edges, generators as gen
+from repro.core import reference_bfs
+from repro.serve import GraphSession
+from repro.distributed.bfs_dist import bfs_mesh
+mesh = bfs_mesh(2)
+INF = np.int32(np.iinfo(np.int32).max)
+
+# non-trivial ordering so any id-space slip shows up as a mismatch
+g = gen.rmat(8, 8, seed=1)
+sess = GraphSession(g, max_batch=3, w=256, mesh=mesh)
+assert sess.ordering == "jaccard_windows"
+assert (sess.perm != np.arange(g.n)).any()
+
+# 7 queries through 3 slots: mid-flight refills, one duplicate query
+rng = np.random.default_rng(0)
+queries = [int(q) for q in rng.integers(0, g.n, 7)]
+queries[3] = queries[0]
+lvs = sess.levels_batch(queries)
+assert len(lvs) == len(queries)
+for q, lv in zip(queries, lvs):
+    np.testing.assert_array_equal(lv, reference_bfs(g, q),
+                                  err_msg=f"query {q}")
+
+# shallow + deep queries on a path: slots must refill while deep
+# columns are still running
+g2 = from_edges(60, np.arange(59), np.arange(1, 60))
+sess2 = GraphSession(g2, max_batch=2, order=False, mesh=mesh)
+queries2 = [58, 0, 55, 2, 59]
+for q, lv in zip(queries2, sess2.levels_batch(queries2)):
+    np.testing.assert_array_equal(lv, reference_bfs(g2, q),
+                                  err_msg=f"query {q}")
+
+# closeness: caller-id sources, reordering + sharding invisible
+srcs, cc = sess.centrality_sample(5, seed=2)
+for s, c in zip(srcs, cc):
+    lv = reference_bfs(g, int(s))
+    finite = lv != INF
+    dist_sum = float(lv[finite].sum())
+    want = (int(finite.sum()) - 1) / dist_sum if dist_sum > 0 else 0.0
+    assert abs(c - want) < 1e-12, (s, c, want)
+print("ok")
+""", n_devices=2)
 
 
 def test_gpipe_equals_sequential():

@@ -1,4 +1,4 @@
-"""Paper §5 static policy pipeline + 2-D distributed BFS."""
+"""Paper §5 static policy pipeline + mesh-native multi-source parity."""
 import os
 import subprocess
 import sys
@@ -48,24 +48,33 @@ def test_parents_valid_tree():
             assert u in g.indices[g.indptr[p]:g.indptr[p + 1]]
 
 
-def test_distributed_bfs_2d_matches_oracle():
+def test_sharded_multi_source_matches_single_device():
+    """The fused mesh-native multi-source engine (one shard_map'd
+    while_loop) must agree with the single-device BVSS SpMM engine AND the
+    host oracle, column by column."""
     code = """
-import jax, numpy as np
+import numpy as np
 from repro.graphs import generators as gen
 from repro.core import reference_bfs
-from repro.distributed.bfs_dist import shard_bvss_2d, make_distributed_bfs_2d
-mesh = jax.make_mesh((2, 4), ("pod", "data"))
-for g in (gen.rmat(8, 8, seed=5), gen.grid2d(17, 13)):
-    sb = shard_bvss_2d(g, 2, 4)
-    f = make_distributed_bfs_2d(sb, mesh)
-    for src in (0, g.n - 1):
-        lv = np.asarray(f(src))
-        ref = reference_bfs(g, src)
-        assert (lv == ref).all(), (src, np.flatnonzero(lv != ref)[:5])
+from repro.core.policy import prepare
+from repro.core.multi_source import make_multi_source_bfs
+from repro.distributed.bfs_dist import bfs_mesh
+g = gen.rmat(8, 8, seed=5)
+pb_s = prepare(g, w=256, mesh=bfs_mesh(4), engine="blest")
+pb_1 = prepare(g, w=256, engine="blest")
+srcs_orig = np.array([0, g.n // 3, g.n - 1, 7], dtype=np.int32)
+f_s = make_multi_source_bfs(None, 4, problem=pb_s.problem)
+f_1 = make_multi_source_bfs(None, 4, problem=pb_1.problem)
+lv_s = np.asarray(f_s(pb_s.perm[srcs_orig].astype(np.int32)))
+lv_1 = np.asarray(f_1(pb_1.perm[srcs_orig].astype(np.int32)))
+np.testing.assert_array_equal(lv_s[pb_s.perm], lv_1[pb_1.perm])
+for j, s in enumerate(srcs_orig):
+    np.testing.assert_array_equal(lv_s[pb_s.perm][:, j],
+                                  reference_bfs(g, int(s)))
 print("ok")
 """
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO,
                          capture_output=True, text=True, timeout=560)
