@@ -1,0 +1,185 @@
+"""PR-4 analytics benchmark: batched-wave analytics vs sequential
+per-source BFS baselines, all oracle-verified.
+
+Per graph of the suite:
+
+* ``components`` — connected components via (a) the batched flood-fill
+  with wave-slot re-seeding (``GraphSession.components``) and (b) a
+  sequential baseline running one fused single-source BFS per seed over
+  the SAME symmetrised problem (identical tiles, no column batching).
+  Labels verified against the SciPy oracle.
+* ``eccentricity`` — N eccentricity queries via (a) one fixed-cohort
+  multi-source wave and (b) N sequential single-source runs.  Verified
+  against the SciPy distance oracle.
+* ``betweenness`` — sampled-source Brandes through the σ-channel wave
+  forward + reverse tile sweep, verified against the NumPy Brandes
+  oracle within fp tolerance (the speed story here is the new capability,
+  not a ratio — the baseline oracle is host code).
+
+``run(..., json_path=...)`` feeds the ``analytics`` suite of
+``BENCH_pr4.json`` via ``benchmarks/run.py --json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_envelope, fmt_row, geomean, graph_suite
+from repro.core import INF
+from repro.kernels.ref import (betweenness_ref, connected_components_ref,
+                               eccentricity_ref, normalize_labels)
+
+
+def _median_sec(f, reps: int = 3) -> float:
+    """Median seconds per call (post-warm), the suite's timing idiom."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        f()
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
+def _sequential_components(problem, levels_fn, perm) -> np.ndarray:
+    """Baseline: per-seed fused single-source BFS flood-fill (same
+    symmetrised problem, no wave batching), labels in caller ids."""
+    n = problem.n
+    vcomp = np.full(n, -1, dtype=np.int64)
+    scan = 0
+    c = 0
+    while True:
+        while scan < n and vcomp[scan] >= 0:
+            scan += 1
+        if scan >= n:
+            break
+        lv = np.asarray(levels_fn(scan))
+        vcomp[lv != INF] = c
+        c += 1
+    return normalize_labels(vcomp[perm])
+
+
+def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
+        json_path: str | None = None, verbose: bool = True) -> dict:
+    import jax.numpy as jnp
+
+    from repro.graphs import generators as gen
+    from repro.serve import GraphSession
+
+    suite = graph_suite(scale)
+    # the component-rich regime the flood-fill is FOR: disconnected
+    # communities (p_out=0), the workload class of components queries
+    suite["frag"] = gen.clustered((1 << scale) // 32, 32, p_out=0.0, seed=6)
+    graphs_out = {}
+    for gname, g in suite.items():
+        rng = np.random.default_rng(0)
+        sess = GraphSession(g, max_batch=min(8, n_queries), w=512)
+        seq_bfs = sess._sym_sss()   # the baseline IS the phase-0 engine:
+                                    # same tiles, no wave batching
+
+        def seq_levels(src_internal: int) -> np.ndarray:
+            return seq_bfs(jnp.int32(src_internal))
+
+        # -- components: wave flood-fill vs sequential per-seed BFS --------
+        sess.components()                                  # warm wave path
+        seq_levels(0)                                      # warm baseline
+        labels = sess.components()
+        labels_seq = _sequential_components(sess._sym_problem(), seq_levels,
+                                            sess.perm)
+        t_wave = _median_sec(sess.components)
+        t_seq = _median_sec(lambda: _sequential_components(
+            sess._sym_problem(), seq_levels, sess.perm))
+        ref = connected_components_ref(g)
+        cverified = bool((labels == ref).all() and (labels_seq == ref).all())
+        assert cverified, f"{gname}: component labels diverge from scipy"
+        comp = {
+            "n_components": int(labels.max()) + 1,
+            "sequential_sec": t_seq, "wave_sec": t_wave,
+            "speedup": t_seq / max(t_wave, 1e-12), "verified": cverified,
+        }
+
+        # -- eccentricity: one batched wave vs N sequential runs -----------
+        srcs = rng.integers(0, g.n, n_queries)
+        internal = sess.perm[srcs]
+        sess.eccentricity(srcs)                # warm at the timed width
+        eccs = sess.eccentricity(srcs)
+
+        def seq_ecc() -> np.ndarray:
+            return np.array([
+                int(np.where((lv := np.asarray(seq_levels(int(s)))) != INF,
+                             lv, 0).max()) for s in internal])
+
+        eccs_seq = seq_ecc()
+        t_wave_e = _median_sec(lambda: sess.eccentricity(srcs))
+        t_seq_e = _median_sec(seq_ecc)
+        ref_e = eccentricity_ref(g.symmetrized, srcs)
+        everified = bool((eccs == ref_e).all() and (eccs_seq == ref_e).all())
+        assert everified, f"{gname}: eccentricity diverges from scipy"
+        ecc = {
+            "n_queries": int(n_queries),
+            "sequential_sec": t_seq_e, "wave_sec": t_wave_e,
+            "speedup": t_seq_e / max(t_wave_e, 1e-12), "verified": everified,
+        }
+
+        # -- betweenness: σ-channel wave + reverse tile sweep ---------------
+        pivots = rng.choice(g.n, size=min(n_pivots, g.n), replace=False)
+        sess.betweenness(pivots)               # warm at the timed width
+        bc = sess.betweenness(pivots)
+        t_bc = _median_sec(lambda: sess.betweenness(pivots))
+        ref_bc = betweenness_ref(g, pivots)
+        scale_ref = max(float(np.abs(ref_bc).max()), 1.0)
+        max_rel_err = float(np.abs(bc - ref_bc).max()) / scale_ref
+        bverified = bool(max_rel_err < 1e-4)
+        assert bverified, f"{gname}: betweenness err {max_rel_err}"
+        bet = {
+            "n_pivots": int(len(pivots)), "wave_sec": t_bc,
+            "max_rel_err": max_rel_err, "verified": bverified,
+        }
+
+        graphs_out[gname] = {
+            "n": int(g.n), "m": int(g.m), "ordering": sess.ordering,
+            "components": comp, "eccentricity": ecc, "betweenness": bet,
+        }
+        if verbose:
+            print(fmt_row(f"bench_analytics/{gname}/components",
+                          t_wave * 1e6, f"speedup={comp['speedup']:.2f}"))
+            print(fmt_row(f"bench_analytics/{gname}/eccentricity",
+                          t_wave_e * 1e6, f"speedup={ecc['speedup']:.2f}"))
+            print(fmt_row(f"bench_analytics/{gname}/betweenness",
+                          t_bc * 1e6, f"err={max_rel_err:.1e}"))
+
+    summary = {
+        "geomean_components_speedup": geomean(
+            [go["components"]["speedup"] for go in graphs_out.values()]),
+        "geomean_ecc_speedup": geomean(
+            [go["eccentricity"]["speedup"] for go in graphs_out.values()]),
+        "all_verified": all(
+            go["components"]["verified"] and go["eccentricity"]["verified"]
+            and go["betweenness"]["verified"]
+            for go in graphs_out.values()),
+    }
+    out = {
+        **bench_envelope("pr4_analytics", scale),
+        "note": ("components/eccentricity = batched wave (stacked bit-SpMM "
+                 "columns, slot re-seeding) vs sequential fused "
+                 "single-source BFS over the same symmetrised BVSS; "
+                 "betweenness = Brandes forward σ wave channel + reverse "
+                 "sweep over the recorded per-level tile queues, verified "
+                 "against the NumPy Brandes oracle"),
+        "graphs": graphs_out,
+        "summary": summary,
+    }
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    if verbose:
+        for k, v in summary.items():
+            print(f"# {k}={v if isinstance(v, bool) else f'{v:.2f}x'}")
+    return out
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_analytics.json")

@@ -1,0 +1,102 @@
+"""CI perf-regression gate: diff a ``BENCH_pr4``-schema artifact against
+checked-in geomean-speedup floors and fail loudly on regression.
+
+    python -m benchmarks.perf_gate bench_ci.json
+    python -m benchmarks.perf_gate bench_ci.json --prove-gate
+
+The floors (``benchmarks/perf_floors.json``) are dotted paths into the
+artifact mapped to minimum acceptable values — derived from the PR-3
+reference artifact (``BENCH_pr3.json``) and the PR-4 analytics reference
+run at the CI quick settings, scaled by ``1 - max_regression`` (25%).
+Every gated metric is a *speedup ratio* (batched wave vs sequential,
+fused vs seed, BVSS vs dense), so the gate is insensitive to absolute
+runner speed; the 25% headroom absorbs CPU-runner noise on top.
+
+``--prove-gate`` is the self-test CI runs after the real gate: it
+re-evaluates the artifact against floors inflated 100× and exits 0 only
+if the gate would FAIL — demonstrating the gate actually trips instead
+of silently passing everything.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FLOORS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "perf_floors.json")
+
+
+def resolve(artifact: dict, dotted: str):
+    """Walk a dotted path ('service.summary.geomean_wave_speedup')."""
+    node = artifact
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check(artifact: dict, floors: dict[str, float]
+          ) -> tuple[list[str], list[str]]:
+    """Returns (report lines, violations)."""
+    lines, violations = [], []
+    for dotted, floor in sorted(floors.items()):
+        value = resolve(artifact, dotted)
+        if value is None:
+            violations.append(f"{dotted}: MISSING from artifact "
+                              f"(floor {floor:.3f})")
+            continue
+        ok = value >= floor
+        lines.append(f"{'ok  ' if ok else 'FAIL'} {dotted}: "
+                     f"{value:.3f} (floor {floor:.3f})")
+        if not ok:
+            violations.append(
+                f"{dotted}: {value:.3f} < floor {floor:.3f} "
+                f"(>{100 * (1 - value / floor):.0f}% under)")
+    return lines, violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="bench JSON (BENCH_pr4 schema)")
+    ap.add_argument("--floors", default=DEFAULT_FLOORS)
+    ap.add_argument("--prove-gate", action="store_true",
+                    help="self-test: exit 0 only if 100x-inflated floors "
+                         "make the gate fail")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as f:
+        artifact = json.load(f)
+    with open(args.floors) as f:
+        spec = json.load(f)
+    floors = {k: float(v) for k, v in spec["floors"].items()}
+
+    if args.prove_gate:
+        inflated = {k: v * 100.0 for k, v in floors.items()}
+        _, violations = check(artifact, inflated)
+        if violations:
+            print(f"perf gate self-test ok: inflated floors trip "
+                  f"{len(violations)}/{len(inflated)} checks")
+            return 0
+        print("perf gate self-test FAILED: inflated floors did not trip "
+              "the gate — the gate is not actually comparing anything")
+        return 1
+
+    lines, violations = check(artifact, floors)
+    print(f"perf gate: {args.artifact} vs {args.floors} "
+          f"(max regression {spec.get('max_regression', 0.25):.0%})")
+    for line in lines:
+        print(f"  {line}")
+    if violations:
+        print(f"perf gate FAILED: {len(violations)} regression(s)")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,13 +6,15 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--json`` additionally runs
 the perf-trajectory benches — the PR-1 fused-pipeline bench
 (``benchmarks/bench_fused.py``), the PR-2 GraphSession serving bench
-(``benchmarks/bench_service.py``) and the PR-3 mesh-native bench
+(``benchmarks/bench_service.py``), the PR-3 mesh-native bench
 (``benchmarks/bench_dist.py``, which simulates its device mesh in a
-subprocess) — and writes one machine-readable artifact (default
-``BENCH_pr3.json``) with ``fused``, ``service`` and ``dist`` suites;
+subprocess) and the PR-4 analytics bench (``benchmarks/bench_analytics.py``)
+— and writes one machine-readable artifact (default ``BENCH_pr4.json``)
+with ``fused``, ``service``, ``dist`` and ``analytics`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
-quickly.  Roofline tables (E7) come from the dry-run artifacts: run
-``python -m repro.launch.dryrun --all`` first, then
+quickly.  CI diffs the artifact's geomean speedups against the checked-in
+floors (``benchmarks/perf_gate.py``).  Roofline tables (E7) come from the
+dry-run artifacts: run ``python -m repro.launch.dryrun --all`` first, then
 ``python -m benchmarks.roofline``.
 """
 from __future__ import annotations
@@ -27,10 +29,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr3.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr4.json", default=None,
                     metavar="PATH",
-                    help="run the fused-pipeline + service + dist benches "
-                         "and write JSON (default %(const)s)")
+                    help="run the fused-pipeline + service + dist + "
+                         "analytics benches and write JSON "
+                         "(default %(const)s)")
     ap.add_argument("--fused-only", action="store_true",
                     help="only the JSON perf benches, skip the paper tables "
                          "(implies --json)")
@@ -41,9 +44,10 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr3.json"
+        json_path = "BENCH_pr4.json"
     if json_path is not None:
-        from benchmarks import bench_dist, bench_fused, bench_service
+        from benchmarks import (bench_analytics, bench_dist, bench_fused,
+                                bench_service)
         from benchmarks.common import bench_envelope
         bench_scale = min(scale, 9 if args.quick else 10)
         fused = bench_fused.run(scale=bench_scale,
@@ -56,11 +60,16 @@ def main(argv=None) -> None:
                               devices=2 if args.quick else 4,
                               n_queries=4 if args.quick else 6,
                               json_path=None)
+        analytics = bench_analytics.run(scale=bench_scale,
+                                        n_queries=6 if args.quick else 8,
+                                        n_pivots=3 if args.quick else 4,
+                                        json_path=None)
         out = {
-            **bench_envelope("pr3_mesh_native", bench_scale),
+            **bench_envelope("pr4_analytics_suite", bench_scale),
             "fused": fused,
             "service": service,
             "dist": dist,
+            "analytics": analytics,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=False)

@@ -1,0 +1,30 @@
+"""Graph analytics riding the BVSS multi-source wave engine (DESIGN §2.6).
+
+Every algorithm here is a *client* of the machinery the BFS stack already
+owns — the batched bit-SpMM wave engine (``core.multi_source``), the fused
+``LevelPipeline`` loop, and the weighted BVSS tile products
+(``kernels.bvss_spmm_w`` / ``bvss_spmm_t``) — never a bespoke traversal:
+
+* :mod:`~repro.analytics.components` — connected components as batched
+  flood-fill with iterative re-seeding through the generic wave refill
+  hook (``drive_wave``);
+* :mod:`~repro.analytics.eccentricity` — per-vertex eccentricity,
+  diameter and radius via iFUB-style sweeps batched through the fused
+  multi-source engine;
+* :mod:`~repro.analytics.betweenness` — Brandes betweenness centrality:
+  forward phase is the fused BFS with σ path counts threaded through the
+  widened wave state, backward dependency accumulation replays the
+  recorded per-level VSS queues in reverse over the same tiles.
+
+All functions speak the id space of the problem/graph they are handed;
+``repro.serve.GraphSession`` layers the caller-id contract, symmetrised
+problems and mesh sharding on top.
+"""
+from repro.analytics.betweenness import betweenness_centrality, make_betweenness
+from repro.analytics.components import connected_components
+from repro.analytics.eccentricity import (ExtremesReport, eccentricities,
+                                          ifub_extremes)
+
+__all__ = ["betweenness_centrality", "make_betweenness",
+           "connected_components", "eccentricities", "ifub_extremes",
+           "ExtremesReport"]

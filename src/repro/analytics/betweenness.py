@@ -1,0 +1,165 @@
+"""Brandes betweenness centrality on the BVSS wave engine (DESIGN §2.6).
+
+Brandes' algorithm per source s:
+
+    forward   BFS from s recording levels d(v) and σ(v) shortest-path
+              counts: σ(v) = Σ_{u ∈ pred(v)} σ(u);
+    backward  dependency accumulation in decreasing level order:
+              δ(v) = σ(v) · Σ_{w ∈ succ(v), d(w)=d(v)+1} (1 + δ(w)) / σ(w);
+    bc(v)    += δ(v)  for v ≠ s.
+
+Both phases are wave clients here, batched over S stacked sources:
+
+* The FORWARD phase is the fused multi-source BFS with the σ channel
+  threaded through the widened wave state
+  (``make_ms_engine(track_sigma=True)``): each level runs the Boolean
+  bit-SpMM pull (discovery) plus its weighted twin ``bvss_spmm_w`` over
+  the SAME queued tiles (σ propagation), and records the per-level VSS
+  queue into a :class:`~repro.core.bfs.QueueHistory`
+  (``run_levels_recorded``) — one on-device ``while_loop``, no host sync.
+
+* The BACKWARD phase replays that history in reverse: at level t the
+  per-row values h(w) = [d(w)=t] · (1+δ(w))/σ(w) are gathered through
+  ``row_ids`` and contracted by the *transposed* tile product
+  ``bvss_spmm_t`` — the same BVSS tiles, contracted along the row axis
+  instead of the column axis — then scattered into the slice-set columns
+  and folded into δ at level t-1.  The recorded level-t queue is exactly
+  the tile set whose columns meet the level-(t-1) frontier, so the
+  reverse sweep is frontier-aware, not a full-BVSS sweep.
+
+σ and δ are float32 (the MXU-native analytics dtype): path counts on the
+benchmark families stay far below float32's 2^24 exact-integer range, and
+the acceptance contract is oracle agreement within fp tolerance
+(``kernels.ref.betweenness_ref``).
+
+Single-device only: the weighted sweeps have no shard_map'd variant yet
+(ROADMAP item) — a sharded ``GraphSession`` serves betweenness through a
+replicated single-device problem built from its prepared host BVSS.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics.common import pad_cohort
+from repro.core.bfs import BlestProblem, make_queue_history, queue_widths
+from repro.core.level_pipeline import LevelPipeline, run_levels_recorded
+from repro.core.multi_source import INF, make_ms_engine
+from repro.graphs import Graph
+from repro.kernels import bvss_spmm_t
+from repro.kernels.ref import bvss_spmm_t_ref
+
+
+def make_betweenness(problem: BlestProblem, n_sources: int, *,
+                     use_kernel: bool = True, buckets: int = 2,
+                     max_levels: int | None = None) -> Callable:
+    """Build jitted ``f(sources (S,) i32) -> (levels (n,S), sigma (n,S),
+    delta (n,S))`` running both Brandes phases on device.
+
+    ``delta[:, j]`` is the dependency of every vertex on source ``j``
+    (endpoints excluded: the source row is zeroed), so a caller sums
+    columns over its source set to get partial betweenness.  ``max_levels``
+    bounds the recorded history buffer ((max_levels+1) × qcap int32 —
+    default n+1 is fine at lab scale, pass the graph's diameter bound to
+    shrink it).
+    """
+    p = problem
+    if p.mesh is not None:
+        raise NotImplementedError(
+            "betweenness runs the weighted sweeps single-device; build the "
+            "problem from the host BVSS (see GraphSession.betweenness)")
+    S = n_sources
+    n, sigma = p.n, p.sigma
+    dev = p.dev
+    eng = make_ms_engine(p, S, use_kernel=use_kernel, buckets=buckets,
+                         track_sigma=True)
+    spmm_t = bvss_spmm_t if use_kernel else bvss_spmm_t_ref
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    max_lv = max_levels if max_levels is not None else n + 1
+    n_cols = p.n_sets * sigma
+    hist0, record = make_queue_history(qcap, max_lv, p.num_vss)
+    fwd_step, fwd_finalize = eng.step, eng.finalize
+    assert fwd_step is not None and fwd_finalize is not None
+    pipe = LevelPipeline(step=lambda s, lvl: fwd_step(s),
+                         finalize=lambda s, lvl: fwd_finalize(s),
+                         active=lambda s: s.cont)
+
+    def backward(levels: jnp.ndarray, sig: jnp.ndarray, hist) -> jnp.ndarray:
+        """Reverse per-level sweep over the recorded forward queues."""
+        col_ids = (jnp.arange(sigma, dtype=jnp.int32)[None, :]
+                   + jnp.zeros((qcap, 1), jnp.int32))
+
+        def body(carry):
+            delta, t = carry
+            Q = jax.lax.dynamic_index_in_dim(hist.Q, t, keepdims=False)
+            safe = jnp.maximum(sig, 1.0)
+            h = jnp.where(levels == t, (1.0 + delta) / safe, 0.0)
+            h = jnp.concatenate([h, jnp.zeros((1, S), jnp.float32)])
+            hv = h[dev.row_ids[Q]]                    # (qcap, spw, 32, S)
+            part = spmm_t(dev.masks[Q], hv, sigma=sigma)   # (qcap, σ, S)
+            cols = dev.virtual_to_real[Q][:, None] * sigma + col_ids
+            coeff = jnp.zeros((n_cols, S), jnp.float32).at[
+                cols.reshape(-1)].add(part.reshape(-1, S))[:n]
+            delta = delta + jnp.where(levels == t - 1, sig * coeff, 0.0)
+            return delta, t - 1
+
+        def cond(carry):
+            return carry[1] >= 1
+
+        delta0 = jnp.zeros((n, S), jnp.float32)
+        tmax = jnp.where(levels == INF, 0, levels).max().astype(jnp.int32)
+        delta, _ = jax.lax.while_loop(cond, body, (delta0, tmax))
+        return delta
+
+    def bc(sources: jnp.ndarray) -> tuple[jnp.ndarray, ...]:
+        sources = jnp.asarray(sources, dtype=jnp.int32)
+        st, _, hist = run_levels_recorded(
+            pipe, eng.init(sources), max_levels=max_lv, history=hist0,
+            record=record)
+        levels = st.levels[:n]
+        delta = backward(levels, st.paths, hist)
+        # endpoints excluded: a source contributes no dependency to itself
+        delta = delta.at[sources, jnp.arange(S)].set(0.0)
+        return levels, st.paths, delta
+
+    return jax.jit(bc)
+
+
+def betweenness_centrality(g: Graph | None, sources, *,
+                           problem: BlestProblem | None = None,
+                           use_kernel: bool = True,
+                           batch: int | None = None,
+                           max_levels: int | None = None,
+                           bc_fn: Callable | None = None) -> np.ndarray:
+    """Partial Brandes betweenness Σ_{s∈sources} δ_s(v), unnormalised —
+    the quantity ``kernels.ref.betweenness_ref`` computes (equal to
+    NetworkX ``betweenness_centrality(normalized=False)`` on a DiGraph
+    when ``sources`` is every vertex).
+
+    ``sources`` are ids of ``g`` (or of the prepared graph when
+    ``problem`` is passed); duplicates contribute once each.  Sources are
+    processed in fixed cohorts of ``batch`` stacked wave columns (default
+    min(8, len(sources))).  ``bc_fn`` is an optional prebuilt
+    :func:`make_betweenness` callable of width ``batch`` (sessions pass
+    their cached one).
+    """
+    if problem is None:
+        from repro.core.bvss import build_bvss
+        problem = BlestProblem.build(build_bvss(g))
+    sources = np.asarray(sources, dtype=np.int32)
+    if len(sources) == 0:
+        return np.zeros(problem.n, dtype=np.float64)
+    S = batch if batch is not None else min(8, len(sources))
+    f = bc_fn if bc_fn is not None else make_betweenness(
+        problem, S, use_kernel=use_kernel, max_levels=max_levels)
+    bc = np.zeros(problem.n, dtype=np.float64)
+    for lo in range(0, len(sources), S):
+        chunk = sources[lo:lo + S]
+        valid = len(chunk)  # tail cohorts are padded, padded cols dropped
+        _, _, delta = f(jnp.asarray(pad_cohort(chunk, S)))
+        bc += np.asarray(delta[:, :valid], dtype=np.float64).sum(axis=1)
+    return bc

@@ -1,0 +1,14 @@
+"""Shared helpers for the analytics wave clients."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pad_cohort(chunk: np.ndarray, width: int) -> np.ndarray:
+    """Pad a tail cohort to the fixed wave width by repeating its last
+    source (callers drop the padded columns' results).  Repetition — not
+    e.g. vertex 0 — keeps padded columns converging no later than the
+    real ones."""
+    if len(chunk) >= width:
+        return chunk
+    return np.concatenate([chunk, np.repeat(chunk[-1:], width - len(chunk))])

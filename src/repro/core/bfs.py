@@ -215,6 +215,35 @@ def make_compactor(dev: BVSSDevice, num_vss: int, qcap: int) -> Callable:
     return compact
 
 
+class QueueHistory(NamedTuple):
+    """Per-level frontier history of one fused traversal: row ``lvl`` of
+    ``Q`` is the compacted VSS queue the level-``lvl`` pull consumed (the
+    tiles whose slice sets intersect the level-``lvl - 1`` frontier), with
+    its live count.  Recorded via
+    :func:`repro.core.level_pipeline.run_levels_recorded` and replayed in
+    reverse by the Brandes backward sweep (``repro.analytics.betweenness``)
+    — level-``t`` dependency flow lives in exactly the tiles whose columns
+    meet the level-``t - 1`` frontier, which is this queue."""
+
+    Q: jnp.ndarray      # (max_levels + 1, qcap) int32, dummy-padded
+    count: jnp.ndarray  # (max_levels + 1,) int32
+
+
+def make_queue_history(qcap: int, max_levels: int, dummy_vss: int
+                       ) -> tuple[QueueHistory, Callable]:
+    """Preallocate a :class:`QueueHistory` buffer and build the ``record``
+    hook that snapshots a wave state's ``(Q, count)`` into row ``lvl``."""
+    hist0 = QueueHistory(
+        Q=jnp.full((max_levels + 1, qcap), dummy_vss, dtype=jnp.int32),
+        count=jnp.zeros((max_levels + 1,), dtype=jnp.int32))
+
+    def record(hist: QueueHistory, state, lvl) -> QueueHistory:
+        return QueueHistory(Q=hist.Q.at[lvl].set(state.Q),
+                            count=hist.count.at[lvl].set(state.count))
+
+    return hist0, record
+
+
 def _make_pull_step(dev, pull: PullFn, sigma: int, n_rows: int,
                     widths: list[int], *, lazy: bool) -> Callable:
     """The bucketed gather → pull → update step, parameterised over the
@@ -248,8 +277,8 @@ def _make_pull_step(dev, pull: PullFn, sigma: int, n_rows: int,
         small, full = widths
         return jax.lax.cond(
             state.count <= small,
-            lambda s, l: pull_update(s, l, small),
-            lambda s, l: pull_update(s, l, full),
+            lambda s, lv: pull_update(s, lv, small),
+            lambda s, lv: pull_update(s, lv, full),
             state, lvl)
 
     return step

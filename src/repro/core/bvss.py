@@ -285,7 +285,9 @@ def shard_to_device(sb: ShardedBVSS, mesh=None, axis: str = "data"
     if mesh is not None:
         from repro.distributed.bfs_dist import problem_sharding
         sharding = problem_sharding(mesh, axis)
-        put = lambda x: jax.device_put(x, sharding)
+
+        def put(x):
+            return jax.device_put(x, sharding)
     else:
         put = jnp.asarray
     return ShardedBVSSDevice(masks=put(masks), row_ids=put(row_ids),

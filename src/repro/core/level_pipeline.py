@@ -87,3 +87,35 @@ def run_levels(pipe: LevelPipeline, state: State, *, max_levels: int
 
     state, lvl = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state, lvl
+
+
+def run_levels_recorded(pipe: LevelPipeline, state: State, *,
+                        max_levels: int, history: State,
+                        record: Callable[[State, State, jnp.ndarray], State]
+                        ) -> tuple[State, jnp.ndarray, State]:
+    """:func:`run_levels` with a per-level *history* channel: before each
+    level's ``step``, ``record(hist, state, lvl)`` folds the pre-step state
+    into a caller-preallocated buffer pytree (e.g. ``hist.Q.at[lvl].set``).
+
+    This is how a traversal exposes its per-level frontier history to a
+    consumer that must replay it — the Brandes backward dependency sweep
+    (``repro.analytics.betweenness``) re-walks the recorded per-level VSS
+    queues in reverse, so the backward phase touches exactly the tiles the
+    forward phase pulled.  Still ONE fused on-device ``while_loop``; the
+    history buffer is just extra carry.
+    """
+    def cond(carry):
+        st, lvl, _ = carry
+        return pipe.active(st) & (lvl < max_levels)
+
+    def body(carry):
+        st, lvl, hist = carry
+        lvl = lvl + 1
+        hist = record(hist, st, lvl)
+        st = pipe.step(st, lvl)
+        st = pipe.finalize(st, lvl)
+        return st, lvl, hist
+
+    state, lvl, history = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), history))
+    return state, lvl, history

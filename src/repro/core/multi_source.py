@@ -17,6 +17,18 @@ requeue / one lock-step level) so GraphSession (``repro.serve``) can drive
 the same step with host control between levels — the wave-serving loop with
 mid-flight slot refills — while :func:`make_multi_source_bfs` fuses the whole
 loop on device for the fixed-cohort case (closeness centrality).
+:func:`drive_wave` is the generic host loop both ride: callers supply only a
+*refill hook* (``next_source``) and a harvest callback, so every wave client
+— level serving, connected-components flood-fill re-seeding
+(``repro.analytics.components``), centrality cohorts — shares one slot-pool
+discipline instead of re-implementing it.
+
+``make_ms_engine(..., track_sigma=True)`` widens the wave state with a σ
+path-count channel (DESIGN §2.6): alongside the Boolean bit-SpMM pull, each
+level runs the *weighted* tile product ``kernels.bvss_spmm_w`` over the same
+queued BVSS masks, propagating ``paths[u] = Σ paths[pred]`` for the Brandes
+forward phase (``repro.analytics.betweenness``); the Boolean counts still
+gate discovery, so the float channel can never invent a vertex.
 
 Both are MESH-NATIVE (DESIGN §2.4): a row-sharded
 :class:`~repro.core.bfs.BlestProblem` runs the same step/finalize under
@@ -40,8 +52,8 @@ from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
 from repro.graphs import Graph
-from repro.kernels import bvss_spmm
-from repro.kernels.ref import bvss_spmm_ref
+from repro.kernels import bvss_spmm, bvss_spmm_w
+from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_w_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
 
@@ -58,6 +70,12 @@ class MSState(NamedTuple):
     col_lvl: jnp.ndarray  # (S,) int32 per-column BFS depth reached so far
                           #   sharded: (D, S) identical replicas
     cont: jnp.ndarray     # bool: any live VSS anywhere (mesh-global)
+    paths: jnp.ndarray | None = None
+                          # (n, S) float32 σ shortest-path counts (Brandes
+                          # forward channel), present iff the engine was
+                          # built with ``track_sigma=True``; None otherwise
+                          # (a None pytree leaf costs the default engines
+                          # nothing)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,9 +94,14 @@ class MSEngine:
     init: Callable        # (sources (S,) i32) -> MSState, queue rebuilt
     idle: Callable        # () -> MSState with no live columns
     insert: Callable      # (state, slot, src) -> MSState (requeue after!)
+    insert_batch: Callable  # (state, srcs (S,), mask (S,)) -> MSState with
+                          # every masked slot reset + queue rebuilt: ONE
+                          # dispatch per refill round (the drive_wave path)
     requeue: Callable     # (state) -> state with Q/count rebuilt from F
-    step: Callable        # (state) -> state after gather+pull+update
-    finalize: Callable    # (state) -> state after pack+requeue
+    step: Callable | None        # (state) -> state after gather+pull+update
+    finalize: Callable | None    # (state) -> state after pack+requeue
+                          # (None on the sharded surface: the fused loop is
+                          # built by make_multi_source_bfs instead)
     level_step: Callable  # jitted (state) -> (state, live (S,) bool) after
                           # one full level — liveness piggybacks on the
                           # step so serving pays ONE dispatch per level
@@ -87,14 +110,23 @@ class MSEngine:
 
 
 def make_ms_engine(problem: BlestProblem, n_slots: int, *,
-                   use_kernel: bool = True, buckets: int = 2) -> MSEngine:
+                   use_kernel: bool = True, buckets: int = 2,
+                   track_sigma: bool = False) -> MSEngine:
     """Build the S-column lock-step BVSS level machinery (mesh-native when
-    ``problem`` is sharded)."""
+    ``problem`` is sharded).  ``track_sigma`` widens the wave state with the
+    Brandes σ path-count channel (single-device only: the weighted sweeps
+    have no shard_map'd variant yet — see DESIGN §2.6)."""
     p = problem
     spmm = bvss_spmm if use_kernel else bvss_spmm_ref
     if p.mesh is not None:
+        if track_sigma:
+            raise NotImplementedError(
+                "track_sigma has no shard_map'd path yet; run the Brandes "
+                "forward phase on a single-device BlestProblem (the serving "
+                "layer builds one from the prepared host BVSS)")
         return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
                                        buckets=buckets)
+    spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
     dev = p.dev
     sigma = p.sigma
     S = n_slots
@@ -104,6 +136,7 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
     compact = make_compactor(dev, p.num_vss, qcap)
     all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
     n_pad = n_fwords * 32
+    n_cols = p.n_sets * sigma  # padded column space (≥ n) for value gathers
     weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
 
     def pull_update(state: MSState, width: int) -> MSState:
@@ -116,7 +149,27 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                         ).astype(jnp.int32)
         # eager scatter-min: an already-visited row keeps its smaller level;
         # dummy rows land in the level sink (row n)
-        return state._replace(levels=state.levels.at[rows].min(upd))
+        levels = state.levels.at[rows].min(upd)
+        if not track_sigma:
+            return state._replace(levels=levels)
+        # σ channel (DESIGN §2.6): the weighted twin of the pull above —
+        # the SAME queued tiles, contracted against the frontier's float
+        # path counts; rows discovered this level take the accumulated sum
+        # (Boolean counts gate discovery, so a converged column — whose
+        # frontier bits are gone but whose levels still match col_lvl —
+        # contributes nothing).
+        xv = jnp.where(levels[:n] == state.col_lvl[None, :],
+                       state.paths, 0.0)
+        xv = jnp.concatenate(
+            [xv, jnp.zeros((n_cols - n, S), jnp.float32)])
+        cols = (dev.virtual_to_real[ids][:, None] * sigma
+                + jnp.arange(sigma, dtype=jnp.int32)[None, :])   # (w, σ)
+        wv = spmm_w(dev.masks[ids], xv[cols], sigma=sigma)
+        acc = jnp.zeros((n + 1, S), jnp.float32).at[rows].add(
+            wv.reshape(-1, S))
+        newly = levels[:n] == cand
+        return state._replace(
+            levels=levels, paths=jnp.where(newly, acc[:n], state.paths))
 
     def step(state: MSState) -> MSState:
         if len(widths) == 1:
@@ -143,6 +196,9 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         state = state._replace(F=F, col_lvl=state.col_lvl + new.any(axis=0))
         return requeue(state)
 
+    def _paths0() -> jnp.ndarray | None:
+        return jnp.zeros((n, S), jnp.float32) if track_sigma else None
+
     def init(sources: jnp.ndarray) -> MSState:
         sources = jnp.asarray(sources, dtype=jnp.int32)
         cols = jnp.arange(S)
@@ -151,11 +207,14 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         F = jnp.zeros((n_fwords, S), dtype=jnp.uint32)
         F = F.at[sources // 32, cols].set(
             jnp.uint32(1) << (sources % 32).astype(jnp.uint32))
+        paths = _paths0()
+        if track_sigma:
+            paths = paths.at[sources, cols].set(1.0)
         st = MSState(levels=levels, F=F,
                      Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
                      count=jnp.int32(0),
                      col_lvl=jnp.zeros((S,), dtype=jnp.int32),
-                     cont=jnp.bool_(False))
+                     cont=jnp.bool_(False), paths=paths)
         return requeue(st)
 
     def idle() -> MSState:
@@ -164,7 +223,7 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                        Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
                        count=jnp.int32(0),
                        col_lvl=jnp.zeros((S,), dtype=jnp.int32),
-                       cont=jnp.bool_(False))
+                       cont=jnp.bool_(False), paths=_paths0())
 
     def insert(state: MSState, slot: jnp.ndarray, src: jnp.ndarray
                ) -> MSState:
@@ -176,20 +235,98 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         F = state.F.at[:, slot].set(jnp.uint32(0))
         F = F.at[src // 32, slot].set(
             jnp.uint32(1) << (src % 32).astype(jnp.uint32))
-        return state._replace(levels=levels, F=F,
+        paths = state.paths
+        if track_sigma:
+            paths = paths.at[:, slot].set(0.0).at[src, slot].set(1.0)
+        return state._replace(levels=levels, F=F, paths=paths,
                               col_lvl=state.col_lvl.at[slot].set(0))
+
+    def insert_batch(state: MSState, srcs: jnp.ndarray, mask: jnp.ndarray
+                     ) -> MSState:
+        """Reset every slot with ``mask[j]`` to a fresh query from
+        ``srcs[j]`` and rebuild the queue — one fused dispatch per refill
+        round (``srcs[j]`` is ignored where the mask is False)."""
+        cols = jnp.arange(S)
+        levels = jnp.where(mask[None, :], INF, state.levels)
+        levels = levels.at[srcs, cols].set(
+            jnp.where(mask, 0, levels[srcs, cols]))
+        F = jnp.where(mask[None, :], jnp.uint32(0), state.F)
+        bit = jnp.uint32(1) << (srcs % 32).astype(jnp.uint32)
+        F = F.at[srcs // 32, cols].set(
+            jnp.where(mask, bit, F[srcs // 32, cols]))
+        paths = state.paths
+        if track_sigma:
+            paths = jnp.where(mask[None, :], 0.0, paths)
+            paths = paths.at[srcs, cols].set(
+                jnp.where(mask, 1.0, paths[srcs, cols]))
+        st = state._replace(levels=levels, F=F, paths=paths,
+                            col_lvl=jnp.where(mask, 0, state.col_lvl))
+        return requeue(st)
 
     def level_step(state: MSState) -> tuple[MSState, jnp.ndarray]:
         state = finalize(step(state))
         return state, (state.F != 0).any(axis=0)
 
     return MSEngine(
-        problem=p, n_slots=S, init=jax.jit(init), idle=idle,
-        insert=jax.jit(insert), requeue=jax.jit(requeue),
+        problem=p, n_slots=S, init=jax.jit(init), idle=jax.jit(idle),
+        insert=jax.jit(insert), insert_batch=jax.jit(insert_batch),
+        requeue=jax.jit(requeue),
         step=step, finalize=finalize,
         level_step=jax.jit(level_step),
         col_live=jax.jit(lambda st: (st.F != 0).any(axis=0)),
         levels_of=lambda st, slot: st.levels[:n, slot])
+
+
+# ---------------------------------------------------------------------------
+# generic wave driver: the ONE slot-pool serving loop (DESIGN §2.5/§2.6)
+# ---------------------------------------------------------------------------
+def drive_wave(eng: MSEngine,
+               next_source: Callable[[int], int | None],
+               on_converged: Callable[[int, np.ndarray], None], *,
+               max_steps: int | None = None) -> int:
+    """Drive batched waves with mid-flight slot refills until the refill
+    hook runs dry — the host loop shared by level serving
+    (``GraphSession.levels_batch``) and flood-fill re-seeding
+    (``repro.analytics.components``).
+
+    ``next_source(slot)`` returns the next source (internal row id) to
+    launch in a freed slot, or None when the caller has nothing to queue
+    *right now* (it is asked again after every harvest, so dynamic seeding
+    off previous results is fine).  ``on_converged(slot, levels)`` receives
+    each converged column's ``(n,)`` level array (global internal ids; the
+    engine's ``levels_of`` hides any shard layout).  Returns the number of
+    lock-step levels run.
+    """
+    S = eng.n_slots
+    busy = [False] * S
+    st = eng.idle()
+    steps = 0
+    srcs = np.zeros(S, dtype=np.int32)
+    mask = np.zeros(S, dtype=bool)
+    while True:
+        mask[:] = False
+        for slot in range(S):
+            if not busy[slot]:
+                src = next_source(slot)
+                if src is None:
+                    continue
+                srcs[slot] = int(src)
+                mask[slot] = True
+                busy[slot] = True
+        if not any(busy):
+            return steps
+        if mask.any():  # ONE fused insert+requeue dispatch per refill round
+            st = eng.insert_batch(st, jnp.asarray(srcs), jnp.asarray(mask))
+        st, live_dev = eng.level_step(st)
+        live = np.asarray(live_dev)
+        for slot in range(S):
+            if busy[slot] and not live[slot]:
+                on_converged(slot, np.asarray(eng.levels_of(st, slot)))
+                busy[slot] = False
+        steps += 1
+        if max_steps is not None and steps > max_steps:
+            raise RuntimeError(
+                f"wave serving did not converge in {max_steps} level steps")
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +337,7 @@ class _MSLocals(NamedTuple):
     serving surface and the fused on-device loop."""
     init: Callable
     insert: Callable
+    insert_batch: Callable
     requeue: Callable
     step: Callable
     finalize: Callable
@@ -292,7 +430,25 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             return st._replace(levels=levels, F=F,
                                col_lvl=st.col_lvl.at[slot].set(0))
 
-        return _MSLocals(init=init, insert=insert, requeue=requeue,
+        def insert_batch(st: MSState, srcs, mask) -> MSState:
+            d = jax.lax.axis_index(axis)
+            cols = jnp.arange(S)
+            lsrc = srcs - d * rps
+            own = mask & (lsrc >= 0) & (lsrc < rps)
+            rows = jnp.where(own, lsrc, rps)    # non-owned -> dummy row
+            levels = jnp.where(mask[None, :], INF, st.levels)
+            levels = levels.at[rows, cols].set(
+                jnp.where(own, 0, levels[rows, cols]))
+            F = jnp.where(mask[None, :], jnp.uint32(0), st.F)
+            bit = jnp.uint32(1) << (srcs % 32).astype(jnp.uint32)
+            F = F.at[srcs // 32, cols].set(
+                jnp.where(mask, bit, F[srcs // 32, cols]))
+            st = st._replace(levels=levels, F=F,
+                             col_lvl=jnp.where(mask, 0, st.col_lvl))
+            return requeue(st)
+
+        return _MSLocals(init=init, insert=insert,
+                         insert_batch=insert_batch, requeue=requeue,
                          step=step, finalize=finalize)
 
     return locals_for
@@ -338,6 +494,10 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
         loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
         return _stack(loc.insert(_unstack(st), slot, src))
 
+    def _insert_batch(masks, row_ids, v2r, st, srcs, mask):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+        return _stack(loc.insert_batch(_unstack(st), srcs, mask))
+
     def _requeue(masks, row_ids, v2r, st):
         loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
         return _stack(loc.requeue(_unstack(st)))
@@ -349,11 +509,13 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
 
     init_sm = sm(_init, (P(),), state_spec)
     insert_sm = sm(_insert, (state_spec, P(), P()), state_spec)
+    insert_batch_sm = sm(_insert_batch, (state_spec, P(), P()), state_spec)
     requeue_sm = sm(_requeue, (state_spec,), state_spec)
     level_sm = sm(_level_step, (state_spec,), (state_spec, P(axis)))
 
     def idle() -> MSState:
-        sh = lambda a: jax.device_put(a, NamedSharding(mesh, P(axis)))
+        def sh(a):
+            return jax.device_put(a, NamedSharding(mesh, P(axis)))
         return MSState(
             levels=sh(np.full((D, rps + 1, S), INF, np.int32)),
             F=sh(np.zeros((D, p.n_fwords, S), np.uint32)),
@@ -376,6 +538,8 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
             jnp.asarray(sources, dtype=jnp.int32))),
         idle=idle,
         insert=jax.jit(lambda st, slot, src: insert_sm(st, slot, src)),
+        insert_batch=jax.jit(
+            lambda st, srcs, mask: insert_batch_sm(st, srcs, mask)),
         requeue=jax.jit(requeue_sm),
         step=None, finalize=None,   # fused via make_multi_source_bfs
         level_step=jax.jit(level_step),
@@ -403,8 +567,10 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
             max_lv=max_lv)
     eng = make_ms_engine(problem, n_sources, use_kernel=use_kernel,
                          buckets=buckets)
-    pipe = LevelPipeline(step=lambda s, lvl: eng.step(s),
-                         finalize=lambda s, lvl: eng.finalize(s),
+    step, finalize = eng.step, eng.finalize
+    assert step is not None and finalize is not None
+    pipe = LevelPipeline(step=lambda s, lvl: step(s),
+                         finalize=lambda s, lvl: finalize(s),
                          active=lambda s: s.cont)
 
     def bfs(sources: jnp.ndarray) -> jnp.ndarray:

@@ -56,6 +56,7 @@ class PreparedBFS:
 
     def levels(self, src: int) -> np.ndarray:
         """BFS levels in the caller's (original) vertex ids."""
+        assert self._fn is not None, "PreparedBFS built without an engine"
         lv = np.asarray(self._fn(int(self.perm[src])))
         return lv[self.perm]
 

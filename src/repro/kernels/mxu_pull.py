@@ -22,6 +22,16 @@ stacked σ-bit frontier bytes of each VSS's slice set, and resolves every
 per VSS an (τ, σ) slice-bit tile contracted against its (σ, S) frontier-bit
 tile on the MXU.  This is the serving hot path: multi-source BFS touches
 only BVSS words, never the O(n²/32) dense adjacency.
+
+``bvss_spmm_w``/``bvss_spmm_t`` are the *weighted* analytics companions
+(DESIGN §2.6): the same (τ, σ) adjacency bit tile, contracted against
+float32 operands instead of frontier bits.  ``bvss_spmm_w`` contracts over
+the σ column axis (a weighted pull — Brandes σ path-count propagation
+feeds per-column predecessor values); ``bvss_spmm_t`` contracts over the τ
+row axis (the transposed product — the Brandes backward dependency sweep
+pushes per-row values back onto the columns).  One bit-unpack serves both
+traversal and analytics, so every algorithm in ``repro.analytics`` rides
+the tiles the BFS engines already own.
 """
 from __future__ import annotations
 
@@ -176,3 +186,117 @@ def bvss_spmm(masks: jnp.ndarray, fbytes: jnp.ndarray, *, sigma: int = 8,
         interpret=interpret,
     )(masks, fbytes)
     return y[:B, :, :S].reshape(B, spw, 32, S)
+
+
+# ---------------------------------------------------------------------------
+# weighted BVSS tiles: the analytics semiring (DESIGN §2.6)
+# ---------------------------------------------------------------------------
+def _unpack_slice_tile(masks: jnp.ndarray, sigma: int) -> jnp.ndarray:
+    """(TB, 32) u32 mask rows -> (TB, τ, σ) float32 {0,1} adjacency tiles.
+
+    Slice k = j*32 + l of VSS b carries mask bits σj+i of word masks[b, l];
+    the unpacked tile row k therefore matches ``row_ids[b].reshape(-1)``
+    order and column i is the i-th vertex of the VSS's slice set."""
+    spw = 32 // sigma
+    tb = masks.shape[0]
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+    bits = (masks[:, :, None] >> bitpos[None, None, :]) & jnp.uint32(1)
+    a = bits.reshape(tb, 32, spw, sigma).transpose(0, 2, 1, 3)
+    return a.reshape(tb, spw * 32, sigma).astype(jnp.float32)
+
+
+def _bvss_spmm_w_kernel(masks_ref, xv_ref, y_ref, *, sigma: int):
+    """masks_ref (TB, 32) u32; xv_ref (TB, σ, TS) f32 per-column values;
+    y_ref (TB, τ, TS) f32 = per-VSS (τ, σ) bit tile @ (σ, TS) values."""
+    a = _unpack_slice_tile(masks_ref[...], sigma)
+    y_ref[...] = jax.lax.dot_general(
+        a, xv_ref[...], dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _bvss_spmm_t_kernel(masks_ref, hv_ref, y_ref, *, sigma: int):
+    """masks_ref (TB, 32) u32; hv_ref (TB, τ, TS) f32 per-row values;
+    y_ref (TB, σ, TS) f32 = per-VSS (σ, τ) transposed tile @ (τ, TS)."""
+    a = _unpack_slice_tile(masks_ref[...], sigma)
+    y_ref[...] = jax.lax.dot_general(
+        a, hv_ref[...], dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _spmm_float_call(kernel, masks, vals, mid: int, out_mid: int, *,
+                     sigma: int, tile_b: int | None,
+                     tile_s: int | None, interpret: bool | None):
+    """Shared pallas_call plumbing for the two weighted tile products:
+    vals is (B, mid, S) float32, the result (B, out_mid, S) float32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, S = masks.shape[0], vals.shape[2]
+    if tile_b is None:
+        tile_b = 128 if interpret else 8
+    if tile_s is None:
+        tile_s = min(128, ((S + 7) // 8) * 8)
+    pb, ps = (-B) % tile_b, (-S) % tile_s
+    if pb:
+        masks = jnp.pad(masks, ((0, pb), (0, 0)))
+        vals = jnp.pad(vals, ((0, pb), (0, 0), (0, 0)))
+    if ps:
+        vals = jnp.pad(vals, ((0, 0), (0, 0), (0, ps)))
+    Bp, Sp = B + pb, S + ps
+    grid = (Bp // tile_b, Sp // tile_s)
+    y = pl.pallas_call(
+        functools.partial(kernel, sigma=sigma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 32), lambda b, s: (b, 0)),
+            pl.BlockSpec((tile_b, mid, tile_s), lambda b, s: (b, 0, s)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, out_mid, tile_s),
+                               lambda b, s: (b, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((Bp, out_mid, Sp), jnp.float32),
+        interpret=interpret,
+    )(masks, vals)
+    return y[:B, :, :S]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "tile_b", "tile_s",
+                                             "interpret"))
+def bvss_spmm_w(masks: jnp.ndarray, xvals: jnp.ndarray, *, sigma: int = 8,
+                tile_b: int | None = None, tile_s: int | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Weighted BVSS pull: per-VSS (τ, σ) bit tile @ (σ, S) float values.
+
+    masks: (B, 32) uint32 queued VSS mask rows.
+    xvals: (B, σ, S) float32 — the values of each VSS's σ slice-set columns,
+           one stacked column per source (zero where a column is not in the
+           active contribution set, e.g. not on the current BFS frontier).
+    returns (B, spw, 32, S) float32; [b, j, l, s] is the weighted sum over
+           the in-neighbour columns of slice k = j*32 + l — scatter-add it
+           into rows via ``row_ids`` (the σ path-count recurrence).
+    """
+    spw = 32 // sigma
+    B = masks.shape[0]
+    y = _spmm_float_call(_bvss_spmm_w_kernel, masks, xvals, sigma, spw * 32,
+                         sigma=sigma, tile_b=tile_b, tile_s=tile_s,
+                         interpret=interpret)
+    return y.reshape(B, spw, 32, y.shape[2])
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "tile_b", "tile_s",
+                                             "interpret"))
+def bvss_spmm_t(masks: jnp.ndarray, hvals: jnp.ndarray, *, sigma: int = 8,
+                tile_b: int | None = None, tile_s: int | None = None,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Transposed weighted BVSS product: (σ, τ) tile @ (τ, S) float values.
+
+    masks: (B, 32) uint32 queued VSS mask rows.
+    hvals: (B, spw, 32, S) float32 — per-row values gathered through
+           ``row_ids`` (zero where a row is not in the contributing level).
+    returns (B, σ, S) float32; [b, i, s] is the weighted sum over the rows
+           adjacent to the i-th column of the VSS's slice set — scatter-add
+           it into columns (the Brandes backward dependency sweep).
+    """
+    B, spw = hvals.shape[0], hvals.shape[1]
+    hv = hvals.reshape(B, spw * 32, hvals.shape[3])
+    return _spmm_float_call(_bvss_spmm_t_kernel, masks, hv, spw * 32, sigma,
+                            sigma=sigma, tile_b=tile_b, tile_s=tile_s,
+                            interpret=interpret)

@@ -7,7 +7,7 @@ execute in ``interpret=True``; on TPU they compile to Mosaic.
 from __future__ import annotations
 
 from .bvss_pull import bvss_pull
-from .mxu_pull import bit_spmm, bvss_spmm
+from .mxu_pull import bit_spmm, bvss_spmm, bvss_spmm_t, bvss_spmm_w
 from .frontier_finalize import finalize_pack_sweep, finalize_sweep
 from . import ref
 
@@ -18,5 +18,6 @@ def pull_vss_kernel(masks, fbytes, sigma: int = 8):
     return bvss_pull(masks, fbytes, sigma=sigma)
 
 
-__all__ = ["bvss_pull", "bit_spmm", "bvss_spmm", "finalize_sweep",
-           "finalize_pack_sweep", "pull_vss_kernel", "ref"]
+__all__ = ["bvss_pull", "bit_spmm", "bvss_spmm", "bvss_spmm_t",
+           "bvss_spmm_w", "finalize_sweep", "finalize_pack_sweep",
+           "pull_vss_kernel", "ref"]

@@ -1,7 +1,18 @@
-"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+"""Oracles for the kernel layer (the ``ref.py`` contract).
+
+Two kinds live here:
+
+* pure-jnp twins of every Pallas kernel (drop-in, same signature) — the
+  ``use_kernel(s)=False`` fallback path and the per-kernel test oracle;
+* host-side *analytics* oracles (NetworkX / SciPy / NumPy) for the
+  ``repro.analytics`` subsystem — connected components, eccentricity and
+  Brandes betweenness computed by an independent implementation, so every
+  wave-engine analytic is verified end-to-end, not just per tile.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 INF32 = jnp.int32(jnp.iinfo(jnp.int32).max)
 
@@ -35,6 +46,29 @@ def bvss_spmm_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
     xbits = ((fbytes[:, None, :] >> ib[None, :, None])
              & jnp.uint32(1)).astype(jnp.int32)              # (B, σ, S)
     return jnp.einsum("bjli,bis->bjls", abits, xbits)
+
+
+def _abits(masks: jnp.ndarray, sigma: int) -> jnp.ndarray:
+    """Decode (B, 32) mask words to (B, spw, 32, σ) {0,1} adjacency bits."""
+    spw = 32 // sigma
+    p = (jnp.arange(spw, dtype=jnp.uint32)[:, None] * jnp.uint32(sigma)
+         + jnp.arange(sigma, dtype=jnp.uint32)[None, :])     # (spw, σ)
+    return ((masks[:, None, :, None] >> p[None, :, None, :])
+            & jnp.uint32(1)).astype(jnp.float32)             # (B, spw, 32, σ)
+
+
+def bvss_spmm_w_ref(masks: jnp.ndarray, xvals: jnp.ndarray, sigma: int = 8
+                    ) -> jnp.ndarray:
+    """Oracle for kernels.bvss_spmm_w: (B, 32/σ, 32, S) float32 weighted
+    pulls — per slice, the sum of its σ column values under the mask."""
+    return jnp.einsum("bjli,bis->bjls", _abits(masks, sigma), xvals)
+
+
+def bvss_spmm_t_ref(masks: jnp.ndarray, hvals: jnp.ndarray, sigma: int = 8
+                    ) -> jnp.ndarray:
+    """Oracle for kernels.bvss_spmm_t: (B, σ, S) float32 transposed
+    products — per slice-set column, the sum of adjacent row values."""
+    return jnp.einsum("bjli,bjls->bis", _abits(masks, sigma), hvals)
 
 
 def bit_spmm_ref(a_packed: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
@@ -74,3 +108,83 @@ def finalize_pack_ref(levels: jnp.ndarray, lvl, *, sigma: int,
     sbits = jnp.zeros((n_sets * sigma,), dtype=bool).at[:new.shape[0]].set(new)
     set_active = sbits.reshape(n_sets, sigma).any(axis=1)
     return lv_out, fwords, set_active
+
+
+# ---------------------------------------------------------------------------
+# analytics oracles (NetworkX / SciPy / NumPy) — repro.analytics contract
+# ---------------------------------------------------------------------------
+def _csr_matrix(g):
+    import scipy.sparse as sp
+    return sp.csr_matrix(
+        (np.ones(g.m, dtype=np.int8), g.indices, g.indptr), shape=(g.n, g.n))
+
+
+def connected_components_ref(g) -> np.ndarray:
+    """Weakly-connected component labels via SciPy, normalised so that
+    component ids are assigned in order of each component's smallest
+    vertex id (the canonical form ``repro.analytics.components`` emits)."""
+    from scipy.sparse.csgraph import connected_components
+    _, labels = connected_components(_csr_matrix(g), directed=True,
+                                     connection="weak")
+    return normalize_labels(labels)
+
+
+def normalize_labels(labels: np.ndarray) -> np.ndarray:
+    """Relabel components to 0..k-1 in order of first appearance (labels
+    may be arbitrary ints, e.g. union-find roots)."""
+    labels = np.asarray(labels)
+    _, first, inverse = np.unique(labels, return_index=True,
+                                  return_inverse=True)
+    order = np.argsort(first)
+    remap = np.empty(len(order), dtype=np.int64)
+    remap[order] = np.arange(len(order))
+    return remap[inverse]
+
+
+def eccentricity_ref(g, sources) -> np.ndarray:
+    """Per-source eccentricity on ``g`` as given (symmetrise first for the
+    classical undirected definition): the max *finite* BFS distance, so a
+    vertex isolated from the rest of its graph has eccentricity 0."""
+    from scipy.sparse.csgraph import dijkstra
+    sources = np.asarray(sources, dtype=np.int64)
+    dist = dijkstra(_csr_matrix(g), directed=True, unweighted=True,
+                    indices=sources)
+    dist = np.where(np.isfinite(dist), dist, 0.0)
+    return dist.max(axis=1).astype(np.int64)
+
+
+def betweenness_ref(g, sources) -> np.ndarray:
+    """Brandes partial betweenness: Σ_{s∈sources} δ_s(v), unnormalised,
+    endpoints excluded — the exact quantity ``repro.analytics.betweenness``
+    accumulates (NetworkX's ``betweenness_centrality`` equals this with
+    ``sources=range(n)``, ``normalized=False`` on a DiGraph; the analytics
+    test suite cross-checks that equivalence)."""
+    n = g.n
+    indptr, indices = g.indptr, g.indices
+    bc = np.zeros(n, dtype=np.float64)
+    for s in sources:
+        dist = np.full(n, -1, dtype=np.int64)
+        sigma = np.zeros(n, dtype=np.float64)
+        dist[int(s)] = 0
+        sigma[int(s)] = 1.0
+        order = [int(s)]
+        head = 0
+        while head < len(order):
+            v = order[head]
+            head += 1
+            for w in indices[indptr[v]:indptr[v + 1]]:
+                w = int(w)
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    order.append(w)
+                if dist[w] == dist[v] + 1:
+                    sigma[w] += sigma[v]
+        delta = np.zeros(n, dtype=np.float64)
+        for v in reversed(order):
+            for w in indices[indptr[v]:indptr[v + 1]]:
+                w = int(w)
+                if dist[w] == dist[v] + 1:
+                    delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+        delta[int(s)] = 0.0
+        bc += delta
+    return bc

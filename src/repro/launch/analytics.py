@@ -1,0 +1,125 @@
+"""Analytics workload launcher — the DESIGN §2.6 suite end to end.
+
+    PYTHONPATH=src python -m repro.launch.analytics --graph rmat --scale 10 \
+        --what components,extremes,betweenness --verify
+
+Builds a :class:`repro.serve.GraphSession` (the ONE prepared pipeline) and
+serves the requested analytics query kinds off its wave slot pool:
+``components`` (flood-fill re-seeding), ``eccentricity`` (a sampled batch),
+``extremes`` (iFUB diameter/radius), ``betweenness`` (sampled-source
+Brandes).  ``--verify`` checks every result against the independent
+NetworkX/SciPy/NumPy oracles in ``repro.kernels.ref``.
+
+``--devices N`` serves through a row-sharded session (components and
+eccentricity ride the shard_map'd wave surface; betweenness' weighted
+sweeps run replicated — DESIGN §2.6).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.launch.bfs import build_graph, ensure_devices
+
+WHAT = ("components", "eccentricity", "extremes", "betweenness")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="rmat",
+                    choices=["rmat", "urand", "road", "clustered"])
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--what", default=",".join(WHAT),
+                    help=f"comma-separated subset of {WHAT}")
+    ap.add_argument("--sources", type=int, default=8,
+                    help="sample size for eccentricity / betweenness")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="wave slot-pool width (stacked bit-SpMM columns)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="check every result against the NetworkX/SciPy/"
+                         "NumPy oracles (--no-verify for timing runs)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="row-shard the session over an N-device 1-D mesh "
+                         "(simulated on CPU; the process re-execs once)")
+    args = ap.parse_args(argv)
+
+    what = [w.strip() for w in args.what.split(",") if w.strip()]
+    unknown = set(what) - set(WHAT)
+    if unknown:
+        ap.error(f"unknown --what entries {sorted(unknown)}")
+
+    mesh = ensure_devices(args.devices, argv,
+                          module="repro.launch.analytics")
+    g = build_graph(args.graph, args.scale, args.seed)
+    from repro.serve import GraphSession
+    sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
+                        mesh=mesh)
+    print(f"[analytics] graph={args.graph} n={g.n} m={g.m} "
+          f"ordering={sess.ordering} engine={sess.engine_name} "
+          f"max_batch={sess.max_batch}"
+          + (f" mesh={args.devices}x1" if mesh is not None else ""))
+    rng = np.random.default_rng(args.seed)
+
+    if "components" in what:
+        t0 = time.time()
+        labels = sess.components()
+        dt = time.time() - t0
+        k = int(labels.max()) + 1 if len(labels) else 0
+        sizes = np.bincount(labels)
+        line = (f"[analytics] components: k={k} "
+                f"largest={int(sizes.max())}/{g.n} in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import connected_components_ref
+            assert (labels == connected_components_ref(g)).all(), \
+                "components diverge from the SciPy oracle"
+            line += "; VERIFIED vs scipy"
+        print(line)
+
+    if "eccentricity" in what:
+        srcs = rng.integers(0, g.n, args.sources)
+        t0 = time.time()
+        eccs = sess.eccentricity(srcs)
+        dt = time.time() - t0
+        line = (f"[analytics] eccentricity: {len(srcs)} sources, "
+                f"range [{eccs.min()}, {eccs.max()}] in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import eccentricity_ref
+            ref = eccentricity_ref(g.symmetrized, srcs)
+            assert (eccs == ref).all(), "eccentricity diverges from oracle"
+            line += "; VERIFIED vs scipy"
+        print(line)
+
+    if "extremes" in what:
+        t0 = time.time()
+        rep = sess.extremes()
+        dt = time.time() - t0
+        print(f"[analytics] extremes (iFUB): diameter="
+              f"[{rep.diameter_lb}, {rep.diameter_ub}] "
+              f"{'EXACT' if rep.exact else 'bounds'} "
+              f"radius<={rep.radius_ub} center={rep.center} "
+              f"periphery={rep.periphery} "
+              f"({rep.n_ecc_evals} ecc evals / {g.n} vertices) "
+              f"in {dt * 1e3:.1f}ms")
+
+    if "betweenness" in what:
+        t0 = time.time()
+        srcs, bc = sess.betweenness_sample(args.sources, seed=args.seed)
+        dt = time.time() - t0
+        top = np.argsort(-bc)[:5]
+        line = (f"[analytics] betweenness ({len(srcs)} pivots): top "
+                f"{[(int(v), round(float(bc[v]), 1)) for v in top]} "
+                f"in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import betweenness_ref
+            ref = betweenness_ref(g, srcs)
+            np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
+            line += "; VERIFIED vs Brandes oracle"
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -63,10 +63,11 @@ ENGINE_VARIANTS = {
 }
 
 
-def ensure_devices(n: int, argv) -> "object | None":
-    """Return the 1-D BFS mesh for ``n`` devices, re-execing once with the
-    host-platform device-count flag if this process has too few (CPU
-    simulation; the flag is read only at backend init)."""
+def ensure_devices(n: int, argv, *, module: str = "repro.launch.bfs"
+                   ) -> "object | None":
+    """Return the 1-D BFS mesh for ``n`` devices, re-execing ``module``
+    once with the host-platform device-count flag if this process has too
+    few (CPU simulation; the flag is read only at backend init)."""
     if n <= 1:
         return None
     import jax
@@ -77,7 +78,7 @@ def ensure_devices(n: int, argv) -> "object | None":
                 f"{flag} set but only {len(jax.devices())} devices came up")
         env = dict(os.environ)
         env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
-        cmd = [sys.executable, "-m", "repro.launch.bfs",
+        cmd = [sys.executable, "-m", module,
                *(argv if argv is not None else sys.argv[1:])]
         os.execvpe(cmd[0], cmd, env)                 # does not return
     from repro.distributed.bfs_dist import bfs_mesh
@@ -126,7 +127,10 @@ def main(argv=None):
     ap.add_argument("--engine", default="blest_full",
                     choices=sorted(ENGINE_VARIANTS))
     ap.add_argument("--sources", type=int, default=4)
-    ap.add_argument("--verify", action="store_true", default=True)
+    ap.add_argument("--verify", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="check levels against the host oracle "
+                         "(--no-verify for timing runs)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--service", action="store_true",
                     help="serve the sources as one batched wave through "

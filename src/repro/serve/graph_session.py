@@ -16,15 +16,27 @@ Singleton traffic falls back to the fused single-source engine (whole level
 loop on device, no per-level host sync).
 
 Id-space contract: callers speak ORIGINAL vertex ids everywhere — sources
-in, level arrays / centrality scores out.  The internal reordering is
-invisible (the regression the old example got wrong).
+in, level arrays / centrality scores / component labels out.  The internal
+reordering is invisible (the regression the old example got wrong).
+
+Beyond level queries, a session serves the ANALYTICS query kinds
+(DESIGN §2.6) multiplexed onto the same ``max_batch`` slot pool:
+``components()`` (flood-fill re-seeding through the generic wave refill
+hook), ``eccentricity(batch)`` / ``extremes()`` (iFUB sweeps through the
+fused multi-source engine) and ``betweenness(...)`` (Brandes forward σ
+channel + reverse tile sweep).  The classical undirected analytics run on
+a lazily-built symmetrised twin of the prepared problem (same internal id
+space, so the caller-id contract is unchanged).
 
 A session is MESH-NATIVE (DESIGN §2.4): pass ``mesh=...`` and the whole
 stack — prepare, the fused single-source engine, the wave machinery —
 runs row-sharded under ``shard_map``.  The serving loop and the caller-id
 contract are identical in either mode; the only difference is the shape
 of the wave state (a leading shard axis), which the engine's
-``levels_of`` view hides from this layer.
+``levels_of`` view hides from this layer.  Components and eccentricity
+ride the sharded wave surface directly; betweenness' weighted sweeps have
+no shard_map'd variant yet, so a sharded session serves it through a
+replicated single-device problem built from the prepared host BVSS.
 """
 from __future__ import annotations
 
@@ -32,13 +44,18 @@ import time
 from collections import deque
 from typing import Sequence
 
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.multi_source import closeness_centrality, make_ms_engine
+from repro.analytics import (ExtremesReport, betweenness_centrality,
+                             connected_components, eccentricities,
+                             ifub_extremes)
+from repro.core.bfs import BlestProblem
+from repro.core.multi_source import (closeness_centrality, drive_wave,
+                                     make_ms_engine)
 from repro.core.policy import PreparedBFS, prepare
 from repro.graphs import Graph
+from repro.kernels.ref import normalize_labels
 
 
 class GraphSession:
@@ -66,11 +83,15 @@ class GraphSession:
             # non-BVSS engine override: the wave pool still needs the
             # device BVSS; keep it session-local so PreparedBFS keeps its
             # "problem is None for non-BVSS engines" invariant
-            from repro.core.bfs import BlestProblem
             self._problem = BlestProblem.build(self.prepared.bvss)
         self.max_batch = int(max_batch)
+        self._use_kernel = use_kernel
+        self._mesh_axis = mesh_axis
         self._ms = make_ms_engine(self._problem, self.max_batch,
                                   use_kernel=use_kernel)
+        # analytics problems/engines, built on first use and cached so
+        # repeat queries never recompile (DESIGN §2.6)
+        self._analytics_cache: dict = {}
         self.max_steps = max_steps
         self.preprocess_s = time.time() - t0
 
@@ -124,38 +145,25 @@ class GraphSession:
             return []
         if len(srcs) == 1:  # singleton traffic: no batching win available
             return [self.levels(srcs[0])]
-        eng = self._ms
         perm = self.perm
         queue = deque(enumerate(srcs))
         owner: list[int | None] = [None] * self.max_batch
         results: dict[int, np.ndarray] = {}
-        st = eng.idle()
+
+        def next_source(slot: int) -> int | None:
+            if not queue:
+                return None
+            rid, src = queue.popleft()
+            owner[slot] = rid
+            return int(perm[src])
+
+        def on_converged(slot: int, lv: np.ndarray) -> None:
+            results[owner[slot]] = lv[perm]
+            owner[slot] = None
+
         limit = self.max_steps if self.max_steps is not None else \
             (len(srcs) + self.max_batch) * (self.n + 1)
-        steps = 0
-        while queue or any(o is not None for o in owner):
-            refilled = False
-            for slot in range(self.max_batch):
-                if owner[slot] is None and queue:
-                    rid, src = queue.popleft()
-                    st = eng.insert(st, jnp.int32(slot),
-                                    jnp.int32(perm[src]))
-                    owner[slot] = rid
-                    refilled = True
-            if refilled:
-                st = eng.requeue(st)
-            st, live_dev = eng.level_step(st)
-            live = np.asarray(live_dev)
-            for slot in range(self.max_batch):
-                if owner[slot] is not None and not live[slot]:
-                    # levels_of hides the shard layout (global (n,) column)
-                    lv = np.asarray(eng.levels_of(st, slot))
-                    results[owner[slot]] = lv[perm]
-                    owner[slot] = None
-            steps += 1
-            if steps > limit:
-                raise RuntimeError(
-                    f"wave serving did not converge in {limit} level steps")
+        drive_wave(self._ms, next_source, on_converged, max_steps=limit)
         return [results[i] for i in range(len(srcs))]
 
     # ------------------------------------------------------------------
@@ -180,3 +188,149 @@ class GraphSession:
         rng = np.random.default_rng(seed)
         srcs = rng.integers(0, self.n, n_sources)
         return srcs, self.closeness(srcs)
+
+    # ------------------------------------------------------------------
+    # analytics query kinds (DESIGN §2.6)
+    # ------------------------------------------------------------------
+    def _sym_problem(self) -> BlestProblem:
+        """The symmetrised twin of the prepared problem (same internal id
+        space — symmetrisation commutes with the reordering), backing the
+        classical undirected analytics; sharded when the session is."""
+        if "sym_problem" not in self._analytics_cache:
+            gs = self.prepared.graph.symmetrized
+            sigma = self.prepared.bvss.sigma
+            mesh = self.mesh
+            if mesh is not None:
+                from repro.core.bvss import build_sharded_bvss
+                sb = build_sharded_bvss(gs, mesh.shape[self._mesh_axis],
+                                        sigma=sigma)
+                prob = BlestProblem.build_sharded(sb, mesh, self._mesh_axis)
+            else:
+                from repro.core.bvss import build_bvss
+                prob = BlestProblem.build(build_bvss(gs, sigma=sigma))
+            self._analytics_cache["sym_problem"] = prob
+        return self._analytics_cache["sym_problem"]
+
+    def _sym_ms(self):
+        """Wave slot pool over the symmetrised problem (flood-fill)."""
+        if "sym_ms" not in self._analytics_cache:
+            self._analytics_cache["sym_ms"] = make_ms_engine(
+                self._sym_problem(), self.max_batch,
+                use_kernel=self._use_kernel)
+        return self._analytics_cache["sym_ms"]
+
+    def _sym_sss(self):
+        """Fused single-source engine on the symmetrised problem (the
+        flood-fill's phase-0 giant-component pass)."""
+        if "sym_sss" not in self._analytics_cache:
+            from repro.core.bfs import make_blest_bfs
+            self._analytics_cache["sym_sss"] = make_blest_bfs(
+                self._sym_problem(), lazy=False,
+                use_kernels=self._use_kernel)
+        return self._analytics_cache["sym_sss"]
+
+    def _sym_wave(self, width: int):
+        """Cached fixed-cohort multi-source fn on the symmetrised problem
+        (eccentricity batches; one compile per distinct width)."""
+        key = ("sym_wave", width)
+        if key not in self._analytics_cache:
+            from repro.core.multi_source import make_multi_source_bfs
+            self._analytics_cache[key] = make_multi_source_bfs(
+                None, width, problem=self._sym_problem(),
+                use_kernel=self._use_kernel)
+        return self._analytics_cache[key]
+
+    def _bc_problem(self) -> BlestProblem:
+        """The problem betweenness' weighted sweeps run on: the session's
+        own when single-device; a replicated single-device build from the
+        prepared host BVSS when sharded (the weighted tile products have
+        no shard_map'd variant yet — DESIGN §2.6)."""
+        if self.mesh is None:
+            return self._problem
+        if "bc_problem" not in self._analytics_cache:
+            self._analytics_cache["bc_problem"] = BlestProblem.build(
+                self.prepared.bvss)
+        return self._analytics_cache["bc_problem"]
+
+    def _bc_fn(self, width: int):
+        """Cached Brandes forward+backward fn (one compile per width)."""
+        key = ("bc_fn", width)
+        if key not in self._analytics_cache:
+            from repro.analytics import make_betweenness
+            self._analytics_cache[key] = make_betweenness(
+                self._bc_problem(), width, use_kernel=self._use_kernel)
+        return self._analytics_cache[key]
+
+    def components(self) -> np.ndarray:
+        """Connected-component labels, one per vertex in caller ids,
+        normalised to 0..k-1 in order of each component's smallest caller
+        vertex.  Phase 0 floods one component through the fused
+        single-source engine; the wave slot pool then flood-fills the
+        rest, converged slots re-seeded from still-untouched vertices —
+        the serving refill loop aimed at the graph itself."""
+        labels = connected_components(engine=self._sym_ms(),
+                                      first_flood=self._sym_sss())
+        return normalize_labels(labels[self.perm])
+
+    def eccentricity(self, sources: Sequence[int]) -> np.ndarray:
+        """Eccentricity of each queried vertex (caller ids in, one value
+        per source out), batched through the fused multi-source engine on
+        the symmetrised problem."""
+        srcs = np.asarray([int(s) for s in sources], dtype=np.int64)
+        if len(srcs) == 0:
+            return np.zeros(0, dtype=np.int64)
+        internal = self.perm[srcs]
+        width = min(self.max_batch, len(srcs))
+        return eccentricities(internal, problem=self._sym_problem(),
+                              batch=width, use_kernel=self._use_kernel,
+                              levels_fn=self._sym_wave(width))
+
+    def extremes(self, *, max_evals: int | None = None) -> ExtremesReport:
+        """iFUB diameter / radius bounds of the largest component
+        (center/periphery reported in caller ids)."""
+        labels = self.components()
+        comp = int(np.bincount(labels).argmax())
+        members = np.flatnonzero(labels == comp)
+        deg = (self.prepared.graph.out_degree
+               + self.prepared.graph.in_degree)[self.perm[members]]
+        start = int(members[int(np.argmax(deg))])
+        rep = ifub_extremes(problem=self._sym_problem(),
+                            start=int(self.perm[start]),
+                            batch=self.max_batch,
+                            use_kernel=self._use_kernel,
+                            max_evals=max_evals,
+                            levels_fn=self._sym_wave(self.max_batch))
+        inv = self.inv
+        return ExtremesReport(
+            diameter_lb=rep.diameter_lb, diameter_ub=rep.diameter_ub,
+            radius_ub=rep.radius_ub, center=int(inv[rep.center]),
+            periphery=int(inv[rep.periphery]),
+            n_ecc_evals=rep.n_ecc_evals)
+
+    def betweenness(self, sources: Sequence[int]) -> np.ndarray:
+        """Partial Brandes betweenness Σ_{s∈sources} δ_s(v) on the
+        directed graph (unnormalised, endpoints excluded): one score per
+        vertex, caller ids throughout.  Forward phase = the fused wave
+        BFS with the σ path-count channel; backward = the reverse sweep
+        over the recorded per-level tile queues."""
+        srcs = np.asarray([int(s) for s in sources], dtype=np.int64)
+        if len(srcs) == 0:
+            return np.zeros(self.n, dtype=np.float64)
+        internal = self.perm[srcs].astype(np.int32)
+        width = min(self.max_batch, len(srcs))
+        bc = betweenness_centrality(None, internal,
+                                    problem=self._bc_problem(),
+                                    use_kernel=self._use_kernel,
+                                    batch=width,
+                                    bc_fn=self._bc_fn(width))
+        return bc[self.perm]
+
+    def betweenness_sample(self, k_sources: int, seed: int = 0
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Sample ``k_sources`` distinct pivots (caller ids) and return
+        ``(sources, partial betweenness per vertex)`` — the standard
+        sampled-source Brandes estimator."""
+        rng = np.random.default_rng(seed)
+        k = min(int(k_sources), self.n)
+        srcs = rng.choice(self.n, size=k, replace=False)
+        return srcs, self.betweenness(srcs)

@@ -1,0 +1,347 @@
+"""Analytics suite: wave-engine clients vs independent oracles
+(DESIGN §2.6) — weighted tiles, σ channel, components / eccentricity /
+betweenness, edge cases, caller-id contract, sharded parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (betweenness_centrality, connected_components,
+                             eccentricities, ifub_extremes)
+from repro.core import INF, reference_bfs
+from repro.core.bfs import BlestProblem
+from repro.core.bvss import build_bvss
+from repro.core.level_pipeline import LevelPipeline, run_levels
+from repro.core.multi_source import drive_wave, make_ms_engine
+from repro.graphs import from_edges, generators as gen
+from repro.kernels import bvss_spmm_t, bvss_spmm_w
+from repro.kernels.ref import (betweenness_ref, bvss_spmm_t_ref,
+                               bvss_spmm_w_ref, connected_components_ref,
+                               eccentricity_ref, normalize_labels)
+from repro.serve import GraphSession
+
+
+def small_suite():
+    return {
+        "rmat": gen.rmat(6, 8, seed=1),
+        "grid": gen.grid2d(8, 8, shuffle=True, seed=3),
+        "star": gen.star(48),
+        "clustered": gen.clustered(3, 16, seed=4),
+        # many components + isolated vertices
+        "disc": from_edges(40, np.array([0, 1, 2, 10, 11, 20, 21]),
+                           np.array([1, 2, 0, 11, 12, 21, 22])),
+    }
+
+
+def empty_graph(n):
+    z = np.array([], dtype=np.int64)
+    return from_edges(n, z, z)
+
+
+# ---------------------------------------------------------------------------
+# weighted BVSS tile products
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sigma", [4, 8])
+def test_weighted_tiles_match_refs(sigma):
+    rng = np.random.default_rng(0)
+    B, S = 9, 5
+    spw = 32 // sigma
+    masks = jnp.asarray(rng.integers(0, 2**32, (B, 32), dtype=np.uint32))
+    xv = jnp.asarray(rng.random((B, sigma, S), dtype=np.float32))
+    hv = jnp.asarray(rng.random((B, spw, 32, S), dtype=np.float32))
+    np.testing.assert_allclose(
+        np.asarray(bvss_spmm_w(masks, xv, sigma=sigma)),
+        np.asarray(bvss_spmm_w_ref(masks, xv, sigma)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(bvss_spmm_t(masks, hv, sigma=sigma)),
+        np.asarray(bvss_spmm_t_ref(masks, hv, sigma)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# σ path-count channel (Brandes forward)
+# ---------------------------------------------------------------------------
+def _numpy_sigma(g, s):
+    dist = np.full(g.n, -1, np.int64)
+    sig = np.zeros(g.n)
+    dist[s] = 0
+    sig[s] = 1
+    order = [int(s)]
+    head = 0
+    while head < len(order):
+        v = order[head]
+        head += 1
+        for w in g.indices[g.indptr[v]:g.indptr[v + 1]]:
+            w = int(w)
+            if dist[w] < 0:
+                dist[w] = dist[v] + 1
+                order.append(w)
+            if dist[w] == dist[v] + 1:
+                sig[w] += sig[v]
+    return dist, sig
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sigma_channel_matches_per_source_counts(use_kernel):
+    g = gen.rmat(6, 8, seed=2)
+    problem = BlestProblem.build(build_bvss(g))
+    srcs = np.array([3, 17, 42, 61], dtype=np.int32)
+    eng = make_ms_engine(problem, len(srcs), use_kernel=use_kernel,
+                         track_sigma=True)
+    pipe = LevelPipeline(step=lambda s, lvl: eng.step(s),
+                         finalize=lambda s, lvl: eng.finalize(s),
+                         active=lambda s: s.cont)
+    st, _ = run_levels(pipe, eng.init(jnp.asarray(srcs)),
+                       max_levels=g.n + 1)
+    levels = np.asarray(st.levels[:g.n])
+    paths = np.asarray(st.paths)
+    for c, s in enumerate(srcs):
+        dist, sig = _numpy_sigma(g, s)
+        assert (levels[:, c] == np.where(dist >= 0, dist, INF)).all()
+        reached = dist >= 0
+        np.testing.assert_allclose(paths[reached, c], sig[reached],
+                                   rtol=1e-5)
+
+
+def test_sigma_channel_survives_slot_refill():
+    g = gen.rmat(6, 8, seed=3)
+    problem = BlestProblem.build(build_bvss(g))
+    eng = make_ms_engine(problem, 2, track_sigma=True)
+    st = eng.init(jnp.asarray(np.array([5, 9], dtype=np.int32)))
+    # run to convergence, then refill slot 0 and re-run
+    for _ in range(g.n):
+        st, live = eng.level_step(st)
+        if not np.asarray(live).any():
+            break
+    st = eng.insert_batch(st, jnp.asarray(np.array([23, 0], np.int32)),
+                          jnp.asarray(np.array([True, False])))
+    for _ in range(g.n):
+        st, live = eng.level_step(st)
+        if not np.asarray(live).any():
+            break
+    dist, sig = _numpy_sigma(g, 23)
+    reached = dist >= 0
+    np.testing.assert_allclose(np.asarray(st.paths)[reached, 0],
+                               sig[reached], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# connected components
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(small_suite()))
+def test_components_match_scipy(name):
+    g = small_suite()[name]
+    labels = connected_components(g, max_batch=4)
+    assert (labels == connected_components_ref(g)).all()
+
+
+def test_components_edge_cases():
+    # single-vertex graph
+    assert (connected_components(empty_graph(1)) == [0]).all()
+    # all-isolated vertices: n singleton components
+    labels = connected_components(empty_graph(17), max_batch=4)
+    assert (labels == np.arange(17)).all()
+    # empty graph
+    assert len(connected_components(empty_graph(0))) == 0
+
+
+def test_components_label_normalisation():
+    g = small_suite()["disc"]
+    labels = connected_components(g, max_batch=4)
+    # normalised: first occurrence of each label is in increasing order
+    firsts = [int(np.flatnonzero(labels == c)[0])
+              for c in range(labels.max() + 1)]
+    assert firsts == sorted(firsts)
+    assert (labels == normalize_labels(labels)).all()
+
+
+# ---------------------------------------------------------------------------
+# eccentricity / iFUB
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["rmat", "grid", "star"])
+def test_eccentricities_match_scipy(name):
+    g = small_suite()[name].symmetrized
+    srcs = np.random.default_rng(1).integers(0, g.n, 6)
+    ecc = eccentricities(srcs, g=g, batch=4)
+    assert (ecc == eccentricity_ref(g, srcs)).all()
+
+
+@pytest.mark.parametrize("name", ["rmat", "grid", "star", "clustered"])
+def test_ifub_certifies_exact_diameter(name):
+    g = small_suite()[name]
+    gs = g.symmetrized
+    rep = ifub_extremes(g, batch=4)
+    assert rep.exact
+    ecc_all = eccentricity_ref(gs, np.arange(g.n))
+    # ifub starts from a max-degree vertex: its component's diameter
+    start = int(np.argmax(gs.out_degree + gs.in_degree))
+    comp = connected_components_ref(g)
+    members = comp == comp[start]
+    assert rep.diameter == ecc_all[members].max()
+    assert rep.radius_ub >= ecc_all[members].min()
+    assert rep.n_ecc_evals <= g.n + 2
+
+
+def test_ifub_certification_is_sound_from_unlucky_start():
+    """Regression: the certification threshold at the top of fringe i is
+    lb > 2*i (fringe i is not yet evaluated there) — the old 2*(i-1)
+    check certified diameter 3 as exact on this graph (true diameter 4,
+    e.g. d(2, 6)) when started from vertex 5."""
+    e = [(1, 0), (2, 0), (3, 1), (4, 3), (5, 4), (6, 3), (7, 4), (4, 0)]
+    src = np.array([a for a, b in e] + [b for a, b in e])
+    dst = np.array([b for a, b in e] + [a for a, b in e])
+    g = from_edges(8, src, dst)
+    true_d = int(eccentricity_ref(g, np.arange(8)).max())
+    assert true_d == 4
+    for start in range(8):
+        rep = ifub_extremes(g, start=start, batch=4)
+        assert rep.diameter_lb <= true_d <= rep.diameter_ub, (start, rep)
+        if rep.exact:
+            assert rep.diameter == true_d, (start, rep)
+
+
+def test_ifub_budget_returns_bounds():
+    g = small_suite()["grid"]
+    rep = ifub_extremes(g, batch=4, max_evals=4)
+    assert rep.diameter_lb <= rep.diameter_ub
+    ecc_all = eccentricity_ref(g.symmetrized, np.arange(g.n))
+    assert rep.diameter_lb <= ecc_all.max() <= rep.diameter_ub
+
+
+# ---------------------------------------------------------------------------
+# betweenness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(small_suite()))
+def test_betweenness_matches_brandes_oracle(name):
+    g = small_suite()[name]
+    srcs = np.random.default_rng(2).integers(0, g.n, 5)
+    bc = betweenness_centrality(g, srcs, batch=4)
+    ref = betweenness_ref(g, srcs)
+    np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_betweenness_ref_matches_networkx():
+    nx = pytest.importorskip("networkx")
+    g = gen.rmat(6, 6, seed=5)
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    for u in range(g.n):
+        for v in g.indices[g.indptr[u]:g.indptr[u + 1]]:
+            G.add_edge(u, int(v))
+    ref = betweenness_ref(g, np.arange(g.n))
+    nx_bc = np.array([b for _, b in sorted(
+        nx.betweenness_centrality(G, normalized=False).items())])
+    np.testing.assert_allclose(ref, nx_bc, rtol=1e-9, atol=1e-9)
+
+
+def test_betweenness_edge_cases():
+    # single vertex / no edges: all zeros
+    assert (betweenness_centrality(empty_graph(1), [0]) == 0).all()
+    bc = betweenness_centrality(empty_graph(9), [0, 4, 8], batch=2)
+    assert (bc == 0).all()
+    # empty source set
+    g = small_suite()["rmat"]
+    assert (betweenness_centrality(g, []) == 0).all()
+    # duplicated sources count once each (two copies = 2x one copy)
+    one = betweenness_centrality(g, [7], batch=2)
+    two = betweenness_centrality(g, [7, 7], batch=2)
+    np.testing.assert_allclose(two, 2 * one, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# GraphSession query kinds: caller-id contract
+# ---------------------------------------------------------------------------
+def test_session_analytics_caller_ids():
+    g = gen.rmat(6, 8, seed=1)     # ordering ON: internal ids != caller ids
+    sess = GraphSession(g, max_batch=4)
+    assert (sess.components() == connected_components_ref(g)).all()
+    srcs = np.random.default_rng(3).integers(0, g.n, 5)
+    assert (sess.eccentricity(srcs)
+            == eccentricity_ref(g.symmetrized, srcs)).all()
+    np.testing.assert_allclose(sess.betweenness(srcs),
+                               betweenness_ref(g, srcs),
+                               rtol=1e-4, atol=1e-4)
+    rep = sess.extremes()
+    assert rep.exact
+    comp = connected_components_ref(g)
+    big = np.bincount(comp).argmax()
+    ecc_all = eccentricity_ref(g.symmetrized, np.arange(g.n))
+    assert rep.diameter == ecc_all[comp == big].max()
+    # center/periphery are caller ids inside the largest component
+    assert comp[rep.center] == big and comp[rep.periphery] == big
+
+
+def test_session_betweenness_sample_aligned():
+    g = small_suite()["clustered"]
+    sess = GraphSession(g, max_batch=4)
+    srcs, bc = sess.betweenness_sample(4, seed=11)
+    assert len(set(srcs.tolist())) == 4
+    np.testing.assert_allclose(bc, betweenness_ref(g, srcs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_drive_wave_generic_hook_serves_levels():
+    g = small_suite()["rmat"]
+    problem = BlestProblem.build(build_bvss(g))
+    eng = make_ms_engine(problem, 3)
+    pending = [1, 5, 9, 33, 50]
+    owner, results = {}, {}
+
+    def next_source(slot):
+        if not pending:
+            return None
+        s = pending.pop()
+        owner[slot] = s
+        return s
+
+    def on_converged(slot, lv):
+        results[owner[slot]] = lv
+
+    drive_wave(eng, next_source, on_converged, max_steps=10 * g.n)
+    assert len(results) == 5
+    for s, lv in results.items():
+        assert (lv == reference_bfs(g, s)).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded parity (runs whenever the process has >= 2 devices, e.g. the CI
+# multidevice job)
+# ---------------------------------------------------------------------------
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 2, reason="needs >= 2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+
+
+@needs_mesh
+def test_sharded_components_parity():
+    from repro.distributed.bfs_dist import bfs_mesh
+    g = gen.rmat(6, 8, seed=1)
+    sess1 = GraphSession(g, max_batch=4)
+    sessD = GraphSession(g, max_batch=4, mesh=bfs_mesh(2))
+    labels1, labelsD = sess1.components(), sessD.components()
+    assert (labels1 == labelsD).all()
+    assert (labelsD == connected_components_ref(g)).all()
+
+
+@needs_mesh
+def test_sharded_betweenness_parity():
+    from repro.distributed.bfs_dist import bfs_mesh
+    g = gen.rmat(6, 8, seed=1)
+    sess1 = GraphSession(g, max_batch=4)
+    sessD = GraphSession(g, max_batch=4, mesh=bfs_mesh(2))
+    srcs = np.random.default_rng(4).integers(0, g.n, 4)
+    np.testing.assert_allclose(sessD.betweenness(srcs),
+                               sess1.betweenness(srcs),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(sessD.betweenness(srcs),
+                               betweenness_ref(g, srcs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@needs_mesh
+def test_sharded_eccentricity_parity():
+    from repro.distributed.bfs_dist import bfs_mesh
+    g = gen.grid2d(8, 8, shuffle=True, seed=3)
+    sessD = GraphSession(g, max_batch=4, mesh=bfs_mesh(2))
+    srcs = np.random.default_rng(5).integers(0, g.n, 5)
+    assert (sessD.eccentricity(srcs)
+            == eccentricity_ref(g.symmetrized, srcs)).all()

@@ -62,3 +62,79 @@ def test_auto_order_policy():
     _, kind_road = auto_order(gen.grid2d(20, 20), w=256)
     assert kind_soc == "jaccard_windows"
     assert kind_road == "rcm"
+
+
+# ---------------------------------------------------------------------------
+# direct classifier coverage (the "One Ordering Decision" policy exercised
+# on SYNTHETIC degree structure, outside the generator/end-to-end path)
+# ---------------------------------------------------------------------------
+def synthetic_power_law(n=600, alpha=2.5, seed=7):
+    """Configuration-style graph from an explicit power-law OUT-degree
+    sequence: deterministic, generator-independent heavy tail (the
+    uniform in-degrees dilute but don't break the log-log fit)."""
+    rng = np.random.default_rng(seed)
+    # inverse-CDF sample of a discrete power law, capped at n/4
+    u = rng.random(n)
+    deg = np.minimum((u ** (-1.0 / (alpha - 1.0))).astype(np.int64),
+                     n // 4)
+    src = np.repeat(np.arange(n), deg)
+    dst = rng.integers(0, n, len(src))
+    return from_edges(n, src, dst)
+
+
+def synthetic_hubs(n=400, k=8, deg_bg=3, seed=11):
+    """A few all-reaching hubs over a sparse background: the mass-
+    concentration (heavy-tail) arm of the classifier, with a degree
+    histogram too degenerate for the power-law fit."""
+    rng = np.random.default_rng(seed)
+    hub_src = np.repeat(np.arange(k), n - k)
+    hub_dst = np.tile(np.arange(k, n), k)
+    bg_src = np.repeat(np.arange(k, n), deg_bg)
+    bg_dst = rng.integers(0, n, len(bg_src))
+    return from_edges(n, np.concatenate([hub_src, bg_src]),
+                      np.concatenate([hub_dst, bg_dst]))
+
+
+def test_social_like_report_on_synthetic_power_law():
+    rep = social_like_report(synthetic_power_law())
+    assert rep.is_social
+    # the explicit degree sequence must light up the power-law detector:
+    # a straight log-log fit with the paper's slope range
+    assert rep.power_law
+    assert -4.0 <= rep.ll_slope <= -1.2
+    assert rep.ll_r2 >= 0.7
+
+
+def test_social_like_report_on_synthetic_hubs():
+    rep = social_like_report(synthetic_hubs())
+    assert rep.is_social
+    # this triggers the OTHER arm: top-percentile mass, not the fit
+    assert rep.heavy_tail
+    assert rep.top1_share > 0.05 and rep.top10_share > 0.40
+    assert not rep.power_law
+
+
+def test_social_like_report_on_grid_fields():
+    rep = social_like_report(gen.grid2d(24, 24))
+    assert not rep.is_social
+    # uniform degrees: no mass concentration in the top percentiles…
+    assert rep.top1_share < 0.05
+    assert rep.top10_share < 0.40
+    # …and a degenerate degree histogram can't pass the straight-line fit
+    assert not rep.power_law
+
+
+def test_is_social_like_direct_split():
+    assert is_social_like(synthetic_power_law())
+    assert is_social_like(synthetic_hubs())
+    assert not is_social_like(gen.grid2d(16, 16))
+    assert not is_social_like(gen.path(200))
+
+
+def test_auto_order_on_synthetic_power_law_vs_grid():
+    perm_pl, kind_pl = auto_order(synthetic_power_law(n=300), w=64)
+    perm_gr, kind_gr = auto_order(gen.grid2d(12, 12), w=64)
+    assert kind_pl == "jaccard_windows"
+    assert kind_gr == "rcm"
+    assert is_permutation(perm_pl, 300)
+    assert is_permutation(perm_gr, 144)

@@ -1,0 +1,84 @@
+"""The CI perf-regression gate (benchmarks/perf_gate.py): floors trip on
+regression, pass at par, and the checked-in floors file is well-formed."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.perf_gate import DEFAULT_FLOORS, check, resolve  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def artifact(wave=2.0, comp=1.2):
+    return {
+        "fused": {"summary": {"geomean_speedup_blest": 1.5}},
+        "service": {"summary": {"geomean_wave_speedup": wave}},
+        "analytics": {"summary": {"geomean_components_speedup": comp}},
+    }
+
+
+def test_resolve_dotted_paths():
+    a = artifact()
+    assert resolve(a, "service.summary.geomean_wave_speedup") == 2.0
+    assert resolve(a, "service.summary.nope") is None
+    assert resolve(a, "nope.summary") is None
+
+
+def test_gate_passes_at_or_above_floor():
+    floors = {"service.summary.geomean_wave_speedup": 2.0,
+              "analytics.summary.geomean_components_speedup": 1.0}
+    _, violations = check(artifact(), floors)
+    assert violations == []
+
+
+def test_gate_fails_below_floor_and_on_missing_metric():
+    floors = {"service.summary.geomean_wave_speedup": 2.5,
+              "dist.summary.geomean_wave_speedup": 1.0}
+    _, violations = check(artifact(), floors)
+    assert len(violations) == 2
+    assert any("MISSING" in v for v in violations)
+
+
+def test_gate_fails_when_floors_artificially_raised():
+    """The acceptance demonstration: raising the floors must trip the gate
+    on an artifact that passes the real ones."""
+    floors = {"service.summary.geomean_wave_speedup": 1.5}
+    _, ok = check(artifact(), floors)
+    assert ok == []
+    _, raised = check(artifact(), {k: v * 100 for k, v in floors.items()})
+    assert raised != []
+
+
+def test_checked_in_floors_are_wellformed():
+    with open(DEFAULT_FLOORS) as f:
+        spec = json.load(f)
+    assert 0 < spec["max_regression"] < 1
+    assert spec["floors"], "floors file must gate at least one metric"
+    for dotted, floor in spec["floors"].items():
+        suite = dotted.split(".")[0]
+        assert suite in ("fused", "service", "dist", "analytics"), dotted
+        assert ".summary." in dotted, dotted
+        assert floor > 0, dotted
+
+
+@pytest.mark.parametrize("mode", ["pass", "fail", "prove"])
+def test_gate_cli_exit_codes(tmp_path, mode):
+    art = tmp_path / "bench.json"
+    art.write_text(json.dumps(artifact()))
+    floors = {"max_regression": 0.25,
+              "floors": {"service.summary.geomean_wave_speedup":
+                         2.0 if mode != "fail" else 99.0}}
+    fl = tmp_path / "floors.json"
+    fl.write_text(json.dumps(floors))
+    cmd = [sys.executable, "-m", "benchmarks.perf_gate", str(art),
+           "--floors", str(fl)]
+    if mode == "prove":
+        cmd.append("--prove-gate")
+    res = subprocess.run(cmd, cwd=REPO, capture_output=True, text=True)
+    expected = 1 if mode == "fail" else 0
+    assert res.returncode == expected, res.stdout + res.stderr
