@@ -1,5 +1,5 @@
-"""PR-4 analytics benchmark: batched-wave analytics vs sequential
-per-source BFS baselines, all oracle-verified.
+"""Analytics benchmark (PR 4, closeness since PR 5): batched-wave
+analytics vs sequential per-source BFS baselines, all oracle-verified.
 
 Per graph of the suite:
 
@@ -15,30 +15,25 @@ Per graph of the suite:
   forward + reverse tile sweep, verified against the NumPy Brandes
   oracle within fp tolerance (the speed story here is the new capability,
   not a ratio — the baseline oracle is host code).
+* ``closeness`` — N closeness queries via (a) fixed wave cohorts through
+  the session's cached multi-source engine and (b) N sequential fused
+  single-source runs with the same reduction.  Verified against the
+  SciPy closeness oracle.
 
-``run(..., json_path=...)`` feeds the ``analytics`` suite of
-``BENCH_pr4.json`` via ``benchmarks/run.py --json``.
+``run(..., json_path=...)`` feeds the ``analytics`` suite of the
+``BENCH_pr*.json`` artifact via ``benchmarks/run.py --json``.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import bench_envelope, fmt_row, geomean, graph_suite
+from benchmarks.common import (bench_envelope, fmt_row, geomean,
+                               graph_suite, median_sec)
+from repro.analytics.closeness import closeness_from_levels
 from repro.core import INF
-from repro.kernels.ref import (betweenness_ref, connected_components_ref,
-                               eccentricity_ref, normalize_labels)
-
-
-def _median_sec(f, reps: int = 3) -> float:
-    """Median seconds per call (post-warm), the suite's timing idiom."""
-    ts = []
-    for _ in range(reps):
-        t0 = time.time()
-        f()
-        ts.append(time.time() - t0)
-    return float(np.median(ts))
+from repro.kernels.ref import (betweenness_ref, closeness_ref,
+                               connected_components_ref, eccentricity_ref,
+                               normalize_labels)
 
 
 def _sequential_components(problem, levels_fn, perm) -> np.ndarray:
@@ -86,8 +81,8 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
         labels = sess.components()
         labels_seq = _sequential_components(sess._sym_problem(), seq_levels,
                                             sess.perm)
-        t_wave = _median_sec(sess.components)
-        t_seq = _median_sec(lambda: _sequential_components(
+        t_wave = median_sec(sess.components)
+        t_seq = median_sec(lambda: _sequential_components(
             sess._sym_problem(), seq_levels, sess.perm))
         ref = connected_components_ref(g)
         cverified = bool((labels == ref).all() and (labels_seq == ref).all())
@@ -110,8 +105,8 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
                              lv, 0).max()) for s in internal])
 
         eccs_seq = seq_ecc()
-        t_wave_e = _median_sec(lambda: sess.eccentricity(srcs))
-        t_seq_e = _median_sec(seq_ecc)
+        t_wave_e = median_sec(lambda: sess.eccentricity(srcs))
+        t_seq_e = median_sec(seq_ecc)
         ref_e = eccentricity_ref(g.symmetrized, srcs)
         everified = bool((eccs == ref_e).all() and (eccs_seq == ref_e).all())
         assert everified, f"{gname}: eccentricity diverges from scipy"
@@ -125,7 +120,7 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
         pivots = rng.choice(g.n, size=min(n_pivots, g.n), replace=False)
         sess.betweenness(pivots)               # warm at the timed width
         bc = sess.betweenness(pivots)
-        t_bc = _median_sec(lambda: sess.betweenness(pivots))
+        t_bc = median_sec(lambda: sess.betweenness(pivots))
         ref_bc = betweenness_ref(g, pivots)
         scale_ref = max(float(np.abs(ref_bc).max()), 1.0)
         max_rel_err = float(np.abs(bc - ref_bc).max()) / scale_ref
@@ -136,9 +131,36 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
             "max_rel_err": max_rel_err, "verified": bverified,
         }
 
+        # -- closeness: wave cohorts vs N sequential fused runs -------------
+        srcs_c = rng.integers(0, g.n, n_queries)
+        sess.closeness(srcs_c)                 # warm at the timed width
+        cc = sess.closeness(srcs_c)
+
+        def seq_close() -> np.ndarray:
+            return np.concatenate([
+                closeness_from_levels(
+                    np.asarray(sess.levels(int(s)))[:, None])
+                for s in srcs_c])
+
+        cc_seq = seq_close()
+        t_wave_c = median_sec(lambda: sess.closeness(srcs_c))
+        t_seq_c = median_sec(seq_close)
+        ref_c = closeness_ref(g, srcs_c)
+        closeverified = bool(
+            np.allclose(cc, ref_c, rtol=1e-9)
+            and np.allclose(cc_seq, ref_c, rtol=1e-9))
+        assert closeverified, f"{gname}: closeness diverges from scipy"
+        close = {
+            "n_queries": int(n_queries),
+            "sequential_sec": t_seq_c, "wave_sec": t_wave_c,
+            "speedup": t_seq_c / max(t_wave_c, 1e-12),
+            "verified": closeverified,
+        }
+
         graphs_out[gname] = {
             "n": int(g.n), "m": int(g.m), "ordering": sess.ordering,
             "components": comp, "eccentricity": ecc, "betweenness": bet,
+            "closeness": close,
         }
         if verbose:
             print(fmt_row(f"bench_analytics/{gname}/components",
@@ -147,25 +169,32 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
                           t_wave_e * 1e6, f"speedup={ecc['speedup']:.2f}"))
             print(fmt_row(f"bench_analytics/{gname}/betweenness",
                           t_bc * 1e6, f"err={max_rel_err:.1e}"))
+            print(fmt_row(f"bench_analytics/{gname}/closeness",
+                          t_wave_c * 1e6, f"speedup={close['speedup']:.2f}"))
 
     summary = {
         "geomean_components_speedup": geomean(
             [go["components"]["speedup"] for go in graphs_out.values()]),
         "geomean_ecc_speedup": geomean(
             [go["eccentricity"]["speedup"] for go in graphs_out.values()]),
+        "geomean_closeness_speedup": geomean(
+            [go["closeness"]["speedup"] for go in graphs_out.values()]),
         "all_verified": all(
             go["components"]["verified"] and go["eccentricity"]["verified"]
             and go["betweenness"]["verified"]
+            and go["closeness"]["verified"]
             for go in graphs_out.values()),
     }
     out = {
-        **bench_envelope("pr4_analytics", scale),
+        **bench_envelope("pr5_analytics", scale),
         "note": ("components/eccentricity = batched wave (stacked bit-SpMM "
                  "columns, slot re-seeding) vs sequential fused "
                  "single-source BFS over the same symmetrised BVSS; "
                  "betweenness = Brandes forward σ wave channel + reverse "
                  "sweep over the recorded per-level tile queues, verified "
-                 "against the NumPy Brandes oracle"),
+                 "against the NumPy Brandes oracle; closeness = wave-cohort "
+                 "level-channel reduction vs sequential fused runs, "
+                 "verified against the SciPy closeness oracle"),
         "graphs": graphs_out,
         "summary": summary,
     }

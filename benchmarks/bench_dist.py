@@ -10,6 +10,10 @@ Per graph of the (small) suite:
   sequentially via the fused sharded single-source engine and (b) as one
   batched wave over the sharded slot pool (mid-flight refills, lock-step
   levels).  Wave answers verified against the oracle per query.
+* ``betweenness`` — sampled-source Brandes through the MESH-NATIVE
+  weighted sweeps (forward σ channel + psum-scattered backward, zero
+  replicated problems) vs the single-device session, verified against
+  both (<= 1e-6 rel err sharded-vs-single, NumPy Brandes oracle).
 
 On this container the "devices" are simulated host-platform CPU devices,
 so wall-clock ratios measure dispatch + collective overhead, not ICI
@@ -34,7 +38,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_envelope, fmt_row, geomean
+from benchmarks.common import (bench_envelope, fmt_row, geomean,
+                               median_sec)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -111,6 +116,30 @@ def _run_inline(scale: int, devices: int, n_queries: int,
             "speedup": t_seq / max(t_wave, 1e-12), "verified": sverified,
         }
 
+        # -- betweenness: mesh-native weighted sweeps vs single-device -----
+        from repro.kernels.ref import betweenness_ref
+        sess1 = GraphSession(g, max_batch=min(4, n_queries), w=512)
+        pivots = rng.choice(g.n, size=min(3, g.n), replace=False)
+        sess1.betweenness(pivots)                      # warm both widths
+        sess.betweenness(pivots)
+        bc1 = sess1.betweenness(pivots)
+        bcD = sess.betweenness(pivots)
+        scale_bc = max(float(np.abs(bc1).max()), 1.0)
+        rel_err = float(np.abs(bcD - bc1).max()) / scale_bc
+        ref_bc = betweenness_ref(g, pivots)
+        bverified = bool(
+            rel_err <= 1e-6
+            and float(np.abs(bcD - ref_bc).max()) / scale_bc < 1e-4)
+        assert bverified, f"{gname}: sharded betweenness err {rel_err}"
+        t_bc1 = median_sec(lambda: sess1.betweenness(pivots))
+        t_bcD = median_sec(lambda: sess.betweenness(pivots))
+        bet = {
+            "n_pivots": int(len(pivots)),
+            "single_sec": t_bc1, "sharded_sec": t_bcD,
+            "single_vs_sharded": t_bc1 / max(t_bcD, 1e-12),
+            "max_rel_err_vs_single": rel_err, "verified": bverified,
+        }
+
         graphs_out[gname] = {
             "n": int(g.n), "m": int(g.m),
             "ordering": prepD.ordering, "engine": prepD.engine_name,
@@ -118,12 +147,15 @@ def _run_inline(scale: int, devices: int, n_queries: int,
             "vss_per_shard": int(prepD.problem.num_vss),
             "frontier_bytes_per_level": int(prepD.problem.n_fwords * 4),
             "engine_dist": engine, "serve_dist": serve,
+            "betweenness_dist": bet,
         }
         if verbose:
             print(fmt_row(f"bench_dist/{gname}/engine", t_D * 1e6,
                           f"vs_single={engine['ratio_sharded_vs_single']:.2f}"))
             print(fmt_row(f"bench_dist/{gname}/serve", t_wave * 1e6,
                           f"speedup={serve['speedup']:.2f}"))
+            print(fmt_row(f"bench_dist/{gname}/betweenness", t_bcD * 1e6,
+                          f"single_vs_sharded={bet['single_vs_sharded']:.2f}"))
 
     summary = {
         "geomean_ratio_sharded_vs_single": geomean(
@@ -131,20 +163,26 @@ def _run_inline(scale: int, devices: int, n_queries: int,
              for go in graphs_out.values()]),
         "geomean_wave_speedup": geomean(
             [go["serve_dist"]["speedup"] for go in graphs_out.values()]),
+        "geomean_bc_single_vs_sharded": geomean(
+            [go["betweenness_dist"]["single_vs_sharded"]
+             for go in graphs_out.values()]),
         "all_verified": all(
             go["engine_dist"]["verified"] and go["serve_dist"]["verified"]
+            and go["betweenness_dist"]["verified"]
             for go in graphs_out.values()),
     }
     out = {
-        **bench_envelope("pr3_dist", scale),
+        **bench_envelope("pr5_dist", scale),
         "devices": devices,
         "note": ("engine = fused single-source BFS, prepared single-device "
                  "vs mesh-native (row-sharded BVSS, shard_map'd "
                  "LevelPipeline, frontier all-gather + psum convergence); "
                  "serve = sharded GraphSession batched waves vs sequential "
-                 "queries through the sharded engine; devices are simulated "
-                 "host-platform CPU devices, so ratios measure dispatch + "
-                 "collective overhead, not ICI"),
+                 "queries through the sharded engine; betweenness = "
+                 "mesh-native Brandes (sharded σ forward + psum-scattered "
+                 "backward, zero replicated problems) vs the single-device "
+                 "session; devices are simulated host-platform CPU devices, "
+                 "so ratios measure dispatch + collective overhead, not ICI"),
         "graphs": graphs_out,
         "summary": summary,
     }

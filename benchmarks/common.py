@@ -69,6 +69,17 @@ def modeled_tc_pulls(g: Graph, b: BVSS, src: int, *,
     return total
 
 
+def median_sec(f, reps: int = 3) -> float:
+    """Median seconds per call (post-warm) — the perf suites' timing
+    idiom: single-shot wall clocks flip CPU ratios by 2x."""
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        f()
+        ts.append(time.time() - t0)
+    return float(np.median(ts))
+
+
 def fmt_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 

@@ -8,9 +8,10 @@ the perf-trajectory benches — the PR-1 fused-pipeline bench
 (``benchmarks/bench_fused.py``), the PR-2 GraphSession serving bench
 (``benchmarks/bench_service.py``), the PR-3 mesh-native bench
 (``benchmarks/bench_dist.py``, which simulates its device mesh in a
-subprocess) and the PR-4 analytics bench (``benchmarks/bench_analytics.py``)
-— and writes one machine-readable artifact (default ``BENCH_pr4.json``)
-with ``fused``, ``service``, ``dist`` and ``analytics`` suites;
+subprocess) and the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
+now with the closeness suite and sharded betweenness in ``dist``) — and
+writes one machine-readable artifact (default ``BENCH_pr5.json``) with
+``fused``, ``service``, ``dist`` and ``analytics`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
 quickly.  CI diffs the artifact's geomean speedups against the checked-in
 floors (``benchmarks/perf_gate.py``).  Roofline tables (E7) come from the
@@ -29,7 +30,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr4.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr5.json", default=None,
                     metavar="PATH",
                     help="run the fused-pipeline + service + dist + "
                          "analytics benches and write JSON "
@@ -44,7 +45,7 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr4.json"
+        json_path = "BENCH_pr5.json"
     if json_path is not None:
         from benchmarks import (bench_analytics, bench_dist, bench_fused,
                                 bench_service)
@@ -65,7 +66,7 @@ def main(argv=None) -> None:
                                         n_pivots=3 if args.quick else 4,
                                         json_path=None)
         out = {
-            **bench_envelope("pr4_analytics_suite", bench_scale),
+            **bench_envelope("pr5_sharded_weighted_suite", bench_scale),
             "fused": fused,
             "service": service,
             "dist": dist,

@@ -14,17 +14,24 @@ owns — the batched bit-SpMM wave engine (``core.multi_source``), the fused
 * :mod:`~repro.analytics.betweenness` — Brandes betweenness centrality:
   forward phase is the fused BFS with σ path counts threaded through the
   widened wave state, backward dependency accumulation replays the
-  recorded per-level VSS queues in reverse over the same tiles.
+  recorded per-level VSS queues in reverse over the same tiles (sharded:
+  per-shard histories + a psum-scattered column reduction — no
+  replicated weighted sweeps);
+* :mod:`~repro.analytics.closeness` — exact and sampled closeness
+  centrality as a reduction over wave level channels.
 
 All functions speak the id space of the problem/graph they are handed;
 ``repro.serve.GraphSession`` layers the caller-id contract, symmetrised
 problems and mesh sharding on top.
 """
 from repro.analytics.betweenness import betweenness_centrality, make_betweenness
+from repro.analytics.closeness import (closeness_centrality,
+                                       closeness_from_levels)
 from repro.analytics.components import connected_components
 from repro.analytics.eccentricity import (ExtremesReport, eccentricities,
                                           ifub_extremes)
 
 __all__ = ["betweenness_centrality", "make_betweenness",
+           "closeness_centrality", "closeness_from_levels",
            "connected_components", "eccentricities", "ifub_extremes",
            "ExtremesReport"]

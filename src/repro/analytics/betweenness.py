@@ -32,32 +32,44 @@ benchmark families stay far below float32's 2^24 exact-integer range, and
 the acceptance contract is oracle agreement within fp tolerance
 (``kernels.ref.betweenness_ref``).
 
-Single-device only: the weighted sweeps have no shard_map'd variant yet
-(ROADMAP item) — a sharded ``GraphSession`` serves betweenness through a
-replicated single-device problem built from its prepared host BVSS.
+MESH-NATIVE (DESIGN §2.4/§2.6): on a row-sharded problem both phases run
+under ``shard_map`` with ZERO replicated weighted sweeps.  Forward: the σ
+channel rides the generic sharded float path of ``core.multi_source`` —
+``paths`` and δ live as local ``(rps, S)`` row blocks, each level's
+weighted pull consumes the per-level all-gather of the σ-frontier values,
+and each shard records its OWN per-level queue history (the shard axis of
+``QueueHistory``).  Backward: every shard replays its local history —
+``h`` is built from local levels/σ/δ, contracted by ``bvss_spmm_t_local``
+over the shard's tiles — and the column scatter is reduced across shards
+with one ``lax.psum_scatter`` per level (a shard only sees the dependency
+flowing through its own rows; the reduce-scatter hands each shard
+exactly its row block of the global coefficient).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.analytics.common import pad_cohort
-from repro.core.bfs import BlestProblem, make_queue_history, queue_widths
+from repro.core.bfs import (BlestProblem, QueueHistory, make_queue_history,
+                            queue_widths)
+from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, run_levels_recorded
-from repro.core.multi_source import INF, make_ms_engine
+from repro.core.multi_source import INF, _make_ms_locals, make_ms_engine
 from repro.graphs import Graph
-from repro.kernels import bvss_spmm_t
-from repro.kernels.ref import bvss_spmm_t_ref
+from repro.kernels import bvss_spmm, bvss_spmm_t, bvss_spmm_t_local, bvss_spmm_w
+from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_t_ref, bvss_spmm_w_ref
 
 
 def make_betweenness(problem: BlestProblem, n_sources: int, *,
                      use_kernel: bool = True, buckets: int = 2,
                      max_levels: int | None = None) -> Callable:
     """Build jitted ``f(sources (S,) i32) -> (levels (n,S), sigma (n,S),
-    delta (n,S))`` running both Brandes phases on device.
+    delta (n,S))`` running both Brandes phases on device — under
+    ``shard_map`` when ``problem`` is row-sharded (outputs stay global).
 
     ``delta[:, j]`` is the dependency of every vertex on source ``j``
     (endpoints excluded: the source row is zeroed), so a caller sums
@@ -68,9 +80,10 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
     """
     p = problem
     if p.mesh is not None:
-        raise NotImplementedError(
-            "betweenness runs the weighted sweeps single-device; build the "
-            "problem from the host BVSS (see GraphSession.betweenness)")
+        return _make_betweenness_sharded(p, n_sources,
+                                         use_kernel=use_kernel,
+                                         buckets=buckets,
+                                         max_levels=max_levels)
     S = n_sources
     n, sigma = p.n, p.sigma
     dev = p.dev
@@ -88,26 +101,28 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
                          finalize=lambda s, lvl: fwd_finalize(s),
                          active=lambda s: s.cont)
 
-    def backward(levels: jnp.ndarray, sig: jnp.ndarray, hist) -> jnp.ndarray:
+    def backward(levels: jnp.ndarray, sig: jnp.ndarray,
+                 hist: QueueHistory) -> jnp.ndarray:
         """Reverse per-level sweep over the recorded forward queues."""
         col_ids = (jnp.arange(sigma, dtype=jnp.int32)[None, :]
                    + jnp.zeros((qcap, 1), jnp.int32))
 
-        def body(carry):
+        def body(carry: tuple[jnp.ndarray, jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
             delta, t = carry
             Q = jax.lax.dynamic_index_in_dim(hist.Q, t, keepdims=False)
             safe = jnp.maximum(sig, 1.0)
             h = jnp.where(levels == t, (1.0 + delta) / safe, 0.0)
             h = jnp.concatenate([h, jnp.zeros((1, S), jnp.float32)])
-            hv = h[dev.row_ids[Q]]                    # (qcap, spw, 32, S)
-            part = spmm_t(dev.masks[Q], hv, sigma=sigma)   # (qcap, σ, S)
+            part = bvss_spmm_t_local(dev.masks[Q], dev.row_ids[Q], h,
+                                     sigma=sigma, impl=spmm_t)  # (qcap,σ,S)
             cols = dev.virtual_to_real[Q][:, None] * sigma + col_ids
             coeff = jnp.zeros((n_cols, S), jnp.float32).at[
                 cols.reshape(-1)].add(part.reshape(-1, S))[:n]
             delta = delta + jnp.where(levels == t - 1, sig * coeff, 0.0)
             return delta, t - 1
 
-        def cond(carry):
+        def cond(carry: tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
             return carry[1] >= 1
 
         delta0 = jnp.zeros((n, S), jnp.float32)
@@ -115,7 +130,8 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
         delta, _ = jax.lax.while_loop(cond, body, (delta0, tmax))
         return delta
 
-    def bc(sources: jnp.ndarray) -> tuple[jnp.ndarray, ...]:
+    def bc(sources: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
         sources = jnp.asarray(sources, dtype=jnp.int32)
         st, _, hist = run_levels_recorded(
             pipe, eng.init(sources), max_levels=max_lv, history=hist0,
@@ -129,7 +145,115 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
     return jax.jit(bc)
 
 
-def betweenness_centrality(g: Graph | None, sources, *,
+def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
+                              use_kernel: bool, buckets: int,
+                              max_levels: int | None) -> Callable:
+    """Mesh-native Brandes: forward σ wave AND backward dependency sweep
+    inside ONE ``shard_map`` dispatch over the row partition — no
+    replicated weighted sweeps anywhere.
+
+    Per shard: the forward phase is the shared sharded σ-channel locals
+    (Boolean pull + weighted twin + per-level σ-frontier all-gather)
+    recording the shard's OWN per-level queue; the backward phase replays
+    that local history in reverse, and the per-level column scatter —
+    which only covers dependency flowing through this shard's rows — is
+    reduced across the mesh by ``lax.psum_scatter`` (each shard receives
+    exactly its row block of the global coefficient, so δ stays a local
+    ``(rps, S)`` block throughout).  ``lax.pmax`` aligns the backward
+    level countdown so the collectives stay in lock-step.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    S = n_sources
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    n_pad = p.n_fwords * 32           # D·rps ≥ n_sets·σ: global column pad
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
+    spmm_t = bvss_spmm_t if use_kernel else bvss_spmm_t_ref
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    max_lv = max_levels if max_levels is not None else p.n + 1
+    locals_for = _make_ms_locals(p, S, spmm, widths, qcap, spmm_w=spmm_w,
+                                 track_sigma=True)
+    hist0, record = make_queue_history(qcap, max_lv, p.num_vss)
+
+    def local_fn(masks: jnp.ndarray, row_ids: jnp.ndarray,
+                 v2r: jnp.ndarray, sources: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+        loc = locals_for(dev)
+        pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
+                             finalize=lambda s, lvl: loc.finalize(s),
+                             active=lambda s: s.cont)
+        st, _, hist = run_levels_recorded(
+            pipe, loc.init(sources), max_levels=max_lv, history=hist0,
+            record=record)
+        levels = st.levels[:rps]                     # (rps, S) local rows
+        sig = st.paths                               # (rps, S)
+        d = jax.lax.axis_index(axis)
+        col_ids = (jnp.arange(sigma, dtype=jnp.int32)[None, :]
+                   + jnp.zeros((qcap, 1), jnp.int32))
+
+        def body(carry: tuple[jnp.ndarray, jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+            delta, t = carry
+            Q = jax.lax.dynamic_index_in_dim(hist.Q, t, keepdims=False)
+            safe = jnp.maximum(sig, 1.0)
+            h = jnp.where(levels == t, (1.0 + delta) / safe, 0.0)
+            h = jnp.concatenate([h, jnp.zeros((1, S), jnp.float32)])
+            part = bvss_spmm_t_local(dev.masks[Q], dev.row_ids[Q], h,
+                                     sigma=sigma, impl=spmm_t)
+            cols = dev.virtual_to_real[Q][:, None] * sigma + col_ids
+            coeff = jnp.zeros((n_pad, S), jnp.float32).at[
+                cols.reshape(-1)].add(part.reshape(-1, S))
+            # the one backward collective per level: sum the per-shard
+            # column partials and hand each shard its own row block
+            coeff = jax.lax.psum_scatter(coeff, axis, scatter_dimension=0,
+                                         tiled=True)           # (rps, S)
+            delta = delta + jnp.where(levels == t - 1, sig * coeff, 0.0)
+            return delta, t - 1
+
+        def cond(carry: tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+            return carry[1] >= 1
+
+        # the countdown start must be mesh-uniform: the while_loop body
+        # carries collectives, so every shard walks the same levels
+        tloc = jnp.where(levels == INF, 0, levels).max().astype(jnp.int32)
+        tmax = jax.lax.pmax(tloc, axis)
+        delta0 = jnp.zeros((rps, S), jnp.float32)
+        delta, _ = jax.lax.while_loop(cond, body, (delta0, tmax))
+        # endpoints excluded, on the owning shard only (clamped no-op
+        # writes elsewhere — delta has no dummy row)
+        lsrc = sources - d * rps
+        own = (lsrc >= 0) & (lsrc < rps)
+        row = jnp.clip(lsrc, 0, rps - 1)
+        cols_s = jnp.arange(S)
+        delta = delta.at[row, cols_s].set(
+            jnp.where(own, 0.0, delta[row, cols_s]))
+        return st.levels[None, :rps], sig[None], delta[None]
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(),),
+                   out_specs=(P(axis), P(axis), P(axis)), check_rep=False)
+
+    def bc(sources: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+        sources = jnp.asarray(sources, dtype=jnp.int32)
+        lv, sig, delta = fn(p.dev.masks, p.dev.row_ids,
+                            p.dev.virtual_to_real, sources)
+        return (lv.reshape(-1, S)[:p.n], sig.reshape(-1, S)[:p.n],
+                delta.reshape(-1, S)[:p.n])
+
+    return jax.jit(bc)
+
+
+def betweenness_centrality(g: Graph | None,
+                           sources: Sequence[int] | np.ndarray, *,
                            problem: BlestProblem | None = None,
                            use_kernel: bool = True,
                            batch: int | None = None,
@@ -145,7 +269,7 @@ def betweenness_centrality(g: Graph | None, sources, *,
     processed in fixed cohorts of ``batch`` stacked wave columns (default
     min(8, len(sources))).  ``bc_fn`` is an optional prebuilt
     :func:`make_betweenness` callable of width ``batch`` (sessions pass
-    their cached one).
+    their cached one).  A sharded ``problem`` runs both phases mesh-native.
     """
     if problem is None:
         from repro.core.bvss import build_bvss

@@ -22,7 +22,7 @@ hand it a symmetrised problem (``GraphSession.extremes`` does).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -47,7 +47,8 @@ def _ecc_fn(problem: BlestProblem, batch: int, use_kernel: bool,
     return ecc_batch
 
 
-def eccentricities(sources, *, g: Graph | None = None,
+def eccentricities(sources: Sequence[int] | np.ndarray, *,
+                   g: Graph | None = None,
                    problem: BlestProblem | None = None,
                    batch: int = 8, use_kernel: bool = True,
                    levels_fn: Callable | None = None) -> np.ndarray:

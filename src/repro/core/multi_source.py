@@ -30,13 +30,18 @@ queued BVSS masks, propagating ``paths[u] = Σ paths[pred]`` for the Brandes
 forward phase (``repro.analytics.betweenness``); the Boolean counts still
 gate discovery, so the float channel can never invent a vertex.
 
-Both are MESH-NATIVE (DESIGN §2.4): a row-sharded
-:class:`~repro.core.bfs.BlestProblem` runs the same step/finalize under
-``shard_map`` — each shard pulls/scatters its local ``(rows_per_shard, S)``
-level block, every shard carries a replica of the stacked global frontier
-words (that replica IS each device's pull operand), and one frontier-word
-all-gather per level refreshes it.  The host-visible wave state then has a
-leading shard axis on every field.
+Everything here is MESH-NATIVE (DESIGN §2.4), the float channel included:
+a row-sharded :class:`~repro.core.bfs.BlestProblem` runs the same
+step/finalize under ``shard_map`` — each shard pulls/scatters its local
+``(rows_per_shard, S)`` level block, every shard carries a replica of the
+stacked global frontier words (that replica IS each device's pull
+operand), and one frontier-word all-gather per level refreshes it.  The
+σ channel shards exactly like the frontier bits: ``paths`` is a local
+``(rows_per_shard, S)`` block, and each level's weighted pull consumes a
+per-level all-gather of the σ-frontier float values — the float twin of
+the frontier-word gather, hoisted OUT of the bucket ``cond`` (collectives
+inside device-varying branches would wedge the mesh).  The host-visible
+wave state then has a leading shard axis on every field.
 """
 from __future__ import annotations
 
@@ -52,7 +57,7 @@ from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
 from repro.graphs import Graph
-from repro.kernels import bvss_spmm, bvss_spmm_w
+from repro.kernels import bvss_spmm, bvss_spmm_w, bvss_spmm_w_local
 from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_w_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
@@ -75,7 +80,9 @@ class MSState(NamedTuple):
                           # forward channel), present iff the engine was
                           # built with ``track_sigma=True``; None otherwise
                           # (a None pytree leaf costs the default engines
-                          # nothing)
+                          # nothing).  Sharded: (D, rps, S), LOCAL rows per
+                          # shard — the float channel shards like levels,
+                          # not like the replicated frontier words
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,26 +114,26 @@ class MSEngine:
                           # step so serving pays ONE dispatch per level
     col_live: Callable    # jitted (state) -> (S,) bool frontier non-empty
     levels_of: Callable   # (state, slot) -> (n,) levels in global row ids
+    paths_of: Callable | None = None
+                          # (state, slot) -> (n,) σ path counts in global
+                          # row ids; None unless built with track_sigma
 
 
 def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                    use_kernel: bool = True, buckets: int = 2,
                    track_sigma: bool = False) -> MSEngine:
     """Build the S-column lock-step BVSS level machinery (mesh-native when
-    ``problem`` is sharded).  ``track_sigma`` widens the wave state with the
-    Brandes σ path-count channel (single-device only: the weighted sweeps
-    have no shard_map'd variant yet — see DESIGN §2.6)."""
+    ``problem`` is sharded).  ``track_sigma`` widens the wave state with
+    the Brandes σ path-count channel — on a sharded problem the channel
+    rides the generic sharded float path (per-level all-gather of the
+    σ-frontier values, DESIGN §2.6)."""
     p = problem
     spmm = bvss_spmm if use_kernel else bvss_spmm_ref
-    if p.mesh is not None:
-        if track_sigma:
-            raise NotImplementedError(
-                "track_sigma has no shard_map'd path yet; run the Brandes "
-                "forward phase on a single-device BlestProblem (the serving "
-                "layer builds one from the prepared host BVSS)")
-        return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
-                                       buckets=buckets)
     spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
+    if p.mesh is not None:
+        return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
+                                       buckets=buckets, spmm_w=spmm_w,
+                                       track_sigma=track_sigma)
     dev = p.dev
     sigma = p.sigma
     S = n_slots
@@ -162,9 +169,8 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                        state.paths, 0.0)
         xv = jnp.concatenate(
             [xv, jnp.zeros((n_cols - n, S), jnp.float32)])
-        cols = (dev.virtual_to_real[ids][:, None] * sigma
-                + jnp.arange(sigma, dtype=jnp.int32)[None, :])   # (w, σ)
-        wv = spmm_w(dev.masks[ids], xv[cols], sigma=sigma)
+        wv = bvss_spmm_w_local(dev.masks[ids], dev.virtual_to_real[ids],
+                               xv, sigma=sigma, impl=spmm_w)
         acc = jnp.zeros((n + 1, S), jnp.float32).at[rows].add(
             wv.reshape(-1, S))
         newly = levels[:n] == cand
@@ -274,7 +280,9 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         step=step, finalize=finalize,
         level_step=jax.jit(level_step),
         col_live=jax.jit(lambda st: (st.F != 0).any(axis=0)),
-        levels_of=lambda st, slot: st.levels[:n, slot])
+        levels_of=lambda st, slot: st.levels[:n, slot],
+        paths_of=(lambda st, slot: st.paths[:, slot]) if track_sigma
+        else None)
 
 
 # ---------------------------------------------------------------------------
@@ -344,10 +352,19 @@ class _MSLocals(NamedTuple):
 
 
 def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
-                    qcap: int) -> Callable:
+                    qcap: int, *, spmm_w=None,
+                    track_sigma: bool = False) -> Callable:
     """Build ``locals_for(dev) -> _MSLocals`` closing over one shard's BVSS
     views.  State fields here are LOCAL: levels (rps+1, S), F (n_fwords, S)
-    global replica, Q (qcap,), count/cont scalars, col_lvl (S,)."""
+    global replica, Q (qcap,), count/cont scalars, col_lvl (S,).
+
+    ``track_sigma`` threads the generic sharded float channel (DESIGN
+    §2.6): ``paths`` is a LOCAL (rps, S) block, and each level's weighted
+    pull contracts the shard's queued tiles against a per-level
+    ``all_gather`` of every shard's σ-frontier float values — the float
+    twin of the frontier-word gather in ``finalize``.  The gather is
+    hoisted OUT of the bucket ``cond`` (shards may pick different widths,
+    and a collective inside a device-varying branch wedges the mesh)."""
     axis = p.axis
     sigma = p.sigma
     rps = p.rows_per_shard
@@ -358,7 +375,8 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
     def locals_for(dev: ShardedBVSSDevice) -> _MSLocals:
         compact = make_compactor(dev, p.num_vss, qcap)
 
-        def pull_update(st: MSState, width: int) -> MSState:
+        def pull_update(st: MSState, width: int,
+                        xg: jnp.ndarray | None) -> MSState:
             ids = jax.lax.slice_in_dim(st.Q, 0, width)
             fb = _frontier_bytes(st.F, dev.virtual_to_real[ids], sigma)
             counts = spmm(dev.masks[ids], fb, sigma=sigma)
@@ -366,15 +384,40 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             cand = (st.col_lvl + 1)[None, :]
             upd = jnp.where(counts.reshape(-1, S) > 0, cand, INF
                             ).astype(jnp.int32)
-            return st._replace(levels=st.levels.at[rows].min(upd))
+            levels = st.levels.at[rows].min(upd)
+            if not track_sigma:
+                return st._replace(levels=levels)
+            # σ channel: the weighted twin over the SAME queued tiles,
+            # pulling from the gathered global frontier values; only rows
+            # the Boolean counts discovered THIS level take the sum, so a
+            # converged column's stale values contribute nothing
+            wv = bvss_spmm_w_local(dev.masks[ids],
+                                   dev.virtual_to_real[ids], xg,
+                                   sigma=sigma, impl=spmm_w)
+            acc = jnp.zeros((rps + 1, S), jnp.float32).at[rows].add(
+                wv.reshape(-1, S))
+            newly = levels[:rps] == cand
+            return st._replace(
+                levels=levels,
+                paths=jnp.where(newly, acc[:rps], st.paths))
 
         def step(st: MSState) -> MSState:
+            if track_sigma:
+                # the one extra cross-device term of the float channel:
+                # all-gather the σ-frontier values (rows at depth col_lvl),
+                # mirroring finalize's frontier-word gather — BEFORE the
+                # bucket cond (no collectives inside its branches)
+                xv = jnp.where(st.levels[:rps] == st.col_lvl[None, :],
+                               st.paths, 0.0)
+                xg = jax.lax.all_gather(xv, axis, tiled=True)  # (n_pad, S)
+            else:
+                xg = None
             if len(widths) == 1:
-                return pull_update(st, widths[0])
+                return pull_update(st, widths[0], xg)
             small, full = widths
             return jax.lax.cond(st.count <= small,
-                                lambda s: pull_update(s, small),
-                                lambda s: pull_update(s, full), st)
+                                lambda s: pull_update(s, small, xg),
+                                lambda s: pull_update(s, full, xg), st)
 
         def requeue(st: MSState) -> MSState:
             # F is already the global replica: no gather needed here
@@ -396,6 +439,15 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             st = st._replace(F=F, col_lvl=st.col_lvl + advanced)
             return requeue(st)
 
+        def _seed_paths(paths: jnp.ndarray, lsrc: jnp.ndarray,
+                        cols: jnp.ndarray, own: jnp.ndarray) -> jnp.ndarray:
+            """Set σ(source) = 1 on the owning shard: ``paths`` has no
+            dummy row, so non-owned writes clamp to a real row and write
+            back the old value (a no-op)."""
+            row = jnp.clip(lsrc, 0, rps - 1)
+            return paths.at[row, cols].set(
+                jnp.where(own, 1.0, paths[row, cols]))
+
         def init(sources: jnp.ndarray) -> MSState:
             d = jax.lax.axis_index(axis)
             cols = jnp.arange(S)
@@ -407,11 +459,15 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             F = jnp.zeros((p.n_fwords, S), dtype=jnp.uint32)
             F = F.at[sources // 32, cols].set(
                 jnp.uint32(1) << (sources % 32).astype(jnp.uint32))
+            paths = None
+            if track_sigma:
+                paths = _seed_paths(jnp.zeros((rps, S), jnp.float32),
+                                    lsrc, cols, own)
             st = MSState(levels=levels, F=F,
                          Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
                          count=jnp.int32(0),
                          col_lvl=jnp.zeros((S,), dtype=jnp.int32),
-                         cont=jnp.bool_(False))
+                         cont=jnp.bool_(False), paths=paths)
             return requeue(st)
 
         def insert(st: MSState, slot, src) -> MSState:
@@ -427,7 +483,11 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             F = st.F.at[:, slot].set(jnp.uint32(0))
             F = F.at[src // 32, slot].set(
                 jnp.uint32(1) << (src % 32).astype(jnp.uint32))
-            return st._replace(levels=levels, F=F,
+            paths = st.paths
+            if track_sigma:
+                paths = _seed_paths(paths.at[:, slot].set(0.0),
+                                    lsrc, slot, own)
+            return st._replace(levels=levels, F=F, paths=paths,
                                col_lvl=st.col_lvl.at[slot].set(0))
 
         def insert_batch(st: MSState, srcs, mask) -> MSState:
@@ -443,7 +503,11 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             bit = jnp.uint32(1) << (srcs % 32).astype(jnp.uint32)
             F = F.at[srcs // 32, cols].set(
                 jnp.where(mask, bit, F[srcs // 32, cols]))
-            st = st._replace(levels=levels, F=F,
+            paths = st.paths
+            if track_sigma:
+                paths = _seed_paths(jnp.where(mask[None, :], 0.0, paths),
+                                    lsrc, cols, own)
+            st = st._replace(levels=levels, F=F, paths=paths,
                              col_lvl=jnp.where(mask, 0, st.col_lvl))
             return requeue(st)
 
@@ -455,7 +519,8 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
 
 
 def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
-                            buckets: int) -> MSEngine:
+                            buckets: int, spmm_w=None,
+                            track_sigma: bool = False) -> MSEngine:
     """Host-driven wave surface over the shard_map'd local ops: every state
     field gains a leading shard axis; each public fn is one jitted
     shard_map dispatch."""
@@ -469,9 +534,10 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
     S = n_slots
     widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
-    locals_for = _make_ms_locals(p, S, spmm, widths, qcap)
+    locals_for = _make_ms_locals(p, S, spmm, widths, qcap, spmm_w=spmm_w,
+                                 track_sigma=track_sigma)
 
-    state_spec = state_specs(axis)
+    state_spec = state_specs(axis, track_sigma=track_sigma)
     dev_specs = problem_specs(axis)
     dev_args = (p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real)
 
@@ -522,7 +588,9 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
             Q=sh(np.full((D, qcap), p.num_vss, np.int32)),
             count=sh(np.zeros((D,), np.int32)),
             col_lvl=sh(np.zeros((D, S), np.int32)),
-            cont=sh(np.zeros((D,), bool)))
+            cont=sh(np.zeros((D,), bool)),
+            paths=sh(np.zeros((D, rps, S), np.float32))
+            if track_sigma else None)
 
     def level_step(st: MSState) -> tuple[MSState, jnp.ndarray]:
         st, live = level_sm(st)
@@ -531,6 +599,9 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
     def levels_of(st: MSState, slot) -> jnp.ndarray:
         # slice the column first: moves one (n,) column, not (n, S)
         return st.levels[:, :rps, slot].reshape(-1)[:p.n]
+
+    def paths_of(st: MSState, slot) -> jnp.ndarray:
+        return st.paths[:, :, slot].reshape(-1)[:p.n]
 
     return MSEngine(
         problem=p, n_slots=S,
@@ -544,7 +615,8 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
         step=None, finalize=None,   # fused via make_multi_source_bfs
         level_step=jax.jit(level_step),
         col_live=jax.jit(lambda st: (st.F[0] != 0).any(axis=0)),
-        levels_of=levels_of)
+        levels_of=levels_of,
+        paths_of=paths_of if track_sigma else None)
 
 
 def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
@@ -618,20 +690,7 @@ def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
 
     return jax.jit(bfs)
 
-
-def closeness_centrality(g: Graph, sources: np.ndarray, *,
-                         use_kernel: bool = True,
-                         problem: BlestProblem | None = None) -> np.ndarray:
-    """Approximate closeness centrality from a source sample (paper §7's
-    target application for multi-source BFS).  ``sources`` and the scores
-    are in the id space of ``g`` (pass ``problem`` to reuse prepared
-    state — sources must then be in the prepared graph's ids)."""
-    f = make_multi_source_bfs(g, len(sources), use_kernel=use_kernel,
-                              problem=problem)
-    levels = np.asarray(f(jnp.asarray(sources)))     # (n, S)
-    finite = levels != INF
-    dist_sum = np.where(finite, levels, 0).sum(axis=0).astype(np.float64)
-    reach = finite.sum(axis=0)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        cc = np.where(dist_sum > 0, (reach - 1) / dist_sum, 0.0)
-    return cc
+# closeness centrality (paper §7's target application for multi-source
+# BFS) lives in ``repro.analytics.closeness`` since PR 5: it is a wave
+# CLIENT — a reduction over the level channels this module produces —
+# not part of the wave machinery itself.

@@ -59,10 +59,14 @@ def problem_sharding(mesh: Mesh, axis: str = BFS_AXIS) -> NamedSharding:
     return NamedSharding(mesh, P(axis))
 
 
-def state_specs(axis: str = BFS_AXIS):
+def state_specs(axis: str = BFS_AXIS, *, track_sigma: bool = False):
     """PartitionSpecs of the host-visible sharded wave state
     (:class:`repro.core.multi_source.MSState`): every field carries a
     leading shard axis — local ``(rps+1, S)`` level blocks, one global
-    frontier replica per shard, one queue per shard."""
+    frontier replica per shard, one queue per shard.  ``track_sigma``
+    adds the spec of the σ path-count channel, which shards like the
+    level blocks (local ``(rps, S)`` rows), NOT like the replicated
+    frontier words."""
     from repro.core.multi_source import MSState
-    return MSState(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis))
+    return MSState(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
+                   P(axis) if track_sigma else None)

@@ -1,8 +1,8 @@
 from .ops import (bvss_pull, bit_spmm, bvss_spmm, bvss_spmm_t,
-                  bvss_spmm_w, finalize_pack_sweep, finalize_sweep,
-                  pull_vss_kernel)
+                  bvss_spmm_t_local, bvss_spmm_w, bvss_spmm_w_local,
+                  finalize_pack_sweep, finalize_sweep, pull_vss_kernel)
 from . import ref
 
 __all__ = ["bvss_pull", "bit_spmm", "bvss_spmm", "bvss_spmm_t",
-           "bvss_spmm_w", "finalize_sweep", "finalize_pack_sweep",
-           "pull_vss_kernel", "ref"]
+           "bvss_spmm_t_local", "bvss_spmm_w", "bvss_spmm_w_local",
+           "finalize_sweep", "finalize_pack_sweep", "pull_vss_kernel", "ref"]

@@ -32,6 +32,19 @@ row axis (the transposed product — the Brandes backward dependency sweep
 pushes per-row values back onto the columns).  One bit-unpack serves both
 traversal and analytics, so every algorithm in ``repro.analytics`` rides
 the tiles the BFS engines already own.
+
+``bvss_spmm_w_local``/``bvss_spmm_t_local`` are their local-rows ×
+global-columns forms (DESIGN §2.4/§2.6): the gather half of the weighted
+products, phrased so one call site serves the single-device engines AND
+every shard of a row-sharded BVSS under ``shard_map``.  The `_w` form
+gathers each queued VSS's (σ, S) slice-set column block out of a GLOBAL
+per-column value array (single-device: the padded σ-frontier values;
+sharded: the per-level all-gather of every shard's local frontier values);
+the `_t` form gathers per-row values through the caller's ``row_ids``
+(LOCAL rows under a mesh) and returns the per-column partials the caller
+scatter-adds into the global column space — and, when row-sharded,
+reduces across shards (``lax.psum_scatter``), because each shard only
+sees the dependency flowing through its own rows.
 """
 from __future__ import annotations
 
@@ -300,3 +313,55 @@ def bvss_spmm_t(masks: jnp.ndarray, hvals: jnp.ndarray, *, sigma: int = 8,
     return _spmm_float_call(_bvss_spmm_t_kernel, masks, hv, spw * 32, sigma,
                             sigma=sigma, tile_b=tile_b, tile_s=tile_s,
                             interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# local-rows × global-columns weighted forms (DESIGN §2.4/§2.6)
+# ---------------------------------------------------------------------------
+def bvss_spmm_w_local(masks: jnp.ndarray, sets: jnp.ndarray,
+                      xglobal: jnp.ndarray, *, sigma: int = 8,
+                      impl=None) -> jnp.ndarray:
+    """Weighted pull of a queued VSS batch against a GLOBAL column-value
+    array: gathers each VSS's (σ, S) slice-set column block from
+    ``xglobal`` and contracts it with the (τ, σ) bit tile.
+
+    masks:   (B, 32) uint32 queued VSS mask rows (a shard's LOCAL rows
+             under a mesh — the masks only name rows the caller owns).
+    sets:    (B,) int32 GLOBAL slice-set id of each queued VSS
+             (``virtual_to_real[ids]``); set j owns columns [σj, σ(j+1)).
+    xglobal: (C, S) float32 per-column values with C ≥ n_sets·σ — the
+             padded frontier values single-device, the per-level
+             all-gather of every shard's local frontier values when
+             row-sharded (the float twin of the frontier-word gather).
+    returns  (B, spw, 32, S) float32 weighted sums per slice — scatter-add
+             into (local) rows via ``row_ids``.
+
+    ``impl`` overrides the tile product (``kernels.ref.bvss_spmm_w_ref``
+    for the oracle path); columns stay global in either mode, so this is
+    the ONE gather both the single-device σ channel and every shard of
+    the mesh-native channel execute.
+    """
+    cols = (sets[:, None] * sigma
+            + jnp.arange(sigma, dtype=jnp.int32)[None, :])      # (B, σ)
+    f = bvss_spmm_w if impl is None else impl
+    return f(masks, xglobal[cols], sigma=sigma)
+
+
+def bvss_spmm_t_local(masks: jnp.ndarray, row_ids: jnp.ndarray,
+                      hrows: jnp.ndarray, *, sigma: int = 8,
+                      impl=None) -> jnp.ndarray:
+    """Transposed weighted product against per-row values gathered through
+    the caller's ``row_ids`` (LOCAL rows under a mesh, dummy row last).
+
+    masks:   (B, 32) uint32 queued VSS mask rows.
+    row_ids: (B, spw, 32) int32 destination rows of each slice (local ids
+             when row-sharded; the dummy row indexes ``hrows``'s zero tail).
+    hrows:   (R + 1, S) float32 per-row values, row R the zeroed dummy.
+    returns  (B, σ, S) float32 per-column partial sums — scatter-add into
+             the GLOBAL column space; on a row-sharded BVSS the partials
+             only cover dependency flowing through this shard's rows, so
+             the scatter must be psum'd (``lax.psum_scatter``) across the
+             mesh axis before it folds into δ (DESIGN §2.6).
+    """
+    f = bvss_spmm_t if impl is None else impl
+    return f(masks, hrows[row_ids], sigma=sigma)

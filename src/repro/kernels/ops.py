@@ -7,7 +7,8 @@ execute in ``interpret=True``; on TPU they compile to Mosaic.
 from __future__ import annotations
 
 from .bvss_pull import bvss_pull
-from .mxu_pull import bit_spmm, bvss_spmm, bvss_spmm_t, bvss_spmm_w
+from .mxu_pull import (bit_spmm, bvss_spmm, bvss_spmm_t, bvss_spmm_t_local,
+                       bvss_spmm_w, bvss_spmm_w_local)
 from .frontier_finalize import finalize_pack_sweep, finalize_sweep
 from . import ref
 
@@ -19,5 +20,5 @@ def pull_vss_kernel(masks, fbytes, sigma: int = 8):
 
 
 __all__ = ["bvss_pull", "bit_spmm", "bvss_spmm", "bvss_spmm_t",
-           "bvss_spmm_w", "finalize_sweep", "finalize_pack_sweep",
-           "pull_vss_kernel", "ref"]
+           "bvss_spmm_t_local", "bvss_spmm_w", "bvss_spmm_w_local",
+           "finalize_sweep", "finalize_pack_sweep", "pull_vss_kernel", "ref"]

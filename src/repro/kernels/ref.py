@@ -153,6 +153,35 @@ def eccentricity_ref(g, sources) -> np.ndarray:
     return dist.max(axis=1).astype(np.int64)
 
 
+def closeness_ref(g, sources=None, *, wf_improved: bool = False
+                  ) -> np.ndarray:
+    """Closeness centrality oracle via SciPy BFS distances: outward
+    distances over ``g`` as given (symmetrise first for the classical
+    undirected definition) — c(s) = (reach-1)/Σ d(s, ·), 0 for a source
+    reaching nothing.  ``sources=None`` evaluates every vertex (the exact
+    variant); ``wf_improved`` applies the Wasserman–Faust
+    ``(reach-1)/(n-1)`` scaling (NetworkX's default).  Matches NetworkX
+    ``closeness_centrality(G.reverse(), wf_improved=...)`` on a DiGraph
+    (NetworkX measures INWARD distance) — the analytics test suite
+    cross-checks that equivalence."""
+    from scipy.sparse.csgraph import dijkstra
+    if sources is None:
+        sources = np.arange(g.n)
+    sources = np.asarray(sources, dtype=np.int64)
+    if len(sources) == 0:
+        return np.zeros(0, dtype=np.float64)
+    dist = dijkstra(_csr_matrix(g), directed=True, unweighted=True,
+                    indices=sources)                       # (S, n)
+    finite = np.isfinite(dist)
+    dist_sum = np.where(finite, dist, 0.0).sum(axis=1)
+    reach = finite.sum(axis=1).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        cc = np.where(dist_sum > 0, (reach - 1) / dist_sum, 0.0)
+    if wf_improved and g.n > 1:
+        cc = cc * (reach - 1) / (g.n - 1)
+    return cc
+
+
 def betweenness_ref(g, sources) -> np.ndarray:
     """Brandes partial betweenness: Σ_{s∈sources} δ_s(v), unnormalised,
     endpoints excluded — the exact quantity ``repro.analytics.betweenness``

@@ -7,12 +7,13 @@ Builds a :class:`repro.serve.GraphSession` (the ONE prepared pipeline) and
 serves the requested analytics query kinds off its wave slot pool:
 ``components`` (flood-fill re-seeding), ``eccentricity`` (a sampled batch),
 ``extremes`` (iFUB diameter/radius), ``betweenness`` (sampled-source
-Brandes).  ``--verify`` checks every result against the independent
+Brandes), ``closeness`` (sampled closeness by wave level-channel
+reduction).  ``--verify`` checks every result against the independent
 NetworkX/SciPy/NumPy oracles in ``repro.kernels.ref``.
 
-``--devices N`` serves through a row-sharded session (components and
-eccentricity ride the shard_map'd wave surface; betweenness' weighted
-sweeps run replicated — DESIGN §2.6).
+``--devices N`` serves through a row-sharded session — EVERY verb rides
+the shard_map'd wave surface, betweenness' weighted sweeps included
+(mesh-native forward σ channel + psum-scattered backward, DESIGN §2.6).
 """
 from __future__ import annotations
 
@@ -23,7 +24,8 @@ import numpy as np
 
 from repro.launch.bfs import build_graph, ensure_devices
 
-WHAT = ("components", "eccentricity", "extremes", "betweenness")
+WHAT = ("components", "eccentricity", "extremes", "betweenness",
+        "closeness")
 
 
 def main(argv=None):
@@ -118,6 +120,21 @@ def main(argv=None):
             ref = betweenness_ref(g, srcs)
             np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
             line += "; VERIFIED vs Brandes oracle"
+        print(line)
+
+    if "closeness" in what:
+        srcs = rng.integers(0, g.n, args.sources)
+        t0 = time.time()
+        cc = sess.closeness(srcs)
+        dt = time.time() - t0
+        line = (f"[analytics] closeness: {len(srcs)} sources, "
+                f"range [{cc.min():.4f}, {cc.max():.4f}] "
+                f"in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import closeness_ref
+            np.testing.assert_allclose(cc, closeness_ref(g, srcs),
+                                       rtol=1e-9)
+            line += "; VERIFIED vs scipy"
         print(line)
 
 

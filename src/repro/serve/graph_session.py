@@ -23,20 +23,23 @@ Beyond level queries, a session serves the ANALYTICS query kinds
 (DESIGN §2.6) multiplexed onto the same ``max_batch`` slot pool:
 ``components()`` (flood-fill re-seeding through the generic wave refill
 hook), ``eccentricity(batch)`` / ``extremes()`` (iFUB sweeps through the
-fused multi-source engine) and ``betweenness(...)`` (Brandes forward σ
-channel + reverse tile sweep).  The classical undirected analytics run on
-a lazily-built symmetrised twin of the prepared problem (same internal id
-space, so the caller-id contract is unchanged).
+fused multi-source engine), ``betweenness(...)`` (Brandes forward σ
+channel + reverse tile sweep) and ``closeness(...)`` (exact or sampled,
+a reduction over wave level channels).  The classical undirected
+analytics run on a lazily-built symmetrised twin of the prepared problem
+(same internal id space, so the caller-id contract is unchanged).
 
 A session is MESH-NATIVE (DESIGN §2.4): pass ``mesh=...`` and the whole
 stack — prepare, the fused single-source engine, the wave machinery —
 runs row-sharded under ``shard_map``.  The serving loop and the caller-id
 contract are identical in either mode; the only difference is the shape
 of the wave state (a leading shard axis), which the engine's
-``levels_of`` view hides from this layer.  Components and eccentricity
-ride the sharded wave surface directly; betweenness' weighted sweeps have
-no shard_map'd variant yet, so a sharded session serves it through a
-replicated single-device problem built from the prepared host BVSS.
+``levels_of`` view hides from this layer.  EVERY analytics verb rides
+the sharded surface when the session has a mesh — betweenness included:
+its weighted sweeps run under ``shard_map`` on the session's own
+row-sharded problem (forward σ channel via the per-level float gather,
+backward via psum-scattered column reductions), with no replicated twin
+anywhere.
 """
 from __future__ import annotations
 
@@ -48,11 +51,10 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.analytics import (ExtremesReport, betweenness_centrality,
-                             connected_components, eccentricities,
-                             ifub_extremes)
+                             closeness_centrality, connected_components,
+                             eccentricities, ifub_extremes)
 from repro.core.bfs import BlestProblem
-from repro.core.multi_source import (closeness_centrality, drive_wave,
-                                     make_ms_engine)
+from repro.core.multi_source import drive_wave, make_ms_engine
 from repro.core.policy import PreparedBFS, prepare
 from repro.graphs import Graph
 from repro.kernels.ref import normalize_labels
@@ -169,17 +171,25 @@ class GraphSession:
     # ------------------------------------------------------------------
     # centrality
     # ------------------------------------------------------------------
-    def closeness(self, sources: Sequence[int]) -> np.ndarray:
-        """Closeness centrality of the given sources (caller ids in, one
-        score per source out).  Fixed cohort, so this skips the host-driven
-        wave loop and runs the fused on-device multi-source engine
-        (DESIGN §2.5); scores are invariant under the internal reordering."""
-        srcs = [int(s) for s in sources]
-        if not srcs:
-            return np.zeros(0, dtype=np.float64)
-        internal = self.perm[np.asarray(srcs)].astype(np.int32)
-        return closeness_centrality(self.prepared.graph, internal,
-                                    problem=self._problem)
+    def closeness(self, sources: Sequence[int] | None = None, *,
+                  wf_improved: bool = False) -> np.ndarray:
+        """Closeness centrality (caller ids throughout): one score per
+        given source, or — with ``sources=None`` — the EXACT variant, one
+        score per vertex in caller-id order.  Fixed cohorts, so this
+        skips the host-driven wave loop and runs the cached fused
+        multi-source engine (DESIGN §2.5/§2.6); scores are invariant
+        under the internal reordering and the mesh sharding."""
+        if sources is None:
+            internal = self.perm.astype(np.int64)   # caller v -> perm[v]
+        else:
+            srcs = [int(s) for s in sources]
+            if not srcs:
+                return np.zeros(0, dtype=np.float64)
+            internal = self.perm[np.asarray(srcs)].astype(np.int64)
+        width = min(self.max_batch, len(internal))
+        return closeness_centrality(None, internal, batch=width,
+                                    wf_improved=wf_improved,
+                                    levels_fn=self._dir_wave(width))
 
     def centrality_sample(self, n_sources: int, seed: int = 0
                           ) -> tuple[np.ndarray, np.ndarray]:
@@ -240,25 +250,27 @@ class GraphSession:
                 use_kernel=self._use_kernel)
         return self._analytics_cache[key]
 
-    def _bc_problem(self) -> BlestProblem:
-        """The problem betweenness' weighted sweeps run on: the session's
-        own when single-device; a replicated single-device build from the
-        prepared host BVSS when sharded (the weighted tile products have
-        no shard_map'd variant yet — DESIGN §2.6)."""
-        if self.mesh is None:
-            return self._problem
-        if "bc_problem" not in self._analytics_cache:
-            self._analytics_cache["bc_problem"] = BlestProblem.build(
-                self.prepared.bvss)
-        return self._analytics_cache["bc_problem"]
+    def _dir_wave(self, width: int):
+        """Cached fixed-cohort multi-source fn on the session's own
+        (directed, possibly sharded) problem — closeness cohorts; one
+        compile per distinct width."""
+        key = ("dir_wave", width)
+        if key not in self._analytics_cache:
+            from repro.core.multi_source import make_multi_source_bfs
+            self._analytics_cache[key] = make_multi_source_bfs(
+                None, width, problem=self._problem,
+                use_kernel=self._use_kernel)
+        return self._analytics_cache[key]
 
     def _bc_fn(self, width: int):
-        """Cached Brandes forward+backward fn (one compile per width)."""
+        """Cached Brandes forward+backward fn on the session's own
+        problem — mesh-native when the session is sharded (one compile
+        per width; zero replicated weighted sweeps, DESIGN §2.6)."""
         key = ("bc_fn", width)
         if key not in self._analytics_cache:
             from repro.analytics import make_betweenness
             self._analytics_cache[key] = make_betweenness(
-                self._bc_problem(), width, use_kernel=self._use_kernel)
+                self._problem, width, use_kernel=self._use_kernel)
         return self._analytics_cache[key]
 
     def components(self) -> np.ndarray:
@@ -312,14 +324,16 @@ class GraphSession:
         directed graph (unnormalised, endpoints excluded): one score per
         vertex, caller ids throughout.  Forward phase = the fused wave
         BFS with the σ path-count channel; backward = the reverse sweep
-        over the recorded per-level tile queues."""
+        over the recorded per-level tile queues.  Mesh-native on a
+        sharded session: both phases run under shard_map on the
+        session's own row-sharded problem (DESIGN §2.6)."""
         srcs = np.asarray([int(s) for s in sources], dtype=np.int64)
         if len(srcs) == 0:
             return np.zeros(self.n, dtype=np.float64)
         internal = self.perm[srcs].astype(np.int32)
         width = min(self.max_batch, len(srcs))
         bc = betweenness_centrality(None, internal,
-                                    problem=self._bc_problem(),
+                                    problem=self._problem,
                                     use_kernel=self._use_kernel,
                                     batch=width,
                                     bc_fn=self._bc_fn(width))

@@ -7,12 +7,41 @@ still runs: ``@given`` draws a fixed, seeded sample of examples instead
 of hypothesis' adaptive search.  The shim covers exactly the API surface
 the tests use (``given``, ``settings``, ``strategies.integers``,
 ``strategies.sampled_from``).
+
+``require_devices`` guards the sharded-parity tests: they SKIP on a
+plain single-device checkout (the simulated-device flag binds at backend
+init, so an in-process pytest run cannot grow devices), but FAIL —
+loudly, not silently skip — when ``BLEST_REQUIRE_MULTIDEVICE`` is set,
+which the CI multidevice job does.  That turns "the parity suite ran
+with 0 skips" into an enforced property instead of a hope: if the
+XLA_FLAGS plumbing ever breaks, CI goes red instead of green-but-empty.
 """
 from __future__ import annotations
 
+import os
 import random
 import sys
 import types
+
+import pytest
+
+
+def require_devices(n: int = 2) -> None:
+    """Call at the top of a multi-device test body: skip locally when the
+    process has fewer than ``n`` devices, FAIL under
+    ``BLEST_REQUIRE_MULTIDEVICE=1`` (the CI multidevice job)."""
+    import jax
+    have = len(jax.devices())
+    if have >= n:
+        return
+    msg = (f"needs >= {n} devices, have {have} (run under XLA_FLAGS="
+           f"--xla_force_host_platform_device_count={n})")
+    if os.environ.get("BLEST_REQUIRE_MULTIDEVICE"):
+        pytest.fail(
+            "BLEST_REQUIRE_MULTIDEVICE is set but the device-count "
+            "prerequisite is unmet — the multidevice CI job must run the "
+            "sharded-parity suite, never skip it: " + msg)
+    pytest.skip(msg)
 
 _SHIM_SEED = 0xB1E57  # deterministic: same examples every run
 _SHIM_MAX_EXAMPLES = 10  # cap so the fallback stays CI-fast

@@ -84,7 +84,7 @@ def test_multi_source_matches_singles():
 
 
 def test_closeness_centrality_nonnegative():
-    from repro.core.multi_source import closeness_centrality
+    from repro.analytics.closeness import closeness_centrality
     g = gen.rmat(7, 8, seed=10)
     cc = closeness_centrality(g, np.arange(6, dtype=np.int32))
     assert (cc >= 0).all() and np.isfinite(cc).all()

@@ -128,6 +128,116 @@ print("ok")
 """, n_devices=2)
 
 
+@pytest.mark.parametrize("n_devices", [1, 2, 8])
+def test_sharded_weighted_kernels_match_refs(n_devices):
+    """The local-rows × global-columns weighted tile forms
+    (``bvss_spmm_w_local`` / ``bvss_spmm_t_local``) under shard_map vs the
+    ``kernels/ref.py`` oracles, per shard of a row-sharded BVSS whose last
+    shard is RAGGED (zero-padded VSS rows and a partial row block).  The
+    zeroed value column stands in for an empty-frontier level: both
+    products must return exact zeros for it."""
+    run_py(f"""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.graphs import generators as gen
+from repro.core.bvss import ShardedBVSSDevice, build_sharded_bvss, shard_to_device
+from repro.core.bfs import BlestProblem
+from repro.distributed.bfs_dist import bfs_mesh, problem_specs
+from repro.kernels import bvss_spmm_t_local, bvss_spmm_w_local
+from repro.kernels.ref import bvss_spmm_t_ref, bvss_spmm_w_ref
+
+D = {n_devices}
+mesh = bfs_mesh(D)
+g = gen.clustered(3, 23, seed=4)            # n = 69: ragged last shard
+sb = build_sharded_bvss(g, D)
+p = BlestProblem.build_sharded(sb, mesh)
+assert D * sb.rows_per_shard >= g.n
+S, sigma = 3, sb.sigma
+B = p.num_vss + 1                           # include the dummy VSS
+rng = np.random.default_rng(0)
+n_pad = p.n_fwords * 32
+xg = rng.random((n_pad, S)).astype(np.float32)
+xg[:, 1] = 0.0                              # empty-frontier column
+h = rng.random((D, sb.rows_per_shard + 1, S)).astype(np.float32)
+h[:, -1, :] = 0.0                           # dummy row must stay zero
+h[:, :, 1] = 0.0
+
+def f(masks, row_ids, v2r, xg, h):
+    dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+    ids = jnp.arange(B, dtype=jnp.int32)
+    w = bvss_spmm_w_local(dev.masks[ids], dev.virtual_to_real[ids], xg,
+                          sigma=sigma)
+    t = bvss_spmm_t_local(dev.masks[ids], dev.row_ids[ids], h[0],
+                          sigma=sigma)
+    return w[None], t[None]
+
+fn = shard_map(f, mesh=mesh, in_specs=problem_specs() + (P(), P('data')),
+               out_specs=(P('data'), P('data')), check_rep=False)
+w, t = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+          jnp.asarray(xg), jnp.asarray(h))
+w, t = np.asarray(w), np.asarray(t)
+
+# per-shard oracle on the host, straight off the ShardedBVSS arrays
+spw = 32 // sigma
+for d in range(D):
+    masks_d = np.concatenate([sb.masks[d], np.zeros((1, 32), np.uint32)])
+    v2r_d = np.concatenate([sb.virtual_to_real[d], np.zeros(1, np.int32)])
+    rid_d = np.concatenate(
+        [sb.row_ids[d].reshape(-1, spw, 32),
+         np.full((1, spw, 32), sb.rows_per_shard, np.int32)])
+    cols = v2r_d[:, None] * sigma + np.arange(sigma)[None, :]
+    want_w = np.asarray(bvss_spmm_w_ref(
+        jnp.asarray(masks_d), jnp.asarray(xg[cols]), sigma))
+    np.testing.assert_allclose(w[d], want_w, rtol=1e-6, err_msg=f"w d={{d}}")
+    want_t = np.asarray(bvss_spmm_t_ref(
+        jnp.asarray(masks_d), jnp.asarray(h[d][rid_d]), sigma))
+    np.testing.assert_allclose(t[d], want_t, rtol=1e-6, err_msg=f"t d={{d}}")
+    assert (w[d][..., 1] == 0).all() and (t[d][..., 1] == 0).all()
+print("ok")
+""", n_devices=max(n_devices, 1))
+
+
+@pytest.mark.parametrize("n_devices", [1, 2, 8])
+def test_sharded_betweenness_matches_single_and_oracle(n_devices):
+    """Mesh-native Brandes across device counts: kernel AND ref-oracle
+    tile paths, ragged last shard, isolated-source column (its frontier
+    empties immediately while other columns keep running)."""
+    run_py(f"""
+import numpy as np
+import jax.numpy as jnp
+from repro.graphs import from_edges, generators as gen
+from repro.core.bvss import build_bvss, build_sharded_bvss
+from repro.core.bfs import BlestProblem
+from repro.distributed.bfs_dist import bfs_mesh
+from repro.analytics.betweenness import make_betweenness
+from repro.kernels.ref import betweenness_ref
+
+mesh = bfs_mesh({n_devices})
+graphs = [gen.clustered(3, 23, seed=4),       # ragged n = 69
+          from_edges(50, np.array([1, 2, 10]), np.array([2, 3, 11]))]
+for g in graphs:
+    p1 = BlestProblem.build(build_bvss(g))
+    pD = BlestProblem.build_sharded(build_sharded_bvss(g, {n_devices}), mesh)
+    # vertex 40 of the second graph is isolated: empty frontier at level 1
+    srcs = np.array([1, min(40, g.n - 1), 2, g.n - 1], dtype=np.int32)
+    ref = betweenness_ref(g, srcs)
+    f1 = make_betweenness(p1, len(srcs))
+    lv1, sg1, dl1 = [np.asarray(x) for x in f1(jnp.asarray(srcs))]
+    for use_kernel in (True, False):
+        fD = make_betweenness(pD, len(srcs), use_kernel=use_kernel)
+        lvD, sgD, dlD = [np.asarray(x) for x in fD(jnp.asarray(srcs))]
+        assert (lv1 == lvD).all(), use_kernel
+        np.testing.assert_allclose(sgD, sg1, rtol=1e-6)
+        scale = max(float(np.abs(dl1).max()), 1.0)
+        assert float(np.abs(dlD - dl1).max()) / scale <= 1e-6, use_kernel
+        bc = dlD.astype(np.float64).sum(axis=1)
+        np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
+print("ok")
+""", n_devices=max(n_devices, 1))
+
+
 def test_gpipe_equals_sequential():
     run_py("""
 import jax, jax.numpy as jnp, numpy as np

@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analytics.closeness import closeness_centrality
 from repro.core import reference_bfs
-from repro.core.multi_source import (closeness_centrality,
-                                     make_multi_source_bfs)
+from repro.core.multi_source import make_multi_source_bfs
 from repro.graphs import from_edges, generators as gen
 from repro.kernels import bvss_pull, bvss_spmm
 from repro.kernels import ref
