@@ -13,6 +13,11 @@ Per graph of the suite:
   baseline below (``to_dense_bits`` adjacency + ``bit_spmm``), with the
   adjacency footprint of each (the dense bitmap is O(n²/32) words; the
   BVSS scales with slices).
+* ``hardened`` — the same wave workload through the multi-tenant
+  :class:`repro.serve.GraphSessionManager` front (ingress validation,
+  LRU touch, deadline clock hooks armed with a never-firing budget) vs
+  the bare session, quantifying the robustness-layer overhead (DESIGN
+  §2.7 requires it stay in the noise; the perf gate floors the ratio).
 
 ``run(..., json_path=...)`` is invoked by ``benchmarks/run.py --json`` and
 feeds the ``service`` suite of ``BENCH_pr2.json``.
@@ -26,7 +31,7 @@ import numpy as np
 
 from benchmarks.common import bench_envelope, fmt_row, geomean, graph_suite
 from repro.core import INF, reference_bfs
-from repro.serve import GraphSession
+from repro.serve import GraphSession, GraphSessionManager, TimeoutResult
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +100,9 @@ def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
     graphs_out = {}
     for gname, g in suite.items():
         rng = np.random.default_rng(0)
-        sess = GraphSession(g, max_batch=min(8, n_queries), w=512)
+        mgr = GraphSessionManager()
+        sess = mgr.open_session(gname, g, max_batch=min(8, n_queries),
+                                w=512)
         queries = [int(q) for q in rng.integers(0, g.n, n_queries)]
 
         # -- serve: batched wave vs N sequential single-source runs --------
@@ -115,6 +122,34 @@ def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
             "n_queries": n_queries, "max_batch": sess.max_batch,
             "sequential_sec": t_seq, "wave_sec": t_wave,
             "speedup": t_seq / max(t_wave, 1e-12), "verified": verified,
+        }
+
+        # -- hardened: manager-fronted wave vs the bare session ------------
+        # same compiled engine underneath (the manager holds THIS sess),
+        # so the delta is pure robustness-layer cost: source validation,
+        # LRU touch, and the per-level deadline clock hooks (armed with a
+        # budget that never fires)
+        def _median(fn, reps: int = 5) -> float:
+            ts = []
+            for _ in range(reps):
+                t0 = time.time()
+                fn()
+                ts.append(time.time() - t0)
+            return float(np.median(ts))
+
+        t_plain = _median(lambda: sess.levels_batch(queries))
+        t_hard = _median(lambda: mgr.levels_batch(
+            gname, queries, deadline_s=3600.0))
+        hard = mgr.levels_batch(gname, queries, deadline_s=3600.0)
+        hardened_verified = (
+            not any(isinstance(lv, TimeoutResult) for lv in hard)
+            and all((lv == lv_s).all() for lv, lv_s in zip(hard, wave)))
+        assert hardened_verified, f"{gname}: hardened path diverges"
+        hardened = {
+            "n_queries": n_queries,
+            "plain_sec": t_plain, "hardened_sec": t_hard,
+            "plain_vs_hardened": t_plain / max(t_hard, 1e-12),
+            "verified": hardened_verified,
         }
 
         # -- multi-source: BVSS bit-SpMM vs frozen dense baseline ----------
@@ -147,7 +182,7 @@ def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
             "n": int(g.n), "m": int(g.m),
             "social_like": social, "ordering": sess.ordering,
             "engine": sess.engine_name,
-            "serve": serve, "multi_source": ms,
+            "serve": serve, "multi_source": ms, "hardened": hardened,
         }
         if verbose:
             print(fmt_row(f"bench_service/{gname}/serve", t_wave * 1e6,
@@ -155,6 +190,9 @@ def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
             print(fmt_row(f"bench_service/{gname}/multi_source",
                           t_bvss * 1e6,
                           f"vs_dense={ms['speedup_bvss_vs_dense']:.2f}"))
+            print(fmt_row(f"bench_service/{gname}/hardened", t_hard * 1e6,
+                          f"plain_vs_hardened="
+                          f"{hardened['plain_vs_hardened']:.3f}"))
 
     social_graphs = [go for go in graphs_out.values() if go["social_like"]]
     summary = {
@@ -165,8 +203,12 @@ def run(scale: int = 9, n_queries: int = 8, json_path: str | None = None,
         "geomean_bvss_vs_dense": geomean(
             [go["multi_source"]["speedup_bvss_vs_dense"]
              for go in graphs_out.values()]),
-        "all_verified": all(go["serve"]["verified"]
-                            for go in graphs_out.values()),
+        "geomean_hardened_vs_plain": geomean(
+            [go["hardened"]["plain_vs_hardened"]
+             for go in graphs_out.values()]),
+        "all_verified": all(
+            go["serve"]["verified"] and go["hardened"]["verified"]
+            for go in graphs_out.values()),
     }
     out = {
         **bench_envelope("pr2_graph_session_service", scale),

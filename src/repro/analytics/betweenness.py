@@ -66,7 +66,8 @@ from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_t_ref, bvss_spmm_w_ref
 
 def make_betweenness(problem: BlestProblem, n_sources: int, *,
                      use_kernel: bool = True, buckets: int = 2,
-                     max_levels: int | None = None) -> Callable:
+                     max_levels: int | None = None,
+                     spmm_w_impl: Callable | None = None) -> Callable:
     """Build jitted ``f(sources (S,) i32) -> (levels (n,S), sigma (n,S),
     delta (n,S))`` running both Brandes phases on device — under
     ``shard_map`` when ``problem`` is row-sharded (outputs stay global).
@@ -76,19 +77,21 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
     columns over its source set to get partial betweenness.  ``max_levels``
     bounds the recorded history buffer ((max_levels+1) × qcap int32 —
     default n+1 is fine at lab scale, pass the graph's diameter bound to
-    shrink it).
+    shrink it).  ``spmm_w_impl`` overrides the weighted tile product —
+    the σ-channel fault seam (DESIGN §2.7).
     """
     p = problem
     if p.mesh is not None:
         return _make_betweenness_sharded(p, n_sources,
                                          use_kernel=use_kernel,
                                          buckets=buckets,
-                                         max_levels=max_levels)
+                                         max_levels=max_levels,
+                                         spmm_w_impl=spmm_w_impl)
     S = n_sources
     n, sigma = p.n, p.sigma
     dev = p.dev
     eng = make_ms_engine(p, S, use_kernel=use_kernel, buckets=buckets,
-                         track_sigma=True)
+                         track_sigma=True, spmm_w_impl=spmm_w_impl)
     spmm_t = bvss_spmm_t if use_kernel else bvss_spmm_t_ref
     widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
@@ -147,7 +150,9 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
 
 def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
                               use_kernel: bool, buckets: int,
-                              max_levels: int | None) -> Callable:
+                              max_levels: int | None,
+                              spmm_w_impl: Callable | None = None
+                              ) -> Callable:
     """Mesh-native Brandes: forward σ wave AND backward dependency sweep
     inside ONE ``shard_map`` dispatch over the row partition — no
     replicated weighted sweeps anywhere.
@@ -173,7 +178,8 @@ def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
     rps = p.rows_per_shard
     n_pad = p.n_fwords * 32           # D·rps ≥ n_sets·σ: global column pad
     spmm = bvss_spmm if use_kernel else bvss_spmm_ref
-    spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
+    spmm_w = spmm_w_impl if spmm_w_impl is not None else \
+        (bvss_spmm_w if use_kernel else bvss_spmm_w_ref)
     spmm_t = bvss_spmm_t if use_kernel else bvss_spmm_t_ref
     widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]

@@ -53,6 +53,8 @@ from repro.core.bvss import (BVSS, BVSSDevice, ShardedBVSS,
                              ShardedBVSSDevice, shard_to_device, to_device)
 from repro.core.level_pipeline import (LevelPipeline, compose_step,
                                        global_any, run_levels)
+from repro.distributed.bfs_dist import frontier_all_gather
+from repro.errors import GraphValidationError
 from repro.graphs import Graph, src_of_edges, to_dense_bits
 from repro.kernels import finalize_pack_sweep, pull_vss_kernel
 from repro.kernels.ref import finalize_pack_ref
@@ -405,7 +407,7 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
                 _, fw_loc, _ = fin(state.levels[:rps], lvl)
                 levels = state.levels
             # the one cross-device term: σ-bit frontier words, all-gathered
-            F = jax.lax.all_gather(fw_loc, axis, tiled=True)  # (n_fwords,)
+            F = frontier_all_gather(fw_loc, axis)  # (n_fwords,)
             set_active = _frontier_bytes(F, all_sets, sigma) != 0
             Q, count = compact(set_active)
             return state._replace(levels=levels, F=F, Q=Q, count=count,
@@ -528,7 +530,7 @@ def _make_brs_bfs_sharded(p: BlestProblem, *, max_levels: int | None
         def finalize(s: _BrsState, lvl) -> _BrsState:
             new = s.levels[:rps] == lvl
             fw_loc = _pack_bits(new, lwords)
-            F = jax.lax.all_gather(fw_loc, axis, tiled=True)
+            F = frontier_all_gather(fw_loc, axis)
             return s._replace(F=F, cont=global_any(new.any(), axis))
 
         pipe = LevelPipeline(
@@ -605,7 +607,10 @@ def make_csr_bfs(g: Graph, mode: str = "push", *, alpha: float = 15.0,
     pull: next[u] |= frontier[v] over all in-edges (v -> u), unvisited u only.
     dirop: Beamer switching between the two on scout-count heuristic.
     """
-    assert mode in ("push", "pull", "dirop")
+    if mode not in ("push", "pull", "dirop"):
+        raise GraphValidationError(
+            f"CSR BFS mode must be one of ('push', 'pull', 'dirop'), "
+            f"got {mode!r}")
     n = g.n
     e_src = jnp.asarray(src_of_edges(g).astype(np.int32))
     e_dst = jnp.asarray(g.indices.astype(np.int32))

@@ -25,6 +25,7 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.errors import GraphValidationError
 from repro.graphs import Graph
 
 LANES = 32  # 32-bit words per VSS row-group (paper: WARP_SIZE)
@@ -120,7 +121,9 @@ class BVSS:
 
 
 def build_bvss(g: Graph, sigma: int = 8) -> BVSS:
-    assert 32 % sigma == 0 and 1 <= sigma <= 32
+    if not (1 <= sigma <= 32 and 32 % sigma == 0):
+        raise GraphValidationError(
+            f"sigma must be a divisor of 32 in [1, 32], got {sigma!r}")
     spw = 32 // sigma
     tau = LANES * spw
     n, m = g.n, g.m

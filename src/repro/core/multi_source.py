@@ -56,6 +56,7 @@ from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
                             queue_widths)
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
+from repro.distributed.bfs_dist import frontier_all_gather
 from repro.graphs import Graph
 from repro.kernels import bvss_spmm, bvss_spmm_w, bvss_spmm_w_local
 from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_w_ref
@@ -121,19 +122,35 @@ class MSEngine:
 
 def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                    use_kernel: bool = True, buckets: int = 2,
-                   track_sigma: bool = False) -> MSEngine:
+                   track_sigma: bool = False,
+                   spmm_impl: Callable | None = None,
+                   spmm_w_impl: Callable | None = None,
+                   gather_impl: Callable | None = None) -> MSEngine:
     """Build the S-column lock-step BVSS level machinery (mesh-native when
     ``problem`` is sharded).  ``track_sigma`` widens the wave state with
     the Brandes σ path-count channel — on a sharded problem the channel
     rides the generic sharded float path (per-level all-gather of the
-    σ-frontier values, DESIGN §2.6)."""
+    σ-frontier values, DESIGN §2.6).
+
+    ``spmm_impl`` / ``spmm_w_impl`` / ``gather_impl`` are the documented
+    FAULT SEAMS (DESIGN §2.7): engines capture their kernels in jitted
+    closures at build time, so fault injection (``serve/faults.py``) — and
+    any future kernel substitution — happens here, as explicit build-time
+    overrides of the bit-SpMM, weighted-SpMM and frontier-word all-gather
+    call sites, not by monkeypatching module globals after tracing.
+    ``gather_impl`` must match :func:`repro.distributed.bfs_dist.
+    frontier_all_gather`'s ``(fw_local, axis)`` signature and is only
+    consulted on a sharded problem."""
     p = problem
-    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
-    spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
+    spmm = spmm_impl if spmm_impl is not None else \
+        (bvss_spmm if use_kernel else bvss_spmm_ref)
+    spmm_w = spmm_w_impl if spmm_w_impl is not None else \
+        (bvss_spmm_w if use_kernel else bvss_spmm_w_ref)
     if p.mesh is not None:
         return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
                                        buckets=buckets, spmm_w=spmm_w,
-                                       track_sigma=track_sigma)
+                                       track_sigma=track_sigma,
+                                       gather=gather_impl)
     dev = p.dev
     sigma = p.sigma
     S = n_slots
@@ -291,7 +308,10 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
 def drive_wave(eng: MSEngine,
                next_source: Callable[[int], int | None],
                on_converged: Callable[[int, np.ndarray], None], *,
-               max_steps: int | None = None) -> int:
+               max_steps: int | None = None,
+               should_harvest: Callable[[int], bool] | None = None,
+               on_harvested: Callable[[int, np.ndarray], None] | None = None
+               ) -> int:
     """Drive batched waves with mid-flight slot refills until the refill
     hook runs dry — the host loop shared by level serving
     (``GraphSession.levels_batch``) and flood-fill re-seeding
@@ -304,6 +324,16 @@ def drive_wave(eng: MSEngine,
     each converged column's ``(n,)`` level array (global internal ids; the
     engine's ``levels_of`` hides any shard layout).  Returns the number of
     lock-step levels run.
+
+    ``should_harvest(slot)`` / ``on_harvested(slot, levels)`` are the
+    CANCELLATION hooks (DESIGN §2.7): after every lock-step level, each
+    still-live slot is offered to ``should_harvest``; answering True
+    harvests the column mid-flight — ``on_harvested`` receives the PARTIAL
+    levels computed so far (vertices not yet reached are ``INF``) and the
+    slot is freed for refill on the next round, so one over-deadline query
+    cannot block the wave.  Cancellation granularity is one level step:
+    that is the natural preemption point of the lock-step loop (the device
+    dispatch itself is never interrupted).
     """
     S = eng.n_slots
     busy = [False] * S
@@ -328,8 +358,18 @@ def drive_wave(eng: MSEngine,
         st, live_dev = eng.level_step(st)
         live = np.asarray(live_dev)
         for slot in range(S):
-            if busy[slot] and not live[slot]:
+            if not busy[slot]:
+                continue
+            if not live[slot]:
                 on_converged(slot, np.asarray(eng.levels_of(st, slot)))
+                busy[slot] = False
+            elif should_harvest is not None and should_harvest(slot):
+                # harvest mid-flight: hand back the partial levels and free
+                # the slot; its stale column is overwritten by the next
+                # insert_batch (until then its frontier bits cost only the
+                # union queue a few extra live sets — never correctness)
+                if on_harvested is not None:
+                    on_harvested(slot, np.asarray(eng.levels_of(st, slot)))
                 busy[slot] = False
         steps += 1
         if max_steps is not None and steps > max_steps:
@@ -353,7 +393,8 @@ class _MSLocals(NamedTuple):
 
 def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
                     qcap: int, *, spmm_w=None,
-                    track_sigma: bool = False) -> Callable:
+                    track_sigma: bool = False,
+                    gather: Callable | None = None) -> Callable:
     """Build ``locals_for(dev) -> _MSLocals`` closing over one shard's BVSS
     views.  State fields here are LOCAL: levels (rps+1, S), F (n_fwords, S)
     global replica, Q (qcap,), count/cont scalars, col_lvl (S,).
@@ -371,6 +412,8 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
     lwords = rps // 32
     all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
     weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    if gather is None:
+        gather = frontier_all_gather
 
     def locals_for(dev: ShardedBVSSDevice) -> _MSLocals:
         compact = make_compactor(dev, p.num_vss, qcap)
@@ -435,7 +478,7 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
             advanced = global_any(new.any(axis=0), axis)     # (S,)
             # the one cross-device term per level: refresh every shard's
             # global frontier replica from the per-shard new words
-            F = jax.lax.all_gather(fw, axis, tiled=True)     # (n_fwords, S)
+            F = gather(fw, axis)                             # (n_fwords, S)
             st = st._replace(F=F, col_lvl=st.col_lvl + advanced)
             return requeue(st)
 
@@ -520,7 +563,8 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
 
 def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
                             buckets: int, spmm_w=None,
-                            track_sigma: bool = False) -> MSEngine:
+                            track_sigma: bool = False,
+                            gather: Callable | None = None) -> MSEngine:
     """Host-driven wave surface over the shard_map'd local ops: every state
     field gains a leading shard axis; each public fn is one jitted
     shard_map dispatch."""
@@ -535,7 +579,7 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
     widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
     locals_for = _make_ms_locals(p, S, spmm, widths, qcap, spmm_w=spmm_w,
-                                 track_sigma=track_sigma)
+                                 track_sigma=track_sigma, gather=gather)
 
     state_spec = state_specs(axis, track_sigma=track_sigma)
     dev_specs = problem_specs(axis)

@@ -29,6 +29,7 @@ from jax.sharding import Mesh
 from repro.core.bfs import BlestProblem, make_engine
 from repro.core.bvss import BVSS, build_bvss, build_sharded_bvss
 from repro.core.ordering import auto_order
+from repro.errors import BlestError, check_source
 from repro.graphs import Graph
 
 # paper §5: fixed threshold for switching to lazy vertex updates
@@ -56,7 +57,9 @@ class PreparedBFS:
 
     def levels(self, src: int) -> np.ndarray:
         """BFS levels in the caller's (original) vertex ids."""
-        assert self._fn is not None, "PreparedBFS built without an engine"
+        if self._fn is None:
+            raise BlestError("PreparedBFS built without an engine")
+        src = check_source(src, self.graph.n)
         lv = np.asarray(self._fn(int(self.perm[src])))
         return lv[self.perm]
 

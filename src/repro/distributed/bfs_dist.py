@@ -48,6 +48,20 @@ def bfs_mesh(n_devices: int | None = None, axis: str = BFS_AXIS) -> Mesh:
     return Mesh(devices, (axis,))
 
 
+def frontier_all_gather(fw_local, axis: str = BFS_AXIS):
+    """The ONE cross-device collective of the level loop: all-gather this
+    shard's freshly packed σ-bit frontier words into the global frontier
+    replica (tiled, so shard k contributes words [k·lwords, (k+1)·lwords)).
+
+    Every mesh-native engine (``core/bfs.py``, ``core/multi_source.py``)
+    routes its frontier exchange through this function, which makes it the
+    documented fault seam for collective failures: the chaos gauntlet
+    (``serve/faults.py``) substitutes a wrapper that zeroes a shard's
+    segment — a stalled/dropped peer — and the verify-mode sampling policy
+    must catch the divergence (DESIGN §2.7)."""
+    return jax.lax.all_gather(fw_local, axis, tiled=True)
+
+
 def problem_specs(axis: str = BFS_AXIS) -> tuple[P, P, P]:
     """PartitionSpecs of the shard-stacked problem arrays
     ``(masks, row_ids, virtual_to_real)`` (leading axis = shard)."""

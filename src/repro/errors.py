@@ -1,0 +1,109 @@
+"""Typed error hierarchy of the BLEST stack (DESIGN §2.7).
+
+Every ingress path — graph construction (``graphs/csr.py``), preparation
+(``core/policy.prepare``), the serving verbs (``repro.serve``) and the
+launchers — raises these instead of bare ``assert``s, so validation
+survives ``python -O`` (a bare ``assert`` is compiled away under ``-O``;
+a load-bearing one is a latent silent-wrong-answer bug).  The CI ``chaos``
+workflow runs an ``-O`` smoke lane to prove the property holds.
+
+Hierarchy::
+
+    BlestError
+    ├── GraphValidationError   malformed graph / out-of-range source ids
+    ├── AdmissionError         multi-tenant quota or memory budget refusal
+    ├── DeadlineExceeded       a query outlived its per-request budget
+    └── KernelFaultError       device result failed an oracle cross-check
+
+``DeadlineExceeded`` is only *raised* when a caller demands a complete
+answer; the serving tier normally degrades to a partial
+``serve.TimeoutResult`` instead (ISSUE: bounded latency, not a hang).
+``KernelFaultError`` is what the verify-mode sampling policy
+(``serve.session_manager``) raises internally when a wave result diverges
+from the ``kernels/ref.py`` oracle — the session is quarantined and the
+query re-served on the reference path, so callers see a degraded-but-
+correct answer plus a structured warning, never the wrong levels.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class BlestError(Exception):
+    """Base class of every typed error the BLEST stack raises."""
+
+
+class GraphValidationError(BlestError, ValueError):
+    """A graph, permutation or source id failed ingress validation."""
+
+
+class AdmissionError(BlestError):
+    """A request was refused at admission (quota / byte budget / slot
+    pool exhausted).  Carries a machine-readable ``reason`` code."""
+
+    def __init__(self, message: str, *, reason: str = "rejected"):
+        super().__init__(message)
+        self.reason = reason
+
+
+class DeadlineExceeded(BlestError, TimeoutError):
+    """A query exceeded its per-request deadline."""
+
+
+class KernelFaultError(BlestError):
+    """A device kernel result failed verification against its oracle."""
+
+
+def check_source(src: int, n: int, *, what: str = "source") -> int:
+    """Validate one vertex id against ``[0, n)`` and return it as int.
+
+    Rejects bool (a silent 0/1 coercion), non-integral values, and ids
+    outside the vertex range — including NEGATIVE ids, which NumPy fancy
+    indexing would otherwise silently wrap (``perm[-1]`` is the last
+    vertex, not an error: the exact silent-wrong-answer bug this guards).
+    """
+    if isinstance(src, (bool, np.bool_)) or \
+            not isinstance(src, (int, np.integer)):
+        raise GraphValidationError(
+            f"{what} must be an integer vertex id, got "
+            f"{type(src).__name__} {src!r}")
+    s = int(src)
+    if not 0 <= s < n:
+        raise GraphValidationError(
+            f"{what} {s} out of range for a graph with {n} vertices "
+            f"(valid ids are 0..{n - 1})")
+    return s
+
+
+def check_sources(sources, n: int, *, what: str = "sources") -> list[int]:
+    """Validate a sequence of vertex ids (see :func:`check_source`).
+
+    Arrays are validated vectorised; generic sequences element-by-element
+    (so a stray bool / float / string in a Python list is caught before
+    ``np.asarray`` silently coerces it)."""
+    if isinstance(sources, np.ndarray):
+        arr = sources
+        if arr.ndim != 1:
+            raise GraphValidationError(
+                f"{what} must be a 1-D sequence of vertex ids, got shape "
+                f"{arr.shape}")
+        if arr.size == 0:
+            return []
+        if arr.dtype == np.bool_ or \
+                not np.issubdtype(arr.dtype, np.integer):
+            raise GraphValidationError(
+                f"{what} must be integer vertex ids, got dtype {arr.dtype}")
+        if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= n):
+            bad = arr[(arr < 0) | (arr >= n)]
+            raise GraphValidationError(
+                f"{what} contain out-of-range ids {bad[:8].tolist()} for a "
+                f"graph with {n} vertices (valid ids are 0..{n - 1})")
+        return [int(s) for s in arr]
+    try:
+        items = list(sources)
+    except TypeError as e:
+        raise GraphValidationError(
+            f"{what} must be a sequence of vertex ids, got "
+            f"{type(sources).__name__}") from e
+    return [check_source(s, n, what=f"{what}[{i}]")
+            for i, s in enumerate(items)]

@@ -4,6 +4,12 @@ A ``Graph`` stores a simple directed graph in CSR (out-neighbour) form and
 lazily materialises the in-neighbour (CSC / transposed CSR) view that the
 pull-based BFS pipeline consumes.  All construction is host-side NumPy; the
 device-facing structures (BVSS, bit-adjacency) are built from these arrays.
+
+Construction VALIDATES the CSR invariants (shape, monotone ``indptr``,
+in-range ``indices``, integer dtypes) and raises
+:class:`repro.errors.GraphValidationError` with a descriptive message —
+not a bare ``assert``, so a malformed graph is rejected even under
+``python -O`` (DESIGN §2.7).
 """
 from __future__ import annotations
 
@@ -11,6 +17,8 @@ import dataclasses
 from functools import cached_property
 
 import numpy as np
+
+from repro.errors import GraphValidationError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,8 +30,41 @@ class Graph:
     indices: np.ndarray  # (m,)  int32, out-neighbour lists, sorted per row
 
     def __post_init__(self):
-        assert self.indptr.shape == (self.n + 1,)
-        assert self.indptr[0] == 0 and self.indptr[-1] == len(self.indices)
+        if not isinstance(self.n, (int, np.integer)) or self.n < 0:
+            raise GraphValidationError(
+                f"vertex count n must be a non-negative integer, got "
+                f"{self.n!r}")
+        indptr = np.asarray(self.indptr)
+        indices = np.asarray(self.indices)
+        if not np.issubdtype(indptr.dtype, np.integer):
+            raise GraphValidationError(
+                f"indptr must be an integer array, got dtype {indptr.dtype}")
+        if not np.issubdtype(indices.dtype, np.integer):
+            raise GraphValidationError(
+                f"indices must be an integer array, got dtype "
+                f"{indices.dtype}")
+        if indptr.shape != (self.n + 1,):
+            raise GraphValidationError(
+                f"indptr has shape {indptr.shape}, expected ({self.n + 1},) "
+                f"for a graph with n={self.n} vertices")
+        if indptr[0] != 0:
+            raise GraphValidationError(
+                f"indptr[0] must be 0, got {int(indptr[0])}")
+        if indptr[-1] != len(indices):
+            raise GraphValidationError(
+                f"indptr[-1]={int(indptr[-1])} does not match "
+                f"len(indices)={len(indices)}")
+        if len(indptr) > 1 and (np.diff(indptr) < 0).any():
+            bad = int(np.flatnonzero(np.diff(indptr) < 0)[0])
+            raise GraphValidationError(
+                f"indptr must be non-decreasing; decreases at row {bad} "
+                f"({int(indptr[bad])} -> {int(indptr[bad + 1])})")
+        if len(indices) and (int(indices.min()) < 0
+                             or int(indices.max()) >= self.n):
+            bad_vals = indices[(indices < 0) | (indices >= self.n)]
+            raise GraphValidationError(
+                f"indices contain out-of-range vertex ids "
+                f"{bad_vals[:8].tolist()} (valid ids are 0..{self.n - 1})")
 
     @property
     def m(self) -> int:
@@ -55,10 +96,29 @@ class Graph:
         t_indptr, t_indices = self.t_csr
         return Graph(self.n, t_indptr, t_indices)
 
+    def _check_perm(self, perm: np.ndarray) -> np.ndarray:
+        """Validate that ``perm`` is a permutation of 0..n-1."""
+        raw = np.asarray(perm)
+        if raw.shape != (self.n,):
+            raise GraphValidationError(
+                f"perm has shape {raw.shape}, expected ({self.n},)")
+        if raw.size and not np.issubdtype(raw.dtype, np.integer):
+            raise GraphValidationError(
+                f"perm must be an integer array, got dtype {raw.dtype}")
+        perm = raw.astype(np.int64)
+        if self.n:
+            oob = ((perm < 0) | (perm >= self.n)).any()
+            if oob or (np.bincount(perm if not oob else
+                                   np.clip(perm, 0, self.n - 1),
+                                   minlength=self.n) != 1).any():
+                raise GraphValidationError(
+                    "perm is not a permutation of 0..n-1 (duplicate, "
+                    "negative or out-of-range entries)")
+        return perm
+
     def permute(self, perm: np.ndarray) -> "Graph":
         """Relabel vertices: new id of old vertex v is ``perm[v]``."""
-        perm = np.asarray(perm, dtype=np.int64)
-        assert perm.shape == (self.n,)
+        perm = self._check_perm(perm)
         inv = np.empty_like(perm)
         inv[perm] = np.arange(self.n)
         # Row u of the new graph is row inv[u] of the old one, with relabelled
@@ -77,7 +137,7 @@ class Graph:
 
     def permute_fast(self, perm: np.ndarray) -> "Graph":
         """Vectorised relabel (equivalent to :meth:`permute`)."""
-        perm = np.asarray(perm, dtype=np.int64)
+        perm = self._check_perm(perm)
         src = perm[src_of_edges(self)]
         dst = perm[self.indices.astype(np.int64)]
         return from_edges(self.n, src, dst, dedup=False)

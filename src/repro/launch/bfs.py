@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import reference_bfs
 from repro.core.ordering import social_like_report
 from repro.core.policy import BVSS_ENGINES, prepare
+from repro.errors import KernelFaultError
 from repro.graphs import generators as gen
 
 
@@ -86,36 +87,47 @@ def ensure_devices(n: int, argv, *, module: str = "repro.launch.bfs"
 
 
 def run_service(g, mesh, args) -> None:
-    """--service: wave-batched serving through GraphSession."""
-    from repro.serve import GraphSession
+    """--service: hardened wave-batched serving through the multi-tenant
+    GraphSessionManager (admission, deadlines, verify-mode sampling)."""
+    from repro.serve import GraphSessionManager, TimeoutResult
     variant = ENGINE_VARIANTS[args.engine]
-    sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
-                        order=variant["order"], engine=variant["engine"],
-                        mesh=mesh)
+    mgr = GraphSessionManager(verify_fraction=args.verify_fraction)
+    sess = mgr.open_session(
+        "cli", g, max_batch=args.max_batch, w=512, seed=args.seed,
+        order=variant["order"], engine=variant["engine"], mesh=mesh)
     print(f"[bfs] session up: ordering={sess.ordering} "
           f"engine={sess.engine_name} "
           f"compression={sess.bvss.compression_ratio():.3f} "
-          f"preprocess={sess.preprocess_s:.2f}s")
+          f"preprocess={sess.preprocess_s:.2f}s "
+          f"cost={mgr.bytes_used() / 1e6:.1f}MB "
+          f"verify_fraction={args.verify_fraction}")
     rng = np.random.default_rng(args.seed)
     queries = [int(q) for q in rng.integers(0, g.n, args.sources)]
     sess.levels(queries[0])                      # warm both paths
     sess.levels_batch(queries[: min(2, len(queries))])
     t0 = time.time()
-    lvs = sess.levels_batch(queries)
+    lvs = mgr.levels_batch("cli", queries, deadline_s=args.deadline_s)
     t_wave = time.time() - t0
     t0 = time.time()
     seq = [sess.levels(q) for q in queries]
     t_seq = time.time() - t0
+    n_partial = sum(isinstance(lv, TimeoutResult) for lv in lvs)
     if args.verify:
         for q, lv, lv_seq in zip(queries, lvs, seq):
             ref = reference_bfs(g, q)
-            assert (lv == ref).all(), f"wave mismatch from source {q}"
-            assert (lv_seq == ref).all(), f"seq mismatch from source {q}"
+            if isinstance(lv, TimeoutResult):
+                continue             # partial by deadline, not comparable
+            if not (lv == ref).all():
+                raise KernelFaultError(f"wave mismatch from source {q}")
+            if not (lv_seq == ref).all():
+                raise KernelFaultError(f"seq mismatch from source {q}")
+    st = mgr.stats()
     print(f"[bfs] service: {len(queries)} queries, "
           f"wave={t_wave * 1e3:.1f}ms "
           f"sequential={t_seq * 1e3:.1f}ms "
           f"speedup={t_seq / max(t_wave, 1e-9):.2f}x "
-          f"(max_batch={args.max_batch})"
+          f"(max_batch={args.max_batch}, partial={n_partial}, "
+          f"verified={st['verified']}, quarantines={st['quarantines']})"
           + ("; VERIFIED vs oracle" if args.verify else ""))
 
 
@@ -137,6 +149,15 @@ def main(argv=None):
                          "GraphSession instead of sequential BFS runs")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="wave slot-pool width for --service")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="--service per-call deadline: queries exceeding "
+                         "it return partial TimeoutResults instead of "
+                         "blocking the wave")
+    ap.add_argument("--verify-fraction", type=float, default=0.0,
+                    help="--service verify-mode: fraction of wave results "
+                         "cross-checked against the host oracle (failing "
+                         "sessions are quarantined and re-served on the "
+                         "reference path)")
     ap.add_argument("--devices", type=int, default=1,
                     help="row-shard the BFS over an N-device 1-D mesh "
                          "(simulated via the host-platform device count "
@@ -189,7 +210,10 @@ def main(argv=None):
         times.append(time.time() - t0)
         if args.verify:
             ref = reference_bfs(g, int(s))
-            assert (lv == ref).all(), f"mismatch from source {s}"
+            if not (lv == ref).all():
+                raise KernelFaultError(
+                    f"{args.engine} levels diverge from the oracle from "
+                    f"source {s}")
     reached = int((lv != np.iinfo(np.int32).max).sum())
     print(f"[bfs] {args.engine}: {np.mean(times) * 1e3:.2f} ms/BFS "
           f"(median {np.median(times) * 1e3:.2f}) over {args.sources} "

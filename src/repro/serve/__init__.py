@@ -1,4 +1,10 @@
 from .engine import Completion, Request, ServeEngine
+from .faults import NO_FAULTS, FaultPlan
 from .graph_session import GraphSession
+from .session_manager import (DegradedServiceWarning, GraphSessionManager,
+                              TenantQuota, TimeoutResult,
+                              session_cost_bytes)
 
-__all__ = ["Completion", "Request", "ServeEngine", "GraphSession"]
+__all__ = ["Completion", "Request", "ServeEngine", "GraphSession",
+           "FaultPlan", "NO_FAULTS", "GraphSessionManager", "TenantQuota",
+           "TimeoutResult", "DegradedServiceWarning", "session_cost_bytes"]

@@ -1,0 +1,126 @@
+"""Fault injection for the hardened serving tier (DESIGN §2.7).
+
+The BLEST engines capture their kernels in jitted closures at build time,
+so faults are injected the same way real substitutions happen: a
+:class:`FaultPlan` is handed to the engine *builder* and its wrappers are
+baked into the traced computation — deterministic, retrace-free, and
+exactly at the documented seams of :func:`repro.core.multi_source.
+make_ms_engine` (``spmm_impl`` / ``spmm_w_impl`` / ``gather_impl``).
+
+Three fault families, one per seam (style after ``ft/manager.py``'s
+deterministic injection):
+
+* ``corrupt_spmm_tile`` — the Boolean bit-SpMM returns a corrupted output
+  tile: the first queued VSS tile's popcounts are forced positive, so its
+  rows are "discovered" a level early.  A silent wrong answer unless the
+  verify-mode sampling policy (``serve.session_manager``) catches it.
+* ``nan_sigma`` — the weighted tile product NaN-poisons the σ path-count
+  float channel (a flush-to-NaN matrix unit fault).  Betweenness scores
+  go NaN; the finite guard must degrade to the host oracle.
+* ``stall_shard`` — shard k's segment of the frontier-word all-gather is
+  zeroed (a stalled / dropped peer): vertices it owns stop propagating,
+  so other shards under-discover.  Mesh sessions only.
+
+Every injected fault must surface as a typed error or a degraded-but-
+correct result — never a silent wrong answer.  The CI ``chaos`` job runs
+the full gauntlet (``tests/test_faults.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.distributed.bfs_dist import frontier_all_gather
+from repro.kernels import bvss_spmm, bvss_spmm_w
+from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_w_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static description of the faults to bake into an engine build.
+
+    The default plan injects nothing and adds nothing to the trace; a
+    plan is immutable so one engine build corresponds to one fault
+    configuration (no mid-flight mutation can desynchronise host
+    bookkeeping from the compiled computation).
+    """
+
+    #: corrupt the Boolean bit-SpMM: force the first queued tile's
+    #: popcounts positive (rows discovered a level early — wrong levels)
+    corrupt_spmm_tile: bool = False
+    #: NaN-poison the weighted σ tile product (Brandes float channel)
+    nan_sigma: bool = False
+    #: zero shard k's segment of the frontier-word all-gather (stalled
+    #: peer); only consulted by mesh-native engines
+    stall_shard: int | None = None
+
+    @property
+    def injects(self) -> bool:
+        return (self.corrupt_spmm_tile or self.nan_sigma
+                or self.stall_shard is not None)
+
+    # -- seam wrappers ---------------------------------------------------
+    def wrap_spmm(self, base: Callable) -> Callable:
+        if not self.corrupt_spmm_tile:
+            return base
+
+        def faulty_spmm(masks, fbytes, *, sigma=8, **kw):
+            counts = base(masks, fbytes, sigma=sigma, **kw)
+            # corrupt tile 0: every row of the first queued VSS reads as
+            # adjacent to the frontier, whatever the masks said
+            return counts.at[0].set(jnp.maximum(counts[0], 1))
+
+        return faulty_spmm
+
+    def wrap_spmm_w(self, base: Callable) -> Callable:
+        if not self.nan_sigma:
+            return base
+
+        def faulty_spmm_w(masks, xvals, *, sigma=8, **kw):
+            out = base(masks, xvals, sigma=sigma, **kw)
+            # poison only where the tile contributed: NaN * 0 stays 0 on
+            # rows the pull never touched, which is exactly how a bad
+            # matrix-unit lane corrupts real traffic only
+            return out * jnp.where(out != 0, jnp.nan, 1.0).astype(out.dtype)
+
+        return faulty_spmm_w
+
+    def wrap_gather(self) -> Callable | None:
+        if self.stall_shard is None:
+            return None
+        k = int(self.stall_shard)
+
+        def stalled_gather(fw_local, axis):
+            full = frontier_all_gather(fw_local, axis)
+            lw = fw_local.shape[0]
+            # shard k's words arrive zeroed: its frontier never reaches
+            # the other shards' pull operands
+            return full.at[k * lw:(k + 1) * lw].set(
+                jnp.zeros_like(full[k * lw:(k + 1) * lw]))
+
+        return stalled_gather
+
+    # -- engine-builder kwargs ------------------------------------------
+    def engine_overrides(self, *, use_kernel: bool = True) -> dict:
+        """kwargs for :func:`repro.core.multi_source.make_ms_engine` (and
+        friends) that bake this plan's faults into the build.  An empty
+        dict when the plan injects nothing, so the unfaulted path shares
+        the session's ordinary jit cache."""
+        if not self.injects:
+            return {}
+        spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+        spmm_w = bvss_spmm_w if use_kernel else bvss_spmm_w_ref
+        out: dict = {}
+        if self.corrupt_spmm_tile:
+            out["spmm_impl"] = self.wrap_spmm(spmm)
+        if self.nan_sigma:
+            out["spmm_w_impl"] = self.wrap_spmm_w(spmm_w)
+        if self.stall_shard is not None:
+            out["gather_impl"] = self.wrap_gather()
+        return out
+
+
+#: the no-op plan every un-faulted session uses
+NO_FAULTS = FaultPlan()

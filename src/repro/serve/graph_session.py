@@ -56,8 +56,10 @@ from repro.analytics import (ExtremesReport, betweenness_centrality,
 from repro.core.bfs import BlestProblem
 from repro.core.multi_source import drive_wave, make_ms_engine
 from repro.core.policy import PreparedBFS, prepare
+from repro.errors import check_source, check_sources
 from repro.graphs import Graph
 from repro.kernels.ref import normalize_labels
+from repro.serve.faults import NO_FAULTS, FaultPlan
 
 
 class GraphSession:
@@ -73,7 +75,8 @@ class GraphSession:
                  lazy_threshold: float | None = None, order: bool = True,
                  engine: str | None = None, use_kernel: bool = True,
                  max_steps: int | None = None, mesh: Mesh | None = None,
-                 mesh_axis: str = "data"):
+                 mesh_axis: str = "data",
+                 fault_plan: FaultPlan | None = None):
         t0 = time.time()
         self.prepared: PreparedBFS = prepare(
             g, sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
@@ -89,8 +92,13 @@ class GraphSession:
         self.max_batch = int(max_batch)
         self._use_kernel = use_kernel
         self._mesh_axis = mesh_axis
+        # fault seams (DESIGN §2.7): a FaultPlan's wrappers are baked into
+        # every engine this session builds; the default plan injects
+        # nothing and adds nothing to the trace
+        self.fault_plan = fault_plan if fault_plan is not None else NO_FAULTS
+        self._seams = self.fault_plan.engine_overrides(use_kernel=use_kernel)
         self._ms = make_ms_engine(self._problem, self.max_batch,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, **self._seams)
         # analytics problems/engines, built on first use and cached so
         # repeat queries never recompile (DESIGN §2.6)
         self._analytics_cache: dict = {}
@@ -133,24 +141,38 @@ class GraphSession:
     # ------------------------------------------------------------------
     def levels(self, src: int) -> np.ndarray:
         """Single-source BFS levels in caller ids (fused device loop)."""
-        return self.prepared.levels(int(src))
+        return self.prepared.levels(src)
 
-    def levels_batch(self, sources: Sequence[int]) -> list[np.ndarray]:
+    def levels_batch(self, sources: Sequence[int], *,
+                     should_harvest=None, on_harvested=None
+                     ) -> list[np.ndarray | None]:
         """Serve concurrent level queries as batched multi-source waves.
 
         Returns one level array per query, aligned with ``sources``, in
         the caller's vertex ids.  More queries than ``max_batch`` are
         queued and refilled into freed slots mid-flight.
+
+        ``should_harvest(i)`` / ``on_harvested(i, partial_levels)`` are
+        the per-request cancellation hooks (DESIGN §2.7), in REQUEST
+        INDEX space (``i`` indexes ``sources``): after every lock-step
+        level each still-running request is offered to ``should_harvest``;
+        answering True cancels it mid-flight — ``on_harvested`` receives
+        the partial caller-id levels (unreached vertices ``INF``), the
+        returned list carries ``None`` at that index, and the freed slot
+        is refilled from the queue.  Singleton traffic normally takes the
+        fused single-source engine, which cannot be preempted, so a
+        singleton WITH hooks rides the wave pool instead.
         """
-        srcs = [int(s) for s in sources]
+        srcs = check_sources(sources, self.n)
         if not srcs:
             return []
-        if len(srcs) == 1:  # singleton traffic: no batching win available
+        if len(srcs) == 1 and should_harvest is None:
+            # singleton traffic: no batching win available
             return [self.levels(srcs[0])]
         perm = self.perm
         queue = deque(enumerate(srcs))
         owner: list[int | None] = [None] * self.max_batch
-        results: dict[int, np.ndarray] = {}
+        results: dict[int, np.ndarray | None] = {}
 
         def next_source(slot: int) -> int | None:
             if not queue:
@@ -163,9 +185,23 @@ class GraphSession:
             results[owner[slot]] = lv[perm]
             owner[slot] = None
 
+        _should = _harvested = None
+        if should_harvest is not None:
+            def _should(slot: int) -> bool:
+                rid = owner[slot]
+                return rid is not None and bool(should_harvest(rid))
+
+            def _harvested(slot: int, lv: np.ndarray) -> None:
+                rid = owner[slot]
+                if on_harvested is not None:
+                    on_harvested(rid, lv[perm])
+                results[rid] = None
+                owner[slot] = None
+
         limit = self.max_steps if self.max_steps is not None else \
             (len(srcs) + self.max_batch) * (self.n + 1)
-        drive_wave(self._ms, next_source, on_converged, max_steps=limit)
+        drive_wave(self._ms, next_source, on_converged, max_steps=limit,
+                   should_harvest=_should, on_harvested=_harvested)
         return [results[i] for i in range(len(srcs))]
 
     # ------------------------------------------------------------------
@@ -182,7 +218,7 @@ class GraphSession:
         if sources is None:
             internal = self.perm.astype(np.int64)   # caller v -> perm[v]
         else:
-            srcs = [int(s) for s in sources]
+            srcs = check_sources(sources, self.n)
             if not srcs:
                 return np.zeros(0, dtype=np.float64)
             internal = self.perm[np.asarray(srcs)].astype(np.int64)
@@ -226,7 +262,7 @@ class GraphSession:
         if "sym_ms" not in self._analytics_cache:
             self._analytics_cache["sym_ms"] = make_ms_engine(
                 self._sym_problem(), self.max_batch,
-                use_kernel=self._use_kernel)
+                use_kernel=self._use_kernel, **self._seams)
         return self._analytics_cache["sym_ms"]
 
     def _sym_sss(self):
@@ -270,7 +306,8 @@ class GraphSession:
         if key not in self._analytics_cache:
             from repro.analytics import make_betweenness
             self._analytics_cache[key] = make_betweenness(
-                self._problem, width, use_kernel=self._use_kernel)
+                self._problem, width, use_kernel=self._use_kernel,
+                spmm_w_impl=self._seams.get("spmm_w_impl"))
         return self._analytics_cache[key]
 
     def components(self) -> np.ndarray:
@@ -288,7 +325,7 @@ class GraphSession:
         """Eccentricity of each queried vertex (caller ids in, one value
         per source out), batched through the fused multi-source engine on
         the symmetrised problem."""
-        srcs = np.asarray([int(s) for s in sources], dtype=np.int64)
+        srcs = np.asarray(check_sources(sources, self.n), dtype=np.int64)
         if len(srcs) == 0:
             return np.zeros(0, dtype=np.int64)
         internal = self.perm[srcs]
@@ -327,7 +364,7 @@ class GraphSession:
         over the recorded per-level tile queues.  Mesh-native on a
         sharded session: both phases run under shard_map on the
         session's own row-sharded problem (DESIGN §2.6)."""
-        srcs = np.asarray([int(s) for s in sources], dtype=np.int64)
+        srcs = np.asarray(check_sources(sources, self.n), dtype=np.int64)
         if len(srcs) == 0:
             return np.zeros(self.n, dtype=np.float64)
         internal = self.perm[srcs].astype(np.int32)

@@ -1,0 +1,221 @@
+"""The fault-injection gauntlet (DESIGN §2.7, the CI ``chaos`` job).
+
+Each scenario injects a fault at a documented engine seam via
+:class:`repro.serve.FaultPlan` and asserts the hardened serving tier's
+contract: **every fault surfaces as a typed error or a degraded-but-
+correct answer — never a silent wrong one**.
+
+Scenario matrix:
+
+1. corrupted ``bvss_spmm`` tile  → verify-mode catches, session is
+   quarantined, queries re-serve correctly on the reference path;
+2. NaN-poisoned σ channel        → the finite guard degrades betweenness
+   to the host Brandes oracle;
+3. stalled shard in the frontier all-gather (mesh session) → verify-mode
+   catches the under-discovery, degraded-but-correct re-serve;
+4. over-quota request            → AdmissionError with a reason code;
+5. expired deadline              → partial TimeoutResult / typed
+   DeadlineExceeded, never a hang.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro.core import reference_bfs
+from repro.errors import AdmissionError, DeadlineExceeded
+from repro.graphs import generators as gen
+from repro.kernels.ref import betweenness_ref
+from repro.serve import (DegradedServiceWarning, FaultPlan, GraphSession,
+                         GraphSessionManager, NO_FAULTS, TenantQuota,
+                         TimeoutResult)
+
+QUERIES = [0, 5, 19, 64]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.rmat(7, 8, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# plan plumbing
+# ---------------------------------------------------------------------------
+def test_no_fault_plan_is_free():
+    assert not NO_FAULTS.injects
+    assert NO_FAULTS.engine_overrides() == {}
+    plan = FaultPlan(corrupt_spmm_tile=True)
+    assert plan.injects
+    assert set(plan.engine_overrides()) == {"spmm_impl"}
+    both = FaultPlan(nan_sigma=True, stall_shard=1)
+    assert set(both.engine_overrides()) == {"spmm_w_impl", "gather_impl"}
+
+
+def test_faulted_session_actually_diverges(graph):
+    """Sanity for the gauntlet itself: the corrupt-tile fault DOES change
+    answers (otherwise scenario 1 would be vacuous)."""
+    sess = GraphSession(graph, max_batch=2,
+                        fault_plan=FaultPlan(corrupt_spmm_tile=True))
+    diverged = sum(
+        not np.array_equal(lv, reference_bfs(graph, q))
+        for q, lv in zip(QUERIES, sess.levels_batch(QUERIES)))
+    assert diverged > 0
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: corrupted bit-SpMM tile
+# ---------------------------------------------------------------------------
+def test_corrupt_tile_quarantined_and_reserved_correctly(graph):
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("bad", graph, max_batch=2,
+                     fault_plan=FaultPlan(corrupt_spmm_tile=True))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = mgr.levels_batch("bad", QUERIES)
+    # caller still gets CORRECT levels (reference re-serve) ...
+    for q, lv in zip(QUERIES, out):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+    # ... with a structured warning and a quarantine on the books
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    st = mgr.stats()
+    assert st["quarantines"] == 1
+    assert st["degraded_serves"] >= 1
+    rec = mgr._sessions["bad"]
+    assert rec.quarantined and "diverge" in rec.quarantine_reason
+    # subsequent calls skip the faulty engine entirely
+    for q, lv in zip(QUERIES, mgr.levels_batch("bad", QUERIES)):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+
+
+def test_unverified_faulty_session_is_the_counterfactual(graph):
+    """verify_fraction=0 knowingly serves the corruption — documenting
+    that the sampling policy (not luck) is what closes the hole."""
+    mgr = GraphSessionManager(verify_fraction=0.0)
+    mgr.open_session("bad", graph, max_batch=2,
+                     fault_plan=FaultPlan(corrupt_spmm_tile=True))
+    out = mgr.levels_batch("bad", QUERIES)
+    assert any(not np.array_equal(lv, reference_bfs(graph, q))
+               for q, lv in zip(QUERIES, out))
+    assert mgr.stats()["quarantines"] == 0
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: NaN-poisoned sigma channel (weighted Brandes path)
+# ---------------------------------------------------------------------------
+def test_nan_sigma_degrades_betweenness_to_oracle(graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("poisoned", graph, max_batch=2,
+                     fault_plan=FaultPlan(nan_sigma=True))
+    srcs = [0, 5, 19]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        bc = mgr.betweenness("poisoned", srcs)
+    assert np.isfinite(bc).all()
+    np.testing.assert_allclose(bc, betweenness_ref(graph, srcs), rtol=1e-6)
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    st = mgr.stats()
+    assert st["quarantines"] == 1
+    assert "σ" in mgr._sessions["poisoned"].quarantine_reason
+    # the quarantine also protects the plain level verbs afterwards
+    for q, lv in zip(QUERIES, mgr.levels_batch("poisoned", QUERIES)):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+
+
+def test_nan_sigma_fault_actually_poisons(graph):
+    sess = GraphSession(graph, max_batch=2,
+                        fault_plan=FaultPlan(nan_sigma=True))
+    bc = sess.betweenness([0, 5])
+    assert not np.isfinite(bc).all()
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: stalled shard in the frontier-word all-gather (mesh)
+# ---------------------------------------------------------------------------
+def test_stalled_shard_caught_and_reserved_correctly(graph):
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("stalled", graph, max_batch=2, mesh=bfs_mesh(2),
+                     fault_plan=FaultPlan(stall_shard=1))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = mgr.levels_batch("stalled", QUERIES)
+    for q, lv in zip(QUERIES, out):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    assert mgr.stats()["quarantines"] == 1
+
+
+def test_stalled_shard_fault_actually_underdiscovers(graph):
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh
+    sess = GraphSession(graph, max_batch=2, mesh=bfs_mesh(2),
+                        fault_plan=FaultPlan(stall_shard=1))
+    diverged = sum(
+        not np.array_equal(lv, reference_bfs(graph, q))
+        for q, lv in zip(QUERIES, sess.levels_batch(QUERIES)))
+    assert diverged > 0
+
+
+# ---------------------------------------------------------------------------
+# scenario 4: over-quota request is refused, not queued
+# ---------------------------------------------------------------------------
+def test_over_quota_rejected_with_reason(graph):
+    mgr = GraphSessionManager(
+        default_quota=TenantQuota(max_sessions=1, max_inflight=2))
+    mgr.open_session("g", graph, max_batch=2)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.open_session("g2", graph, max_batch=2)
+    assert ei.value.reason == "tenant-sessions"
+    with pytest.raises(AdmissionError) as ei:
+        mgr.levels_batch("g", [0, 1, 2])
+    assert ei.value.reason == "inflight"
+    # the session itself is untouched by the rejections
+    np.testing.assert_array_equal(mgr.levels("g", 0),
+                                  reference_bfs(graph, 0))
+
+
+# ---------------------------------------------------------------------------
+# scenario 5: expired deadline degrades, never hangs
+# ---------------------------------------------------------------------------
+def test_expired_deadline_partial_or_typed_error(graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("g", graph, max_batch=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = mgr.levels_batch("g", QUERIES, deadline_s=0.0)
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    for q, r in zip(QUERIES, out):
+        assert isinstance(r, TimeoutResult) and not r.complete
+        ref = reference_bfs(graph, q)
+        got = r.levels != np.int32(np.iinfo(np.int32).max)
+        # the partial prefix is still oracle-exact
+        np.testing.assert_array_equal(r.levels[got], ref[got])
+    with pytest.raises(DeadlineExceeded):
+        mgr.levels_batch("g", QUERIES, deadline_s=0.0, on_deadline="raise")
+
+
+# ---------------------------------------------------------------------------
+# the gauntlet property: zero silent wrong answers
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("plan", [
+    FaultPlan(corrupt_spmm_tile=True),
+    FaultPlan(nan_sigma=True),
+], ids=["corrupt-tile", "nan-sigma"])
+def test_no_silent_wrong_answers(graph, plan):
+    """Under full verification every COMPLETE answer the manager returns
+    equals the oracle, fault or no fault — the central robustness claim."""
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("s", graph, max_batch=2, fault_plan=plan)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DegradedServiceWarning)
+        levels = mgr.levels_batch("s", QUERIES)
+        bc = mgr.betweenness("s", QUERIES)
+    for q, lv in zip(QUERIES, levels):
+        if isinstance(lv, TimeoutResult):
+            continue
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+    assert np.isfinite(bc).all()
+    np.testing.assert_allclose(bc, betweenness_ref(graph, QUERIES),
+                               rtol=1e-6)

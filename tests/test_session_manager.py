@@ -1,0 +1,272 @@
+"""GraphSessionManager: admission control, tenant quotas, the
+byte-budgeted LRU of prepared state, per-request deadlines with partial
+TimeoutResults, verify-mode sampling, and quarantine bookkeeping
+(DESIGN §2.7)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import reference_bfs
+from repro.errors import (AdmissionError, DeadlineExceeded,
+                          GraphValidationError)
+from repro.graphs import from_edges, generators as gen
+from repro.serve import (DegradedServiceWarning, GraphSessionManager,
+                         TenantQuota, TimeoutResult, session_cost_bytes)
+
+INF = np.int32(np.iinfo(np.int32).max)
+
+
+@pytest.fixture(scope="module")
+def rmat_graph():
+    return gen.rmat(7, 8, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# serving correctness through the manager
+# ---------------------------------------------------------------------------
+def test_serves_oracle_levels(rmat_graph):
+    g = rmat_graph
+    mgr = GraphSessionManager()
+    mgr.open_session("g", g, max_batch=3)
+    queries = [0, 5, 9, 20, 77]
+    for q, lv in zip(queries, mgr.levels_batch("g", queries)):
+        np.testing.assert_array_equal(lv, reference_bfs(g, q))
+    np.testing.assert_array_equal(mgr.levels("g", 9), reference_bfs(g, 9))
+
+
+def test_source_validation_through_manager(rmat_graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    with pytest.raises(GraphValidationError):
+        mgr.levels_batch("g", [0, -1])
+    with pytest.raises(GraphValidationError):
+        mgr.levels("g", rmat_graph.n)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_unknown_session_rejected(rmat_graph):
+    mgr = GraphSessionManager()
+    with pytest.raises(AdmissionError) as ei:
+        mgr.levels_batch("nope", [0])
+    assert ei.value.reason == "unknown-session"
+
+
+def test_duplicate_name_rejected(rmat_graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.open_session("g", rmat_graph)
+    assert ei.value.reason == "duplicate-name"
+
+
+def test_tenant_isolation(rmat_graph):
+    """One tenant must not see (or even probe) another's sessions."""
+    mgr = GraphSessionManager()
+    mgr.open_session("g", rmat_graph, tenant="alice", max_batch=2)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.levels_batch("g", [0], tenant="bob")
+    assert ei.value.reason == "unknown-session"
+    # alice still works
+    np.testing.assert_array_equal(
+        mgr.levels("g", 0, tenant="alice"), reference_bfs(rmat_graph, 0))
+
+
+def test_tenant_session_quota(rmat_graph):
+    mgr = GraphSessionManager(
+        default_quota=TenantQuota(max_sessions=1))
+    mgr.open_session("a", rmat_graph, max_batch=2)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.open_session("b", rmat_graph, max_batch=2)
+    assert ei.value.reason == "tenant-sessions"
+    # another tenant has its own allowance
+    mgr.open_session("b", rmat_graph, tenant="other", max_batch=2)
+
+
+def test_tenant_byte_quota(rmat_graph):
+    mgr = GraphSessionManager()
+    sess = mgr.open_session("probe", rmat_graph, max_batch=2)
+    cost = session_cost_bytes(sess)
+    mgr.close_session("probe")
+    mgr.set_quota("tiny", TenantQuota(max_bytes=cost // 2))
+    with pytest.raises(AdmissionError) as ei:
+        mgr.open_session("a", rmat_graph, tenant="tiny", max_batch=2)
+    assert ei.value.reason == "tenant-bytes"
+
+
+def test_inflight_quota(rmat_graph):
+    mgr = GraphSessionManager(
+        default_quota=TenantQuota(max_inflight=2))
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.levels_batch("g", [0, 1, 2])
+    assert ei.value.reason == "inflight"
+    assert len(mgr.levels_batch("g", [0, 1])) == 2
+
+
+# ---------------------------------------------------------------------------
+# byte-budgeted LRU of prepared state
+# ---------------------------------------------------------------------------
+def test_lru_eviction_under_byte_budget(rmat_graph):
+    g = rmat_graph
+    mgr0 = GraphSessionManager()
+    cost = session_cost_bytes(mgr0.open_session("probe", g, max_batch=2))
+
+    mgr = GraphSessionManager(byte_budget=int(cost * 2.5))
+    mgr.open_session("a", g, max_batch=2)
+    mgr.open_session("b", g, max_batch=2)
+    mgr.levels("a", 0)        # touch a: b becomes the LRU victim
+    mgr.open_session("c", g, max_batch=2)
+    assert "b" not in mgr and "a" in mgr and "c" in mgr
+    assert mgr.stats()["evictions"] == 1
+    assert mgr.bytes_used() <= mgr.byte_budget
+    # evicted session can be re-opened (re-prepared) at any time
+    mgr.open_session("b", g, max_batch=2)
+    assert mgr.stats()["evictions"] == 2
+
+
+def test_oversized_session_rejected_not_thrashed(rmat_graph):
+    mgr = GraphSessionManager(byte_budget=64)
+    with pytest.raises(AdmissionError) as ei:
+        mgr.open_session("huge", rmat_graph, max_batch=2)
+    assert ei.value.reason == "byte-budget"
+    assert mgr.stats()["sessions"] == 0
+
+
+def test_session_cost_uses_memory_model(rmat_graph):
+    mgr = GraphSessionManager()
+    sess = mgr.open_session("g", rmat_graph, max_batch=4)
+    cost = session_cost_bytes(sess)
+    assert cost >= sess.bvss.memory_bytes()["total"]
+    assert mgr.bytes_used() == cost
+    assert mgr.stats()["tenants"]["default"]["bytes"] == cost
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+def test_expired_deadline_returns_partial(rmat_graph):
+    g = rmat_graph
+    mgr = GraphSessionManager()
+    mgr.open_session("g", g, max_batch=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = mgr.levels_batch("g", [0, 5], deadline_s=0.0)
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    for q, r in zip([0, 5], out):
+        assert isinstance(r, TimeoutResult)
+        assert not r.complete
+        ref = reference_bfs(g, q)
+        # partial levels: every computed level matches the oracle...
+        got = r.levels != INF
+        np.testing.assert_array_equal(r.levels[got], ref[got])
+        # ...and the frontier is the oracle's depth-d shell
+        np.testing.assert_array_equal(
+            np.sort(r.frontier), np.flatnonzero(ref == r.depth))
+    assert mgr.stats()["timeouts"] == 2
+
+
+def test_deadline_partial_progress_by_level():
+    """A long path graph with a 0s deadline is harvested after ONE
+    lock-step level — the documented cancellation granularity."""
+    g = from_edges(60, np.arange(59), np.arange(1, 60))
+    mgr = GraphSessionManager()
+    mgr.open_session("path", g, max_batch=2, order=False)
+    [r] = mgr.levels_batch("path", [0], deadline_s=0.0)
+    assert isinstance(r, TimeoutResult)
+    assert r.depth == 1                       # one level, then harvested
+    assert int((r.levels != INF).sum()) == 2  # source + one neighbour
+
+
+def test_deadline_raise_mode(rmat_graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    with pytest.raises(DeadlineExceeded):
+        mgr.levels_batch("g", [0, 5], deadline_s=0.0, on_deadline="raise")
+
+
+def test_generous_deadline_serves_complete(rmat_graph):
+    g = rmat_graph
+    mgr = GraphSessionManager()
+    mgr.open_session("g", g, max_batch=2)
+    out = mgr.levels_batch("g", [0, 5], deadline_s=3600.0)
+    for q, lv in zip([0, 5], out):
+        assert not isinstance(lv, TimeoutResult)
+        np.testing.assert_array_equal(lv, reference_bfs(g, q))
+    assert mgr.stats()["timeouts"] == 0
+
+
+def test_deadline_does_not_block_other_queries():
+    """One over-deadline deep query is harvested; a shallow query in the
+    same wave still completes exactly."""
+    g = from_edges(60, np.arange(59), np.arange(1, 60))
+    mgr = GraphSessionManager()
+    mgr.open_session("path", g, max_batch=2, order=False)
+    clock = {"t": 0.0}
+    mgr._clock = lambda: clock["t"]
+
+    # budget 5 "seconds"; each level step costs 1; query 0 (depth 59)
+    # must get harvested, query 58 (depth 1) completes within budget
+    real = mgr._sessions["path"].session.levels_batch
+
+    def stepping(srcs, **kw):
+        orig_should = kw.get("should_harvest")
+
+        def should(i):
+            clock["t"] += 1.0
+            return orig_should(i)
+
+        if orig_should is not None:
+            kw["should_harvest"] = should
+        return real(srcs, **kw)
+
+    mgr._sessions["path"].session.levels_batch = stepping
+    out = mgr.levels_batch("path", [0, 58], deadline_s=5.0)
+    assert isinstance(out[0], TimeoutResult)
+    np.testing.assert_array_equal(out[1], reference_bfs(g, 58))
+
+
+# ---------------------------------------------------------------------------
+# verify-mode sampling / quarantine surface (healthy-path side; the
+# fault-injection side lives in tests/test_faults.py)
+# ---------------------------------------------------------------------------
+def test_verify_sampling_counts(rmat_graph):
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("g", rmat_graph, max_batch=3)
+    mgr.levels_batch("g", [0, 5, 9])
+    st = mgr.stats()
+    assert st["verified"] == 3
+    assert st["quarantines"] == 0
+
+
+def test_verify_fraction_validated():
+    with pytest.raises(ValueError):
+        GraphSessionManager(verify_fraction=1.5)
+    with pytest.raises(ValueError):
+        GraphSessionManager(verify_fraction=-0.1)
+
+
+def test_close_session(rmat_graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    mgr.close_session("g")
+    assert "g" not in mgr
+    assert mgr.bytes_used() == 0
+    with pytest.raises(AdmissionError):
+        mgr.levels("g", 0)
+
+
+def test_events_and_stats_shape(rmat_graph):
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("g", rmat_graph, max_batch=2)
+    mgr.levels_batch("g", [0, 5])
+    mgr.close_session("g")
+    kinds = {e["kind"] for e in mgr.events}
+    assert {"open", "verify-pass", "close"} <= kinds
+    st = mgr.stats()
+    for key in ("sessions", "bytes_used", "byte_budget", "evictions",
+                "timeouts", "quarantines", "rejections",
+                "degraded_serves", "verified", "tenants"):
+        assert key in st

@@ -1,0 +1,203 @@
+"""Ingress validation (DESIGN §2.7): the malformed-graph matrix, source
+bounds on every serve verb, and degenerate graphs end-to-end through
+GraphSession — single-device AND mesh-sharded.
+
+Every check here must hold under ``python -O`` too (the CI chaos job runs
+an ``-O`` smoke lane), which is why the library raises
+``GraphValidationError`` instead of asserting."""
+import numpy as np
+import pytest
+
+from conftest import require_devices
+from repro.core import reference_bfs
+from repro.core.bvss import build_bvss
+from repro.core.policy import prepare
+from repro.errors import (BlestError, GraphValidationError, check_source,
+                          check_sources)
+from repro.graphs import Graph, from_edges, generators as gen
+from repro.serve import GraphSession
+
+INF = np.int32(np.iinfo(np.int32).max)
+
+
+# ---------------------------------------------------------------------------
+# malformed-graph matrix
+# ---------------------------------------------------------------------------
+GOOD_INDPTR = np.array([0, 2, 3, 3, 4], dtype=np.int64)
+GOOD_INDICES = np.array([1, 2, 3, 0], dtype=np.int32)
+
+BAD_GRAPHS = {
+    "negative-n": (-1, GOOD_INDPTR, GOOD_INDICES),
+    "float-n": (4.0, GOOD_INDPTR, GOOD_INDICES),
+    "float-indptr": (4, GOOD_INDPTR.astype(np.float64), GOOD_INDICES),
+    "float-indices": (4, GOOD_INDPTR, GOOD_INDICES.astype(np.float32)),
+    "short-indptr": (4, GOOD_INDPTR[:-1], GOOD_INDICES),
+    "long-indptr": (4, np.append(GOOD_INDPTR, 4), GOOD_INDICES),
+    "nonzero-start": (4, GOOD_INDPTR + 1, GOOD_INDICES),
+    "tail-mismatch": (4, np.array([0, 2, 3, 3, 9]), GOOD_INDICES),
+    "non-monotone": (4, np.array([0, 3, 2, 3, 4]), GOOD_INDICES),
+    "oob-index": (4, GOOD_INDPTR,
+                  np.array([1, 2, 7, 0], dtype=np.int32)),
+    "negative-index": (4, GOOD_INDPTR,
+                       np.array([1, -1, 3, 0], dtype=np.int32)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(BAD_GRAPHS))
+def test_malformed_graph_rejected(case):
+    n, indptr, indices = BAD_GRAPHS[case]
+    with pytest.raises(GraphValidationError):
+        Graph(n, indptr, indices)
+
+
+def test_good_graph_accepted():
+    g = Graph(4, GOOD_INDPTR, GOOD_INDICES)
+    assert g.m == 4
+    np.testing.assert_array_equal(reference_bfs(g, 0),
+                                  [0, 1, 1, 2])
+
+
+def test_error_messages_name_the_defect():
+    with pytest.raises(GraphValidationError, match="non-decreasing"):
+        Graph(4, np.array([0, 3, 2, 3, 4]), GOOD_INDICES)
+    with pytest.raises(GraphValidationError, match="out-of-range"):
+        Graph(4, GOOD_INDPTR, np.array([1, 2, 7, 0], dtype=np.int32))
+    with pytest.raises(GraphValidationError, match="indptr\\[0\\]"):
+        Graph(4, GOOD_INDPTR + 1, GOOD_INDICES)
+
+
+@pytest.mark.parametrize("perm", [
+    np.array([0, 1, 2]),                       # wrong length
+    np.array([0.0, 1.0, 2.0, 3.0]),            # float dtype
+    np.array([0, 1, 1, 3]),                    # duplicate
+    np.array([0, 1, 2, 4]),                    # out of range
+    np.array([0, 1, 2, -1]),                   # negative
+])
+def test_bad_permutations_rejected(perm):
+    g = Graph(4, GOOD_INDPTR, GOOD_INDICES)
+    with pytest.raises(GraphValidationError):
+        g.permute(perm)
+    with pytest.raises(GraphValidationError):
+        g.permute_fast(perm)
+
+
+def test_bad_sigma_rejected():
+    g = Graph(4, GOOD_INDPTR, GOOD_INDICES)
+    for sigma in (0, 3, 33, -8):
+        with pytest.raises(GraphValidationError):
+            build_bvss(g, sigma=sigma)
+
+
+# ---------------------------------------------------------------------------
+# source-id bounds on the serve path (the perm[-1] silent-wrap regression)
+# ---------------------------------------------------------------------------
+def test_check_source_contract():
+    assert check_source(3, 10) == 3
+    assert check_source(np.int64(0), 10) == 0
+    for bad in (-1, 10, 3.5, True, "3", None):
+        with pytest.raises(GraphValidationError):
+            check_source(bad, 10)
+    with pytest.raises(GraphValidationError):
+        check_sources([[0, 1]], 10)            # not 1-D
+    with pytest.raises(GraphValidationError):
+        check_sources(np.array([0.5, 1.0]), 10)
+    assert check_sources(np.array([2, 0]), 3) == [2, 0]
+
+
+@pytest.fixture(scope="module")
+def small_session():
+    g = gen.rmat(6, 6, seed=3)
+    return g, GraphSession(g, max_batch=3)
+
+
+def test_prepared_levels_rejects_bad_sources(small_session):
+    g, sess = small_session
+    # the regression: perm[-1] used to silently serve the LAST vertex
+    with pytest.raises(GraphValidationError):
+        sess.prepared.levels(-1)
+    with pytest.raises(GraphValidationError):
+        sess.prepared.levels(g.n)
+
+
+@pytest.mark.parametrize("bad", [-1, 10_000, 2.5, True])
+def test_session_verbs_reject_bad_sources(small_session, bad):
+    _, sess = small_session
+    with pytest.raises(GraphValidationError):
+        sess.levels(bad)
+    with pytest.raises(GraphValidationError):
+        sess.levels_batch([0, bad])
+    with pytest.raises(GraphValidationError):
+        sess.closeness([bad])
+    with pytest.raises(GraphValidationError):
+        sess.eccentricity([0, bad])
+    with pytest.raises(GraphValidationError):
+        sess.betweenness([bad, 1])
+
+
+def test_prepared_without_engine_raises_typed_error(small_session):
+    import dataclasses
+    _, sess = small_session
+    hollow = dataclasses.replace(sess.prepared, _fn=None)
+    with pytest.raises(BlestError):
+        hollow.levels(0)
+
+
+def test_csr_mode_rejected():
+    from repro.core.bfs import make_csr_bfs
+    g = Graph(4, GOOD_INDPTR, GOOD_INDICES)
+    with pytest.raises(GraphValidationError):
+        make_csr_bfs(g, "sideways")
+
+
+# ---------------------------------------------------------------------------
+# degenerate graphs end-to-end through GraphSession
+# ---------------------------------------------------------------------------
+def _empty_graph(n: int) -> Graph:
+    return Graph(n, np.zeros(n + 1, dtype=np.int64),
+                 np.zeros(0, dtype=np.int32))
+
+
+DEGENERATE = {
+    "single-vertex": (_empty_graph(1), [0]),
+    "zero-edge": (_empty_graph(40), [0, 17, 39]),
+    "all-isolated-but-one-edge": (
+        from_edges(40, np.array([0]), np.array([1])), [0, 1, 25]),
+    "source-in-empty-component": (
+        from_edges(50, np.arange(10), np.arange(1, 11)), [45, 0, 49]),
+}
+
+
+@pytest.mark.parametrize("case", sorted(DEGENERATE))
+def test_degenerate_graphs_single_device(case):
+    g, sources = DEGENERATE[case]
+    sess = GraphSession(g, max_batch=2, order=False)
+    for s in sources:
+        np.testing.assert_array_equal(sess.levels(s), reference_bfs(g, s),
+                                      err_msg=f"{case}: levels({s})")
+    lvs = sess.levels_batch(sources)
+    for s, lv in zip(sources, lvs):
+        np.testing.assert_array_equal(lv, reference_bfs(g, s),
+                                      err_msg=f"{case}: batch {s}")
+
+
+@pytest.mark.parametrize("case", sorted(DEGENERATE))
+def test_degenerate_graphs_mesh(case):
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh
+    g, sources = DEGENERATE[case]
+    sess = GraphSession(g, max_batch=2, order=False, mesh=bfs_mesh(2))
+    lvs = sess.levels_batch(sources)
+    for s, lv in zip(sources, lvs):
+        np.testing.assert_array_equal(lv, reference_bfs(g, s),
+                                      err_msg=f"{case}: mesh batch {s}")
+
+
+def test_degenerate_prepare_round_trip():
+    """The full static pipeline (ordering included) must survive the
+    degenerate shapes, not just the order=False session path."""
+    for case, (g, sources) in DEGENERATE.items():
+        prep = prepare(g)
+        for s in sources:
+            np.testing.assert_array_equal(
+                prep.levels(s), reference_bfs(g, s),
+                err_msg=f"{case}: prepared levels({s})")
