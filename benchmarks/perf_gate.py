@@ -62,6 +62,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("artifact", help="bench JSON (BENCH_pr4 schema)")
     ap.add_argument("--floors", default=DEFAULT_FLOORS)
+    ap.add_argument("--only", default=None, metavar="PREFIX",
+                    help="gate only floors whose dotted path starts with "
+                         "PREFIX (e.g. 'hybrid.') — for partial artifacts "
+                         "like the compiled-smoke job's hybrid-only run; "
+                         "an empty selection is an error, not a pass")
     ap.add_argument("--prove-gate", action="store_true",
                     help="self-test: exit 0 only if 100x-inflated floors "
                          "make the gate fail")
@@ -72,6 +77,13 @@ def main(argv=None) -> int:
     with open(args.floors) as f:
         spec = json.load(f)
     floors = {k: float(v) for k, v in spec["floors"].items()}
+    if args.only is not None:
+        floors = {k: v for k, v in floors.items()
+                  if k.startswith(args.only)}
+        if not floors:
+            print(f"perf gate: no floors match --only {args.only!r} — "
+                  f"refusing to vacuously pass")
+            return 1
 
     if args.prove_gate:
         inflated = {k: v * 100.0 for k, v in floors.items()}

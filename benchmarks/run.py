@@ -8,10 +8,12 @@ the perf-trajectory benches — the PR-1 fused-pipeline bench
 (``benchmarks/bench_fused.py``), the PR-2 GraphSession serving bench
 (``benchmarks/bench_service.py``), the PR-3 mesh-native bench
 (``benchmarks/bench_dist.py``, which simulates its device mesh in a
-subprocess) and the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
-now with the closeness suite and sharded betweenness in ``dist``) — and
-writes one machine-readable artifact (default ``BENCH_pr5.json``) with
-``fused``, ``service``, ``dist`` and ``analytics`` suites;
+subprocess), the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
+now with the closeness suite and sharded betweenness in ``dist``) and the
+PR-7 compiled-dispatch hybrid bench (``benchmarks/bench_hybrid.py``:
+direction-optimizing hybrid vs pull-only, pure-XLA lane) — and
+writes one machine-readable artifact (default ``BENCH_pr7.json``) with
+``fused``, ``service``, ``dist``, ``analytics`` and ``hybrid`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
 quickly.  CI diffs the artifact's geomean speedups against the checked-in
 floors (``benchmarks/perf_gate.py``).  Roofline tables (E7) come from the
@@ -30,10 +32,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr5.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json", default=None,
                     metavar="PATH",
                     help="run the fused-pipeline + service + dist + "
-                         "analytics benches and write JSON "
+                         "analytics + hybrid benches and write JSON "
                          "(default %(const)s)")
     ap.add_argument("--fused-only", action="store_true",
                     help="only the JSON perf benches, skip the paper tables "
@@ -45,10 +47,10 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr5.json"
+        json_path = "BENCH_pr7.json"
     if json_path is not None:
         from benchmarks import (bench_analytics, bench_dist, bench_fused,
-                                bench_service)
+                                bench_hybrid, bench_service)
         from benchmarks.common import bench_envelope
         bench_scale = min(scale, 9 if args.quick else 10)
         fused = bench_fused.run(scale=bench_scale,
@@ -65,12 +67,21 @@ def main(argv=None) -> None:
                                         n_queries=6 if args.quick else 8,
                                         n_pivots=3 if args.quick else 4,
                                         json_path=None)
+        # the hybrid lane keeps scale 14 even in quick mode: the 2-bucket
+        # baseline's small rung only leaves the tuned ladder room when
+        # num_vss > 1024, so shrinking the graphs would benchmark nothing
+        # (quick mode trims sources/reps instead)
+        hybrid = bench_hybrid.run(scale=14,
+                                  n_sources=2,
+                                  reps=3 if args.quick else 5,
+                                  json_path=None)
         out = {
-            **bench_envelope("pr5_sharded_weighted_suite", bench_scale),
+            **bench_envelope("pr7_hybrid_suite", bench_scale),
             "fused": fused,
             "service": service,
             "dist": dist,
             "analytics": analytics,
+            "hybrid": hybrid,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=False)

@@ -189,9 +189,11 @@ def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
     hist0, record = make_queue_history(qcap, max_lv, p.num_vss)
 
     def local_fn(masks: jnp.ndarray, row_ids: jnp.ndarray,
-                 v2r: jnp.ndarray, sources: jnp.ndarray
+                 v2r: jnp.ndarray, vstart: jnp.ndarray, vend: jnp.ndarray,
+                 sources: jnp.ndarray
                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                vstart[0], vend[0])
         loc = locals_for(dev)
         pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
                              finalize=lambda s, lvl: loc.finalize(s),
@@ -251,7 +253,9 @@ def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
                                           jnp.ndarray]:
         sources = jnp.asarray(sources, dtype=jnp.int32)
         lv, sig, delta = fn(p.dev.masks, p.dev.row_ids,
-                            p.dev.virtual_to_real, sources)
+                            p.dev.virtual_to_real,
+                            p.dev.vss_of_vertex_start,
+                            p.dev.vss_of_vertex_end, sources)
         return (lv.reshape(-1, S)[:p.n], sig.reshape(-1, S)[:p.n],
                 delta.reshape(-1, S)[:p.n])
 

@@ -54,10 +54,11 @@ from repro.core.bvss import (BVSS, BVSSDevice, ShardedBVSS,
 from repro.core.level_pipeline import (LevelPipeline, compose_step,
                                        global_any, run_levels)
 from repro.distributed.bfs_dist import frontier_all_gather
-from repro.errors import GraphValidationError
+from repro.errors import ConfigError, GraphValidationError
 from repro.graphs import Graph, src_of_edges, to_dense_bits
-from repro.kernels import finalize_pack_sweep, pull_vss_kernel
-from repro.kernels.ref import finalize_pack_ref
+from repro.kernels import (finalize_pack_sweep, pull_vss_kernel,
+                           push_vss_kernel)
+from repro.kernels.ref import bvss_push_ref, finalize_pack_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
 
@@ -144,12 +145,17 @@ class BlestProblem:
     axis: str = "data"
     n_shards: int = 1
     rows_per_shard: int = 0
+    # static push expansion factor: every pushing vertex enqueues at most
+    # this many VSSs of its own slice set (DESIGN §2.8)
+    max_vss_per_set: int = 1
 
     @staticmethod
     def build(bvss: BVSS) -> "BlestProblem":
         return BlestProblem(n=bvss.n, sigma=bvss.sigma, n_sets=bvss.n_sets,
                             num_vss=bvss.num_vss,
-                            n_fwords=bvss.n_frontier_words, dev=to_device(bvss))
+                            n_fwords=bvss.n_frontier_words,
+                            dev=to_device(bvss),
+                            max_vss_per_set=bvss.max_vss_per_set)
 
     @staticmethod
     def build_sharded(sb: ShardedBVSS, mesh: Mesh, axis: str = "data"
@@ -166,10 +172,20 @@ class BlestProblem:
                             n_fwords=sb.n_frontier_words,
                             dev=shard_to_device(sb, mesh, axis),
                             mesh=mesh, axis=axis, n_shards=sb.n_shards,
-                            rows_per_shard=sb.rows_per_shard)
+                            rows_per_shard=sb.rows_per_shard,
+                            max_vss_per_set=sb.max_vss_per_set)
 
 
 PullFn = Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
+PushFn = Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
+
+#: direction modes of the hybrid BVSS engines (DESIGN §2.8)
+DIRECTIONS = ("auto", "pull", "push")
+
+#: default auto-mode push cap: the largest frontier popcount a push level
+#: will take on (also the push vertex-queue width, so it is the static
+#: scatter-side working-set knob — autotunable, DESIGN §2.8)
+DEFAULT_PUSH_CAP = PULL_TILE
 
 
 class _BlestState(NamedTuple):
@@ -180,6 +196,9 @@ class _BlestState(NamedTuple):
     Q: jnp.ndarray       # (qcap,) int32 compacted VSS queue, dummy-padded
     count: jnp.ndarray   # int32 live VSS count (LOCAL: bucket choice)
     marks: jnp.ndarray   # (n + 1,) uint8 lazy scratch ((1,) dummy when eager)
+    unvisited: jnp.ndarray  # int32 GLOBAL unvisited-vertex count (the
+                            #   Beamer-style saturation guard of the
+                            #   direction heuristic, DESIGN §2.8)
     cont: jnp.ndarray    # bool continue flag (mesh-global via psum)
 
 
@@ -189,13 +208,86 @@ def _round_width(x: int) -> int:
 
 def queue_widths(num_vss: int, buckets: int) -> list[int]:
     """Static queue widths, smallest first; the on-device live VSS count
-    picks one (2 cond-selected buckets by default, DESIGN §2.3)."""
-    widths = [_round_width(num_vss)]
-    if buckets >= 2:
-        small = _round_width((num_vss + 7) // 8)
-        if small < widths[0]:
-            widths.insert(0, small)
+    picks one via a cond chain (DESIGN §2.3/§2.8).
+
+    The ladder is geometric with ratio 8: ``buckets`` graduations
+    ``num_vss / 8^(buckets-1), ..., num_vss / 8, num_vss`` rounded up to
+    the PULL_TILE floor, deduplicated ascending (the full width is always
+    last).  ``buckets=1`` is the always-full-queue degenerate case;
+    ``buckets=2`` reproduces the original small/full pair.  A bucket count
+    < 1 is a :class:`repro.errors.ConfigError` — never a silent fallback.
+    """
+    if buckets < 1:
+        raise ConfigError(
+            f"queue_widths needs buckets >= 1, got {buckets!r}")
+    widths: list[int] = []
+    for i in range(buckets - 1, -1, -1):
+        w = _round_width(-(-num_vss // 8 ** i))
+        if not widths or w > widths[-1]:
+            widths.append(w)
     return widths
+
+
+def select_width(widths: list[int], count, apply: Callable):
+    """Run ``apply(width)`` for the smallest ladder width holding ``count``
+    live entries (full width fallback) via a nested ``lax.cond`` chain —
+    the XLA stand-in for a dynamically-sized launch."""
+    if len(widths) == 1:
+        return apply(widths[0])
+
+    def chain(i: int):
+        if i == len(widths) - 1:
+            return lambda: apply(widths[i])
+        return lambda: jax.lax.cond(count <= widths[i],
+                                    lambda: apply(widths[i]), chain(i + 1))
+
+    return chain(0)()
+
+
+def selected_width(widths: list[int], count) -> jnp.ndarray:
+    """The scalar width :func:`select_width` would pick — the pull-side
+    term of the direction heuristic's work model."""
+    pw = jnp.int32(widths[-1])
+    for w in reversed(widths[:-1]):
+        pw = jnp.where(count <= w, jnp.int32(w), pw)
+    return pw
+
+
+def make_vertex_compactor(n_fwords: int, dummy_vertex: int, pqcap: int
+                          ) -> Callable:
+    """Build ``compact(F (n_fwords,) uint32) -> (VQ, fcount)``: cumsum
+    stream-compaction of the set frontier BITS into a static-width vertex
+    queue (the push twin of :func:`make_compactor`; dummy-padded with
+    ``dummy_vertex``, overflow beyond ``pqcap`` dropped — which is why
+    auto mode only takes push when ``popcount(F) <= push_cap``)."""
+    verts = jnp.arange(n_fwords * 32, dtype=jnp.int32)
+    bitpos = jnp.arange(32, dtype=jnp.uint32)
+
+    def compact(F: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        bits = ((F[:, None] >> bitpos[None, :]) & jnp.uint32(1)
+                ).reshape(-1).astype(bool)
+        pos = jnp.cumsum(bits.astype(jnp.int32)) - 1
+        idx = jnp.where(bits, pos, pqcap)  # OOB -> dropped
+        VQ = jnp.full((pqcap,), dummy_vertex, dtype=jnp.int32)
+        VQ = VQ.at[idx].set(verts, mode="drop")
+        return VQ, bits.sum().astype(jnp.int32)
+
+    return compact
+
+
+def expand_push_queue(dev, VQ: jnp.ndarray, R: int, num_vss: int
+                      ) -> jnp.ndarray:
+    """Expand a compacted frontier-vertex queue into the (|VQ|·R,) VSS ids
+    the push phase processes: every VSS of each vertex's own slice set
+    (``vss_of_vertex_start/end``), dummy-padded to the static factor R =
+    ``max_vss_per_set``.  Dummy vertices map to the empty range, so the
+    whole row degenerates to the all-zero dummy VSS ``num_vss``."""
+    starts = dev.vss_of_vertex_start[VQ]
+    ends = dev.vss_of_vertex_end[VQ]
+    r = jnp.arange(R, dtype=jnp.int32)
+    vss = starts[:, None] + r[None, :]
+    valid = r[None, :] < (ends - starts)[:, None]
+    return jnp.where(valid, vss, num_vss).reshape(-1)
 
 
 def make_compactor(dev: BVSSDevice, num_vss: int, qcap: int) -> Callable:
@@ -246,23 +338,39 @@ def make_queue_history(qcap: int, max_levels: int, dummy_vss: int
     return hist0, record
 
 
-def _make_pull_step(dev, pull: PullFn, sigma: int, n_rows: int,
-                    widths: list[int], *, lazy: bool) -> Callable:
-    """The bucketed gather → pull → update step, parameterised over the
-    (device-local) BVSS views and the row extent — the ONE step body both
-    the single-device and the shard_map'd engines run (DESIGN §2.3/§2.4).
+def _make_hybrid_step(dev, pull: PullFn, push: PushFn | None, sigma: int,
+                      n_rows: int, widths: list[int], *, lazy: bool,
+                      direction: str, num_vss: int, n_fwords: int,
+                      dummy_vertex: int, R: int, push_cap: int,
+                      alpha: float) -> Callable:
+    """The direction-optimizing level step (DESIGN §2.3/§2.8) — the ONE
+    step body both the single-device and the shard_map'd engines run.
+
+    Pull side: the bucketed gather → pull → update over the compacted VSS
+    queue, width chosen from the graduated ladder by the live count.
+    Push side: compact the frontier BITS into a vertex queue, expand each
+    vertex into the ≤ R VSSs of its own slice set, and resolve each
+    (vertex, VSS) pair with the one-hot push kernel — processing width
+    ``pqcap·R`` regardless of ``num_vss``.
+
+    ``direction``: "pull"/"push" force a branch (forced push sizes the
+    vertex queue to the full rounded vertex count so nothing is dropped);
+    "auto" picks per level on device: push iff the frontier fits the cap,
+    the frontier is small against the unvisited remainder (the Beamer-α
+    guard), and push's static cost undercuts the pull width the ladder
+    would select.  When push's static cost cannot beat even the full pull
+    width, auto compiles to pure pull (no dead branch).
 
     ``n_rows`` is the scatter extent: the global ``n`` single-device, the
-    shard's ``rows_per_shard`` under a mesh (row ids are local there)."""
+    shard's ``rows_per_shard`` under a mesh (row ids are local there —
+    while the frontier words, and hence the push vertex queue, are GLOBAL
+    replicas, so every shard expands the same vertices into its own local
+    VSS ids and both cond branches stay collective-free)."""
+    if direction not in DIRECTIONS:
+        raise ConfigError(
+            f"direction must be one of {DIRECTIONS}, got {direction!r}")
 
-    def pull_update(state: _BlestState, lvl, width: int) -> _BlestState:
-        """gather → pull → update over the first ``width`` queue slots
-        (all live entries: the queue is compacted and count <= width)."""
-        ids = jax.lax.slice_in_dim(state.Q, 0, width)
-        fbytes = _frontier_bytes(state.F, dev.virtual_to_real[ids], sigma)
-        hits = pull(dev.masks[ids], fbytes, sigma)       # (width, spw, 32)
-        rows = dev.row_ids[ids].reshape(-1)
-        h = hits.reshape(-1)
+    def scatter(state: _BlestState, rows, h, lvl) -> _BlestState:
         if lazy:
             # Alg. 3 stage 1: fire-and-forget mark (REDG analogue)
             marks = jnp.zeros((n_rows + 1,), dtype=jnp.uint8)
@@ -273,47 +381,110 @@ def _make_pull_step(dev, pull: PullFn, sigma: int, n_rows: int,
         upd = jnp.where(h, lvl, INF).astype(jnp.int32)
         return state._replace(levels=state.levels.at[rows].min(upd))
 
+    def pull_update(state: _BlestState, lvl, width: int) -> _BlestState:
+        """gather → pull → update over the first ``width`` queue slots
+        (all live entries: the queue is compacted and count <= width)."""
+        ids = jax.lax.slice_in_dim(state.Q, 0, width)
+        fbytes = _frontier_bytes(state.F, dev.virtual_to_real[ids], sigma)
+        hits = pull(dev.masks[ids], fbytes, sigma)       # (width, spw, 32)
+        return scatter(state, dev.row_ids[ids].reshape(-1),
+                       hits.reshape(-1), lvl)
+
+    def pull_step(state: _BlestState, lvl) -> _BlestState:
+        return select_width(widths, state.count,
+                            lambda w: pull_update(state, lvl, w))
+
+    if direction == "pull":
+        return pull_step
+
+    pqcap = _round_width(push_cap)
+    push_cost = pqcap * R
+    if direction == "auto" and push_cost >= widths[-1]:
+        # push can never undercut even the full pull width (e.g. a hub
+        # set blew up max_vss_per_set): compile the pure pull step
+        return pull_step
+    compact_vertices = make_vertex_compactor(n_fwords, dummy_vertex, pqcap)
+
+    def push_update(state: _BlestState, lvl) -> _BlestState:
+        VQ, _ = compact_vertices(state.F)
+        ids = expand_push_queue(dev, VQ, R, num_vss)
+        bits = jnp.broadcast_to((VQ % sigma).astype(jnp.int32)[:, None],
+                                (pqcap, R)).reshape(-1)
+        hits = push(dev.masks[ids], bits, sigma)         # (pqcap*R, spw, 32)
+        return scatter(state, dev.row_ids[ids].reshape(-1),
+                       hits.reshape(-1), lvl)
+
+    if direction == "push":
+        return push_update
+
     def step(state: _BlestState, lvl) -> _BlestState:
-        if len(widths) == 1:
-            return pull_update(state, lvl, widths[0])
-        small, full = widths
-        return jax.lax.cond(
-            state.count <= small,
-            lambda s, lv: pull_update(s, lv, small),
-            lambda s, lv: pull_update(s, lv, full),
-            state, lvl)
+        fcount = jnp.sum(jax.lax.population_count(state.F)).astype(jnp.int32)
+        use_push = ((fcount <= push_cap)
+                    & (jnp.int32(push_cost)
+                       < selected_width(widths, state.count))
+                    & (fcount * jnp.float32(alpha)
+                       <= state.unvisited.astype(jnp.float32)))
+        return jax.lax.cond(use_push, push_update, pull_step, state, lvl)
 
     return step
 
 
+def resolve_push_cap(direction: str, push_cap: int | None, n: int) -> int:
+    """The frontier cap a push level tolerates: forced push must hold EVERY
+    vertex (a dropped overflow entry is a wrong answer), auto defaults to
+    the tunable small-frontier cap."""
+    if direction == "push":
+        return n
+    return push_cap if push_cap is not None else DEFAULT_PUSH_CAP
+
+
 def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
-                   pull_impl: PullFn | None = None, use_kernels: bool = True,
-                   buckets: int = 2, max_levels: int | None = None
+                   pull_impl: PullFn | None = None,
+                   push_impl: PushFn | None = None,
+                   use_kernels: bool = True, buckets: int = 2,
+                   widths: list[int] | None = None,
+                   direction: str = "auto", push_cap: int | None = None,
+                   alpha: float = 4.0, max_levels: int | None = None
                    ) -> Callable:
     """Build the jitted fused BLEST BFS (Alg. 2 eager / Alg. 3 lazy).
 
-    The level step is one batched pull over the compacted queue at a static
-    width (two cond-selected buckets by default), one scatter (min for
-    eager levels, max for lazy marks), and one fused
-    finalise + frontier-pack + set-flag sweep feeding cumsum compaction.
-    A mesh-sharded ``problem`` runs the same pipeline under ``shard_map``
-    (local pull/scatter/finalise, frontier all-gather, psum convergence).
+    The level step is direction-optimizing (DESIGN §2.8): the pull side is
+    one batched pull over the compacted queue at a ladder-selected static
+    width; the push side compacts the frontier bits into a vertex queue
+    and expands each vertex's own slice-set VSSs through the one-hot push
+    kernel.  Either way one scatter (min for eager levels, max for lazy
+    marks) and one fused finalise + frontier-pack + set-flag sweep feed
+    cumsum compaction.  A mesh-sharded ``problem`` runs the same pipeline
+    under ``shard_map`` (local pull/push/scatter/finalise, frontier
+    all-gather, psum convergence).
 
     pull_impl:   custom pull (masks, fbytes, sigma) -> hits; overrides the
                  kernel/jnp switch.
-    use_kernels: route pull through Pallas ``bvss_pull`` and the tail
+    push_impl:   custom push (masks, bits, sigma) -> hits — the push
+                 fault seam (DESIGN §2.7/§2.8).
+    use_kernels: route pull/push through the Pallas kernels and the tail
                  through Pallas ``finalize_pack_sweep`` (interpret-mode on
-                 CPU); False = pure-jnp fallback for both.
-    buckets:     1 = always process the full queue width; >= 2 (default)
-                 = two cond-selected widths, num_vss/8 and full (more
-                 graduations are not implemented — every extra bucket is
-                 another compiled branch).
+                 CPU); False = pure-jnp fallback for all three.
+    buckets:     graduations of the pull-width ladder (see
+                 :func:`queue_widths`); >= 1, ConfigError otherwise.
+    widths:      explicit pull-width ladder (ascending; overrides
+                 ``buckets`` — the autotuner's injection point).
+    direction:   "auto" (per-level on-device switch), "pull", "push".
+    push_cap:    auto-mode frontier cap (None = DEFAULT_PUSH_CAP; forced
+                 push always uses the full vertex count).
+    alpha:       Beamer-style saturation guard: auto only pushes while
+                 ``alpha * popcount(F) <= unvisited``.
     """
     p = problem
     sigma = p.sigma
-    widths = queue_widths(p.num_vss, buckets)
+    if direction not in DIRECTIONS:
+        raise ConfigError(
+            f"direction must be one of {DIRECTIONS}, got {direction!r}")
+    if widths is None:
+        widths = queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
     max_lv = max_levels if max_levels is not None else p.n + 1
+    cap = resolve_push_cap(direction, push_cap, p.n)
 
     if pull_impl is not None:
         pull = pull_impl
@@ -321,18 +492,29 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
         pull = pull_vss_kernel
     else:
         pull = pull_vss_jnp
+    if push_impl is not None:
+        push = push_impl
+    elif use_kernels:
+        push = push_vss_kernel
+    else:
+        push = bvss_push_ref
     fin_impl = finalize_pack_sweep if use_kernels else finalize_pack_ref
 
     if p.mesh is not None:
-        return _make_blest_bfs_sharded(p, lazy=lazy, pull=pull,
+        return _make_blest_bfs_sharded(p, lazy=lazy, pull=pull, push=push,
                                        fin_impl=fin_impl, widths=widths,
-                                       qcap=qcap, max_lv=max_lv)
+                                       qcap=qcap, max_lv=max_lv,
+                                       direction=direction, push_cap=cap,
+                                       alpha=alpha)
 
     dev = p.dev
     fin = functools.partial(fin_impl, sigma=sigma, n_fwords=p.n_fwords,
                             n_sets=p.n_sets)
     compact = make_compactor(dev, p.num_vss, qcap)
-    step = _make_pull_step(dev, pull, sigma, p.n, widths, lazy=lazy)
+    step = _make_hybrid_step(dev, pull, push, sigma, p.n, widths, lazy=lazy,
+                             direction=direction, num_vss=p.num_vss,
+                             n_fwords=p.n_fwords, dummy_vertex=p.n,
+                             R=p.max_vss_per_set, push_cap=cap, alpha=alpha)
 
     def finalize(state: _BlestState, lvl) -> _BlestState:
         if lazy:
@@ -345,8 +527,10 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
             _, fwords, set_active = fin(state.levels[:p.n], lvl)
             levels = state.levels
         Q, count = compact(set_active)
+        unvisited = state.unvisited - jnp.sum(
+            jax.lax.population_count(fwords)).astype(jnp.int32)
         return state._replace(levels=levels, F=fwords, Q=Q, count=count,
-                              cont=count > 0)
+                              unvisited=unvisited, cont=count > 0)
 
     pipe = LevelPipeline(step=step, finalize=finalize,
                          active=lambda s: s.cont)
@@ -359,7 +543,8 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
         set0 = jnp.zeros((p.n_sets,), dtype=bool).at[src // sigma].set(True)
         Q, count = compact(set0)
         marks0 = jnp.zeros((p.n + 1 if lazy else 1,), dtype=jnp.uint8)
-        state = _BlestState(levels, F, Q, count, marks0, count > 0)
+        state = _BlestState(levels, F, Q, count, marks0,
+                            jnp.int32(p.n - 1), count > 0)
         state, _ = run_levels(pipe, state, max_levels=max_lv)
         return state.levels[:p.n]
 
@@ -367,15 +552,23 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
 
 
 def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
-                            fin_impl, widths: list[int], qcap: int,
-                            max_lv: int) -> Callable:
+                            push: PushFn, fin_impl, widths: list[int],
+                            qcap: int, max_lv: int, direction: str,
+                            push_cap: int, alpha: float) -> Callable:
     """The mesh-native BLEST engine (DESIGN §2.4): the whole level loop is
     ONE ``shard_map``'d ``while_loop`` over the row partition.  Per level,
-    each shard runs the same fused step as the single-device engine on its
-    local rows (``bvss_pull`` + scatter + ``finalize_pack_sweep``), the
-    per-shard frontier words are all-gathered into the global frontier, and
-    the compacted per-shard queues feed a psum'd convergence test — no host
-    sync anywhere inside the loop."""
+    each shard runs the same fused hybrid step as the single-device engine
+    on its local rows (``bvss_pull``/``bvss_push`` + scatter +
+    ``finalize_pack_sweep``), the per-shard frontier words are all-gathered
+    into the global frontier, and the compacted per-shard queues feed a
+    psum'd convergence test — no host sync anywhere inside the loop.
+
+    Push levels need NO extra collective (DESIGN §2.8): the vertex queue is
+    compacted from the gathered global frontier replica every shard already
+    holds, and each shard expands it through its own vertex → local-VSS map
+    — the direction cond may even resolve differently across shards
+    (per-shard VSS counts differ) because both branches are collective-free;
+    the all-gather stays hoisted in finalize."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -389,11 +582,16 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
     fin = functools.partial(fin_impl, sigma=sigma, n_fwords=lwords,
                             n_sets=rps // sigma)
 
-    def local_loop(masks, row_ids, v2r, src):
+    def local_loop(masks, row_ids, v2r, vstart, vend, src):
         """One shard's slice of the fused BFS (runs under shard_map)."""
-        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0], vstart[0],
+                                vend[0])
         compact = make_compactor(dev, p.num_vss, qcap)
-        step = _make_pull_step(dev, pull, sigma, rps, widths, lazy=lazy)
+        step = _make_hybrid_step(dev, pull, push, sigma, rps, widths,
+                                 lazy=lazy, direction=direction,
+                                 num_vss=p.num_vss, n_fwords=p.n_fwords,
+                                 dummy_vertex=p.n, R=p.max_vss_per_set,
+                                 push_cap=push_cap, alpha=alpha)
         d = jax.lax.axis_index(axis)
 
         def finalize(state: _BlestState, lvl) -> _BlestState:
@@ -410,7 +608,10 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
             F = frontier_all_gather(fw_loc, axis)  # (n_fwords,)
             set_active = _frontier_bytes(F, all_sets, sigma) != 0
             Q, count = compact(set_active)
+            unvisited = state.unvisited - jnp.sum(
+                jax.lax.population_count(F)).astype(jnp.int32)
             return state._replace(levels=levels, F=F, Q=Q, count=count,
+                                  unvisited=unvisited,
                                   cont=global_any(count > 0, axis))
 
         pipe = LevelPipeline(step=step, finalize=finalize,
@@ -428,7 +629,7 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
         Q, count = compact(set0)
         marks0 = jnp.zeros((rps + 1 if lazy else 1,), dtype=jnp.uint8)
         state = _BlestState(levels, F, Q, count, marks0,
-                            global_any(count > 0, axis))
+                            jnp.int32(p.n - 1), global_any(count > 0, axis))
         state, _ = run_levels(pipe, state, max_levels=max_lv)
         return state.levels[None, :rps]
 
@@ -438,6 +639,7 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
 
     def bfs(src: jnp.ndarray) -> jnp.ndarray:
         out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
                  jnp.asarray(src, dtype=jnp.int32))
         return out.reshape(-1)[:p.n]
 
@@ -514,8 +716,9 @@ def _make_brs_bfs_sharded(p: BlestProblem, *, max_levels: int | None
     max_lv = max_levels if max_levels is not None else p.n + 1
     all_ids = jnp.arange(p.num_vss, dtype=jnp.int32)
 
-    def local_loop(masks, row_ids, v2r, src):
-        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+    def local_loop(masks, row_ids, v2r, vstart, vend, src):
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0], vstart[0],
+                                vend[0])
         d = jax.lax.axis_index(axis)
 
         def gather(s: _BrsState):
@@ -556,6 +759,7 @@ def _make_brs_bfs_sharded(p: BlestProblem, *, max_levels: int | None
 
     def bfs(src: jnp.ndarray) -> jnp.ndarray:
         out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
                  jnp.asarray(src, dtype=jnp.int32))
         return out.reshape(-1)[:p.n]
 
@@ -669,7 +873,11 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
                 bvss: BVSS | None = None,
                 problem: BlestProblem | None = None,
                 pull_impl: PullFn | None = None,
+                push_impl: PushFn | None = None,
                 use_kernels: bool = True, buckets: int = 2,
+                widths: list[int] | None = None,
+                direction: str = "auto", push_cap: int | None = None,
+                alpha: float = 4.0,
                 n_sources: int | None = None,
                 block: int | None = None) -> Callable:
     """Build a jitted BFS callable ``f(src) -> levels`` for the named engine.
@@ -678,6 +886,9 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
     (core.policy.prepare, GraphSession) skip rebuilding the device BVSS;
     a mesh-sharded problem routes the BVSS engines through the
     ``shard_map``'d pipeline (DESIGN §2.4).
+    ``direction``/``push_cap``/``alpha``/``widths`` are the hybrid knobs
+    (DESIGN §2.8) of the blest/blest_lazy/multi_source engines;
+    ``push_impl`` is the push-kernel fault seam.
     ``engine="multi_source"`` builds the batched BVSS bit-SpMM engine
     ``f(sources (S,)) -> levels (n, S)`` and requires ``n_sources``.
     ``block`` is accepted for backwards compatibility and ignored: the fused
@@ -701,12 +912,16 @@ def make_engine(g: Graph, engine: str, *, sigma: int = 8,
                 raise ValueError("multi_source engine needs n_sources")
             return make_multi_source_bfs(g, n_sources, problem=problem,
                                          use_kernel=use_kernels,
-                                         buckets=buckets)
+                                         buckets=buckets, widths=widths,
+                                         direction=direction,
+                                         push_cap=push_cap)
         if engine == "brs":
             return make_brs_bfs(problem)
         return make_blest_bfs(problem, lazy=(engine == "blest_lazy"),
-                              pull_impl=pull_impl, use_kernels=use_kernels,
-                              buckets=buckets)
+                              pull_impl=pull_impl, push_impl=push_impl,
+                              use_kernels=use_kernels, buckets=buckets,
+                              widths=widths, direction=direction,
+                              push_cap=push_cap, alpha=alpha)
     raise ValueError(f"unknown engine {engine!r}")
 
 

@@ -58,6 +58,15 @@ class BVSS:
         """Frontier bit-array length in uint32 words (σ-bit set granularity)."""
         return (self.n_sets * self.sigma + 31) // 32
 
+    @property
+    def max_vss_per_set(self) -> int:
+        """Largest VSS count of any slice set — the static expansion factor
+        of the push phase (each pushing vertex enqueues every VSS of its own
+        set, DESIGN §2.8)."""
+        if self.n_sets == 0:
+            return 1
+        return max(int(np.diff(self.real_ptrs).max()), 1)
+
     # ---------------- analytics (paper Tables 1 & 4) ----------------
     def compression_ratio(self) -> float:
         """m / (num_slices * σ): fraction of set bits in unpadded masks."""
@@ -94,13 +103,22 @@ class BVSS:
         return float(set_div[alive].mean()) if alive.any() else 0.0
 
     def memory_bytes(self) -> dict[str, int]:
-        """Table-4 style footprint breakdown (bytes)."""
+        """Table-4 style footprint breakdown (bytes).
+
+        ``push`` is the hybrid engine's scatter-side working set at the
+        DEFAULT auto-mode cap (DESIGN §2.8): the compacted frontier-vertex
+        queue plus the (cap × max_vss_per_set) expanded (VSS id, bit) pairs
+        each push level materialises.  It is a sub-term of ``dynamic`` —
+        ``total`` stays ``bvss + dynamic + level``."""
         static = (self.masks.nbytes + self.row_ids.nbytes
                   + self.real_ptrs.nbytes + self.virtual_to_real.nbytes)
-        dynamic = 2 * 4 * (self.num_vss + 1) + 2 * 4 * self.n_frontier_words
+        pq = max(128, self.n // 8)  # default auto-mode push cap
+        push = 4 * (pq + 1) + 2 * 4 * pq * self.max_vss_per_set
+        dynamic = (2 * 4 * (self.num_vss + 1)
+                   + 2 * 4 * self.n_frontier_words + push)
         level = 4 * (self.n + 1)
-        return {"bvss": static, "dynamic": dynamic, "level": level,
-                "total": static + dynamic + level}
+        return {"bvss": static, "dynamic": dynamic, "push": push,
+                "level": level, "total": static + dynamic + level}
 
     # ---------------- validation helpers ----------------
     def reconstruct_edges(self) -> tuple[np.ndarray, np.ndarray]:
@@ -195,6 +213,11 @@ class ShardedBVSS:
     masks: np.ndarray            # (D, num_vss_pad, LANES) uint32
     row_ids: np.ndarray          # (D, num_vss_pad, spw, LANES) int32 LOCAL
     virtual_to_real: np.ndarray  # (D, num_vss_pad) int32 GLOBAL set ids
+    vss_start: np.ndarray        # (D, n + 1) int32 GLOBAL vertex -> LOCAL
+    vss_end: np.ndarray          #   VSS range [start, end) of the shard's
+                                 #   slice sets for the vertex's own set;
+                                 #   dummy vertex n maps to the empty range
+    max_vss_per_set: int         # static push expansion factor (max shard)
 
     @property
     def slices_per_word(self) -> int:
@@ -240,7 +263,16 @@ def build_sharded_bvss(g: Graph, n_shards: int, sigma: int = 8
     # pad VSS entries keep set id 0: their masks are all-zero, so a level
     # whose frontier touches set 0 enqueues them as exact no-op pulls
     v2r = np.zeros((D, num_vss_pad), np.int32)
+    # per-shard GLOBAL vertex -> LOCAL VSS range: columns are global in
+    # every shard block, so each per-shard real_ptrs spans all n_sets and
+    # the map mirrors to_device's vss_of_vertex_start/end per shard
+    vss_start = np.zeros((D, n + 1), np.int32)
+    vss_end = np.zeros((D, n + 1), np.int32)
+    verts = np.arange(n, dtype=np.int64)
+    sets = verts // sigma
     for d, b in enumerate(per_shard):
+        vss_start[d, :n] = b.real_ptrs[sets]
+        vss_end[d, :n] = b.real_ptrs[sets + 1]
         if b.num_vss == 0:
             continue
         masks[d, :b.num_vss] = b.masks
@@ -252,7 +284,10 @@ def build_sharded_bvss(g: Graph, n_shards: int, sigma: int = 8
                        rows_per_shard=rows_per_shard,
                        num_vss_pad=num_vss_pad,
                        n_sets=(n + sigma - 1) // sigma,
-                       masks=masks, row_ids=row_ids, virtual_to_real=v2r)
+                       masks=masks, row_ids=row_ids, virtual_to_real=v2r,
+                       vss_start=vss_start, vss_end=vss_end,
+                       max_vss_per_set=max(
+                           max(b.max_vss_per_set for b in per_shard), 1))
 
 
 class ShardedBVSSDevice(NamedTuple):
@@ -266,6 +301,10 @@ class ShardedBVSSDevice(NamedTuple):
     masks: "jnp.ndarray"            # (D, num_vss_pad + 1, LANES) uint32
     row_ids: "jnp.ndarray"          # (D, num_vss_pad + 1, spw, LANES) int32
     virtual_to_real: "jnp.ndarray"  # (D, num_vss_pad + 1) int32
+    # GLOBAL vertex -> LOCAL VSS range (push expansion); named like the
+    # BVSSDevice fields so the hybrid step reads one surface in both modes
+    vss_of_vertex_start: "jnp.ndarray"  # (D, n + 1) int32
+    vss_of_vertex_end: "jnp.ndarray"    # (D, n + 1) int32
 
 
 def shard_to_device(sb: ShardedBVSS, mesh=None, axis: str = "data"
@@ -294,7 +333,9 @@ def shard_to_device(sb: ShardedBVSS, mesh=None, axis: str = "data"
     else:
         put = jnp.asarray
     return ShardedBVSSDevice(masks=put(masks), row_ids=put(row_ids),
-                             virtual_to_real=put(v2r))
+                             virtual_to_real=put(v2r),
+                             vss_of_vertex_start=put(sb.vss_start),
+                             vss_of_vertex_end=put(sb.vss_end))
 
 
 class BVSSDevice(NamedTuple):

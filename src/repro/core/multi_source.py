@@ -52,16 +52,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bfs import (BlestProblem, _frontier_bytes, make_compactor,
-                            queue_widths)
+from repro.core.bfs import (DIRECTIONS, BlestProblem, _frontier_bytes,
+                            _round_width, expand_push_queue, make_compactor,
+                            make_vertex_compactor, queue_widths,
+                            resolve_push_cap, select_width, selected_width)
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
 from repro.distributed.bfs_dist import frontier_all_gather
+from repro.errors import ConfigError
 from repro.graphs import Graph
 from repro.kernels import bvss_spmm, bvss_spmm_w, bvss_spmm_w_local
 from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_w_ref
 
 INF = np.int32(np.iinfo(np.int32).max)
+
+
+def _union_words(F: jnp.ndarray) -> jnp.ndarray:
+    """OR the per-column packed frontiers ``(n_fwords, S)`` into one union
+    word array — the push phase compacts its vertex queue from this (a
+    vertex is queued iff ANY column's frontier holds it)."""
+    return jax.lax.reduce(F, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def _push_fbytes(F: jnp.ndarray, vrep: jnp.ndarray, sigma: int
+                 ) -> jnp.ndarray:
+    """Per-(queue entry, column) one-hot frontier bytes for the batched
+    push phase: entry b pushing vertex v contributes ``1 << (v % σ)`` to
+    exactly the columns whose frontier actually holds v, 0 elsewhere — so
+    a vertex live in SOME columns never leaks discoveries into the others.
+    Dummy entries need no special case: whatever byte they produce meets
+    the all-zero dummy masks row of their dummy VSS id."""
+    member = ((F[vrep // 32] >> (vrep % 32).astype(jnp.uint32)[:, None])
+              & jnp.uint32(1))                               # (B, S) {0,1}
+    return (jnp.uint32(1)
+            << (vrep % sigma).astype(jnp.uint32))[:, None] * member
 
 
 class MSState(NamedTuple):
@@ -123,14 +147,30 @@ class MSEngine:
 def make_ms_engine(problem: BlestProblem, n_slots: int, *,
                    use_kernel: bool = True, buckets: int = 2,
                    track_sigma: bool = False,
+                   widths: list[int] | None = None,
+                   direction: str = "auto", push_cap: int | None = None,
+                   alpha: float = 4.0,
                    spmm_impl: Callable | None = None,
                    spmm_w_impl: Callable | None = None,
-                   gather_impl: Callable | None = None) -> MSEngine:
+                   gather_impl: Callable | None = None,
+                   push_impl: Callable | None = None) -> MSEngine:
     """Build the S-column lock-step BVSS level machinery (mesh-native when
     ``problem`` is sharded).  ``track_sigma`` widens the wave state with
     the Brandes σ path-count channel — on a sharded problem the channel
     rides the generic sharded float path (per-level all-gather of the
     σ-frontier values, DESIGN §2.6).
+
+    ``direction`` / ``push_cap`` / ``alpha`` / ``widths`` are the
+    direction-optimizing knobs of DESIGN §2.8, batched: the push branch
+    compacts the UNION frontier (any column) into a vertex queue, expands
+    each vertex into the ≤ R VSSs of its own slice set, and pushes
+    per-column one-hot frontier bytes through the SAME bit-SpMM tile
+    product the pull uses — so both directions share one kernel and one
+    fault seam (``spmm_impl``).  ``track_sigma`` pins ``direction="pull"``
+    (the σ channel's weighted twin has no push formulation; asking for
+    forced push with σ tracking is a :class:`~repro.errors.ConfigError`).
+    ``widths`` overrides the bucketed pull ladder (autotuner injection
+    point); default is ``queue_widths(num_vss, buckets)``.
 
     ``spmm_impl`` / ``spmm_w_impl`` / ``gather_impl`` are the documented
     FAULT SEAMS (DESIGN §2.7): engines capture their kernels in jitted
@@ -140,8 +180,22 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
     call sites, not by monkeypatching module globals after tracing.
     ``gather_impl`` must match :func:`repro.distributed.bfs_dist.
     frontier_all_gather`'s ``(fw_local, axis)`` signature and is only
-    consulted on a sharded problem."""
+    consulted on a sharded problem.  ``push_impl`` is accepted so fault
+    plans can splat ONE override dict into every engine build; the wave
+    engine's push branch rides the bit-SpMM seam (see above), so the
+    single-source push-kernel override has nothing to attach to here and
+    is ignored."""
+    del push_impl  # wave push rides the spmm seam (docstring above)
     p = problem
+    if direction not in DIRECTIONS:
+        raise ConfigError(
+            f"direction must be one of {DIRECTIONS}, got {direction!r}")
+    if track_sigma:
+        if direction == "push":
+            raise ConfigError(
+                "track_sigma is pull-only (the Brandes σ channel has no "
+                "weighted push twin); direction='push' is contradictory")
+        direction = "pull"
     spmm = spmm_impl if spmm_impl is not None else \
         (bvss_spmm if use_kernel else bvss_spmm_ref)
     spmm_w = spmm_w_impl if spmm_w_impl is not None else \
@@ -150,12 +204,15 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
                                        buckets=buckets, spmm_w=spmm_w,
                                        track_sigma=track_sigma,
-                                       gather=gather_impl)
+                                       gather=gather_impl, widths=widths,
+                                       direction=direction,
+                                       push_cap=push_cap, alpha=alpha)
     dev = p.dev
     sigma = p.sigma
     S = n_slots
     n, n_fwords = p.n, p.n_fwords
-    widths = queue_widths(p.num_vss, buckets)
+    widths = list(widths) if widths is not None else \
+        queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
     compact = make_compactor(dev, p.num_vss, qcap)
     all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
@@ -194,13 +251,53 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
         return state._replace(
             levels=levels, paths=jnp.where(newly, acc[:n], state.paths))
 
-    def step(state: MSState) -> MSState:
-        if len(widths) == 1:
-            return pull_update(state, widths[0])
-        small, full = widths
-        return jax.lax.cond(state.count <= small,
-                            lambda s: pull_update(s, small),
-                            lambda s: pull_update(s, full), state)
+    def pull_step(state: MSState) -> MSState:
+        return select_width(widths, state.count,
+                            lambda w: pull_update(state, w))
+
+    pcap = resolve_push_cap(direction, push_cap, n)
+    pqcap = _round_width(pcap)
+    R = p.max_vss_per_set
+    push_cost = pqcap * R
+    if direction == "pull" or (direction == "auto"
+                               and push_cost >= widths[-1]):
+        # push can never undercut even the full pull width: compile the
+        # pure pull step (same static bail as the single-source engines)
+        step = pull_step
+    else:
+        compact_vertices = make_vertex_compactor(n_fwords, n, pqcap)
+
+        def push_update(state: MSState) -> MSState:
+            """Batched push level (DESIGN §2.8): union-frontier vertex
+            queue → per-vertex VSS expansion → per-column one-hot bytes
+            through the same bit-SpMM tiles → the same scatter-min."""
+            VQ, _ = compact_vertices(_union_words(state.F))
+            ids = expand_push_queue(dev, VQ, R, p.num_vss)
+            vrep = jnp.broadcast_to(VQ[:, None], (pqcap, R)).reshape(-1)
+            fb = _push_fbytes(state.F, vrep, sigma)
+            counts = spmm(dev.masks[ids], fb, sigma=sigma)
+            rows = dev.row_ids[ids].reshape(-1)
+            cand = (state.col_lvl + 1)[None, :]
+            upd = jnp.where(counts.reshape(-1, S) > 0, cand, INF
+                            ).astype(jnp.int32)
+            return state._replace(levels=state.levels.at[rows].min(upd))
+
+        if direction == "push":
+            step = push_update
+        else:
+            def step(state: MSState) -> MSState:
+                ucount = jnp.sum(jax.lax.population_count(
+                    _union_words(state.F))).astype(jnp.int32)
+                tbits = jnp.sum(jax.lax.population_count(state.F)
+                                ).astype(jnp.float32)
+                unvisited = jnp.sum(state.levels[:n] == INF
+                                    ).astype(jnp.float32)
+                use_push = ((ucount <= pcap)
+                            & (jnp.int32(push_cost)
+                               < selected_width(widths, state.count))
+                            & (tbits * jnp.float32(alpha) <= unvisited))
+                return jax.lax.cond(use_push, push_update, pull_step,
+                                    state)
 
     def requeue(state: MSState) -> MSState:
         """Rebuild the union queue from the per-column frontiers: a slice
@@ -394,7 +491,10 @@ class _MSLocals(NamedTuple):
 def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
                     qcap: int, *, spmm_w=None,
                     track_sigma: bool = False,
-                    gather: Callable | None = None) -> Callable:
+                    gather: Callable | None = None,
+                    direction: str = "pull",
+                    push_cap: int | None = None,
+                    alpha: float = 4.0) -> Callable:
     """Build ``locals_for(dev) -> _MSLocals`` closing over one shard's BVSS
     views.  State fields here are LOCAL: levels (rps+1, S), F (n_fwords, S)
     global replica, Q (qcap,), count/cont scalars, col_lvl (S,).
@@ -405,7 +505,23 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
     ``all_gather`` of every shard's σ-frontier float values — the float
     twin of the frontier-word gather in ``finalize``.  The gather is
     hoisted OUT of the bucket ``cond`` (shards may pick different widths,
-    and a collective inside a device-varying branch wedges the mesh)."""
+    and a collective inside a device-varying branch wedges the mesh).
+
+    ``direction`` / ``push_cap`` / ``alpha`` thread the direction
+    heuristic (DESIGN §2.8): the frontier words are GLOBAL replicas, so
+    every shard compacts the SAME union vertex queue and expands it
+    through its OWN vertex→local-VSS maps — both cond branches stay
+    collective-free (the heuristic's unvisited psum runs unconditionally
+    before the cond), so the per-shard width term may diverge safely.
+    ``track_sigma`` callers must pass (or default to) ``direction="pull"``
+    — the σ channel has no push twin."""
+    if direction not in DIRECTIONS:
+        raise ConfigError(
+            f"direction must be one of {DIRECTIONS}, got {direction!r}")
+    if track_sigma and direction != "pull":
+        raise ConfigError(
+            "track_sigma locals are pull-only (no weighted push twin); "
+            f"got direction={direction!r}")
     axis = p.axis
     sigma = p.sigma
     rps = p.rows_per_shard
@@ -414,9 +530,16 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
     weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
     if gather is None:
         gather = frontier_all_gather
+    pcap = resolve_push_cap(direction, push_cap, p.n)
+    pqcap = _round_width(pcap)
+    R = p.max_vss_per_set
+    push_cost = pqcap * R
+    pull_only = direction == "pull" or (direction == "auto"
+                                        and push_cost >= widths[-1])
 
     def locals_for(dev: ShardedBVSSDevice) -> _MSLocals:
         compact = make_compactor(dev, p.num_vss, qcap)
+        compact_vertices = make_vertex_compactor(p.n_fwords, p.n, pqcap)
 
         def pull_update(st: MSState, width: int,
                         xg: jnp.ndarray | None) -> MSState:
@@ -444,6 +567,22 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
                 levels=levels,
                 paths=jnp.where(newly, acc[:rps], st.paths))
 
+        def push_update(st: MSState) -> MSState:
+            """Batched push level (DESIGN §2.8): the union vertex queue is
+            compacted from the GLOBAL frontier replica (identical on every
+            shard), expanded through this shard's vertex→local-VSS maps,
+            and resolved by the same bit-SpMM tiles + local scatter-min."""
+            VQ, _ = compact_vertices(_union_words(st.F))
+            ids = expand_push_queue(dev, VQ, R, p.num_vss)
+            vrep = jnp.broadcast_to(VQ[:, None], (pqcap, R)).reshape(-1)
+            fb = _push_fbytes(st.F, vrep, sigma)
+            counts = spmm(dev.masks[ids], fb, sigma=sigma)
+            rows = dev.row_ids[ids].reshape(-1)   # LOCAL rows, dummy = rps
+            cand = (st.col_lvl + 1)[None, :]
+            upd = jnp.where(counts.reshape(-1, S) > 0, cand, INF
+                            ).astype(jnp.int32)
+            return st._replace(levels=st.levels.at[rows].min(upd))
+
         def step(st: MSState) -> MSState:
             if track_sigma:
                 # the one extra cross-device term of the float channel:
@@ -455,12 +594,29 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
                 xg = jax.lax.all_gather(xv, axis, tiled=True)  # (n_pad, S)
             else:
                 xg = None
-            if len(widths) == 1:
-                return pull_update(st, widths[0], xg)
-            small, full = widths
-            return jax.lax.cond(st.count <= small,
-                                lambda s: pull_update(s, small, xg),
-                                lambda s: pull_update(s, full, xg), st)
+
+            def pull_step(s: MSState) -> MSState:
+                return select_width(widths, s.count,
+                                    lambda w: pull_update(s, w, xg))
+
+            if pull_only:
+                return pull_step(st)
+            if direction == "push":
+                return push_update(st)
+            ucount = jnp.sum(jax.lax.population_count(
+                _union_words(st.F))).astype(jnp.int32)
+            tbits = jnp.sum(jax.lax.population_count(st.F)
+                            ).astype(jnp.float32)
+            # unvisited is mesh-global (levels are local row blocks); the
+            # psum runs on every shard BEFORE the branch, so the cond
+            # bodies stay collective-free even if the width term diverges
+            unvisited = jax.lax.psum(
+                jnp.sum(st.levels[:rps] == INF), axis).astype(jnp.float32)
+            use_push = ((ucount <= pcap)
+                        & (jnp.int32(push_cost)
+                           < selected_width(widths, st.count))
+                        & (tbits * jnp.float32(alpha) <= unvisited))
+            return jax.lax.cond(use_push, push_update, pull_step, st)
 
         def requeue(st: MSState) -> MSState:
             # F is already the global replica: no gather needed here
@@ -564,7 +720,11 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
 def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
                             buckets: int, spmm_w=None,
                             track_sigma: bool = False,
-                            gather: Callable | None = None) -> MSEngine:
+                            gather: Callable | None = None,
+                            widths: list[int] | None = None,
+                            direction: str = "auto",
+                            push_cap: int | None = None,
+                            alpha: float = 4.0) -> MSEngine:
     """Host-driven wave surface over the shard_map'd local ops: every state
     field gains a leading shard axis; each public fn is one jitted
     shard_map dispatch."""
@@ -576,14 +736,22 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
     mesh, axis = p.mesh, p.axis
     D, rps = p.n_shards, p.rows_per_shard
     S = n_slots
-    widths = queue_widths(p.num_vss, buckets)
+    widths = list(widths) if widths is not None else \
+        queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
     locals_for = _make_ms_locals(p, S, spmm, widths, qcap, spmm_w=spmm_w,
-                                 track_sigma=track_sigma, gather=gather)
+                                 track_sigma=track_sigma, gather=gather,
+                                 direction=direction, push_cap=push_cap,
+                                 alpha=alpha)
 
     state_spec = state_specs(axis, track_sigma=track_sigma)
     dev_specs = problem_specs(axis)
-    dev_args = (p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real)
+    dev_args = (p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end)
+
+    def _dev(masks, row_ids, v2r, vstart, vend) -> ShardedBVSSDevice:
+        return ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                 vstart[0], vend[0])
 
     def _unstack(st: MSState) -> MSState:
         return jax.tree_util.tree_map(lambda x: x[0], st)
@@ -596,24 +764,24 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
                        out_specs=out_specs, check_rep=False)
         return lambda *args: fn(*dev_args, *args)
 
-    def _init(masks, row_ids, v2r, sources):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def _init(masks, row_ids, v2r, vstart, vend, sources):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
         return _stack(loc.init(sources))
 
-    def _insert(masks, row_ids, v2r, st, slot, src):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def _insert(masks, row_ids, v2r, vstart, vend, st, slot, src):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
         return _stack(loc.insert(_unstack(st), slot, src))
 
-    def _insert_batch(masks, row_ids, v2r, st, srcs, mask):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def _insert_batch(masks, row_ids, v2r, vstart, vend, st, srcs, mask):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
         return _stack(loc.insert_batch(_unstack(st), srcs, mask))
 
-    def _requeue(masks, row_ids, v2r, st):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def _requeue(masks, row_ids, v2r, vstart, vend, st):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
         return _stack(loc.requeue(_unstack(st)))
 
-    def _level_step(masks, row_ids, v2r, st):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def _level_step(masks, row_ids, v2r, vstart, vend, st):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
         st = loc.finalize(loc.step(_unstack(st)))
         return _stack(st), (st.F != 0).any(axis=0)[None]
 
@@ -667,10 +835,16 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
                           use_kernel: bool = True,
                           max_levels: int | None = None,
                           bvss=None, problem: BlestProblem | None = None,
-                          buckets: int = 2) -> Callable:
+                          buckets: int = 2,
+                          widths: list[int] | None = None,
+                          direction: str = "auto",
+                          push_cap: int | None = None,
+                          alpha: float = 4.0) -> Callable:
     """Build jitted ``f(sources (S,) i32) -> levels (n, S) i32`` with the
     whole level loop fused on device (fixed source cohort).  A sharded
-    ``problem`` runs the loop as one ``shard_map``'d ``while_loop``."""
+    ``problem`` runs the loop as one ``shard_map``'d ``while_loop``.
+    ``widths`` / ``direction`` / ``push_cap`` / ``alpha`` are the
+    direction-optimizing knobs (DESIGN §2.8; see :func:`make_ms_engine`)."""
     if problem is None:
         if bvss is None:
             from repro.core.bvss import build_bvss
@@ -680,9 +854,12 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
     if problem.mesh is not None:
         return _make_multi_source_bfs_sharded(
             problem, n_sources, use_kernel=use_kernel, buckets=buckets,
-            max_lv=max_lv)
+            max_lv=max_lv, widths=widths, direction=direction,
+            push_cap=push_cap, alpha=alpha)
     eng = make_ms_engine(problem, n_sources, use_kernel=use_kernel,
-                         buckets=buckets)
+                         buckets=buckets, widths=widths,
+                         direction=direction, push_cap=push_cap,
+                         alpha=alpha)
     step, finalize = eng.step, eng.finalize
     assert step is not None and finalize is not None
     pipe = LevelPipeline(step=lambda s, lvl: step(s),
@@ -698,7 +875,11 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
 
 def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
                                    use_kernel: bool, buckets: int,
-                                   max_lv: int) -> Callable:
+                                   max_lv: int,
+                                   widths: list[int] | None = None,
+                                   direction: str = "auto",
+                                   push_cap: int | None = None,
+                                   alpha: float = 4.0) -> Callable:
     """Fixed-cohort multi-source over the mesh: the SAME local step/finalize
     as the serving surface, with the whole level loop inside one
     ``shard_map``'d ``while_loop`` (no host sync, paper §4.3)."""
@@ -710,13 +891,17 @@ def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
     mesh, axis = p.mesh, p.axis
     rps = p.rows_per_shard
     S = n_sources
-    widths = queue_widths(p.num_vss, buckets)
+    widths = list(widths) if widths is not None else \
+        queue_widths(p.num_vss, buckets)
     qcap = widths[-1]
     spmm = bvss_spmm if use_kernel else bvss_spmm_ref
-    locals_for = _make_ms_locals(p, S, spmm, widths, qcap)
+    locals_for = _make_ms_locals(p, S, spmm, widths, qcap,
+                                 direction=direction, push_cap=push_cap,
+                                 alpha=alpha)
 
-    def local_loop(masks, row_ids, v2r, sources):
-        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0]))
+    def local_loop(masks, row_ids, v2r, vstart, vend, sources):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                           vstart[0], vend[0]))
         pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
                              finalize=lambda s, lvl: loc.finalize(s),
                              active=lambda s: s.cont)
@@ -729,6 +914,7 @@ def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
 
     def bfs(sources: jnp.ndarray) -> jnp.ndarray:
         out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
                  jnp.asarray(sources, dtype=jnp.int32))
         return out.reshape(-1, S)[:p.n]
 

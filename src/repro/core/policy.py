@@ -26,6 +26,7 @@ from typing import Callable
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.autotune import TileConfig
 from repro.core.bfs import BlestProblem, make_engine
 from repro.core.bvss import BVSS, build_bvss, build_sharded_bvss
 from repro.core.ordering import auto_order
@@ -53,6 +54,11 @@ class PreparedBFS:
     update_divergence: float
     # mesh the problem is row-sharded over; None = single-device
     mesh: Mesh | None = None
+    # winning hybrid knobs when prepared with autotune=True (DESIGN §2.8);
+    # None = defaults were used.  ``tile_config.source == "cached"`` means
+    # this prepare() re-used an earlier measurement (zero tuning
+    # dispatches) — the memoisation contract tests assert on it
+    tile_config: "TileConfig | None" = None
     _fn: Callable | None = dataclasses.field(default=None)
 
     def levels(self, src: int) -> np.ndarray:
@@ -80,11 +86,24 @@ BVSS_ENGINES = ("brs", "blest", "blest_lazy")
 def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             lazy_threshold: float | None = None, order: bool = True,
             engine: str | None = None, use_kernels: bool = True,
-            buckets: int = 2, mesh: Mesh | None = None,
+            buckets: int = 2, direction: str = "auto",
+            autotune: bool = False, push_impl: Callable | None = None,
+            mesh: Mesh | None = None,
             mesh_axis: str = "data") -> PreparedBFS:
     """The full static pipeline: (optionally) order, build the BVSS, pick
     the update scheme (or honour an explicit ``engine`` override, e.g. the
     Table-2 ablation variants), build the fused engine.
+
+    ``direction`` selects the push/pull hybrid mode of the BVSS engines
+    (DESIGN §2.8; default "auto" picks per level on device).
+    ``push_impl`` overrides the push kernel — the single-source push
+    fault seam (DESIGN §2.7), threaded through by the serving tier's
+    :class:`~repro.serve.faults.FaultPlan`.
+    ``autotune=True`` measures the hybrid's static knobs — pull-queue
+    ladder, push cap — for this backend and graph class before the engine
+    build (``core.autotune``; memoised, so repeat preparations of the same
+    class perform zero extra timing dispatches) and records the winner on
+    ``PreparedBFS.tile_config``.
 
     ``mesh`` row-shards the problem over ``mesh_axis`` and builds the
     mesh-native engine (DESIGN §2.4): the policy decisions (ordering,
@@ -114,12 +133,20 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
         # the host bvss alone backs the stats printouts and the policy
         problem = BlestProblem.build(bvss) if engine_name in BVSS_ENGINES \
             else None
+    tile_config: TileConfig | None = None
+    tuned_kwargs: dict = {}
+    if autotune and engine_name in BVSS_ENGINES and problem is not None:
+        from repro.core.autotune import tune
+        tile_config = tune(problem, use_kernels=use_kernels)
+        tuned_kwargs = tile_config.engine_kwargs()
     fn = make_engine(g_ord, engine_name, bvss=bvss, problem=problem,
-                     use_kernels=use_kernels, buckets=buckets)
+                     use_kernels=use_kernels, buckets=buckets,
+                     direction=direction, push_impl=push_impl,
+                     **tuned_kwargs)
     return PreparedBFS(graph=g_ord, perm=perm, inv=inv, ordering=kind,
                        engine_name=engine_name, bvss=bvss, problem=problem,
                        update_divergence=bvss.update_divergence(),
-                       mesh=mesh, _fn=fn)
+                       mesh=mesh, tile_config=tile_config, _fn=fn)
 
 
 def parents_from_levels(g: Graph, levels: np.ndarray) -> np.ndarray:

@@ -62,10 +62,12 @@ def frontier_all_gather(fw_local, axis: str = BFS_AXIS):
     return jax.lax.all_gather(fw_local, axis, tiled=True)
 
 
-def problem_specs(axis: str = BFS_AXIS) -> tuple[P, P, P]:
-    """PartitionSpecs of the shard-stacked problem arrays
-    ``(masks, row_ids, virtual_to_real)`` (leading axis = shard)."""
-    return (P(axis), P(axis), P(axis))
+def problem_specs(axis: str = BFS_AXIS) -> tuple[P, P, P, P, P]:
+    """PartitionSpecs of the shard-stacked problem arrays ``(masks,
+    row_ids, virtual_to_real, vss_of_vertex_start, vss_of_vertex_end)``
+    (leading axis = shard; the last two are the push phase's GLOBAL
+    vertex -> LOCAL VSS maps, DESIGN §2.8)."""
+    return (P(axis), P(axis), P(axis), P(axis), P(axis))
 
 
 def problem_sharding(mesh: Mesh, axis: str = BFS_AXIS) -> NamedSharding:

@@ -11,6 +11,7 @@ Hierarchy::
 
     BlestError
     ├── GraphValidationError   malformed graph / out-of-range source ids
+    ├── ConfigError            unusable engine/tuning configuration
     ├── AdmissionError         multi-tenant quota or memory budget refusal
     ├── DeadlineExceeded       a query outlived its per-request budget
     └── KernelFaultError       device result failed an oracle cross-check
@@ -35,6 +36,13 @@ class BlestError(Exception):
 
 class GraphValidationError(BlestError, ValueError):
     """A graph, permutation or source id failed ingress validation."""
+
+
+class ConfigError(BlestError, ValueError):
+    """An engine or tuning configuration is unusable (e.g. a bucket count
+    the queue-width ladder cannot honour).  Raised instead of silently
+    degrading to a nearby valid configuration — a silent fallback would
+    make autotuner search results lie about what actually ran."""
 
 
 class AdmissionError(BlestError):

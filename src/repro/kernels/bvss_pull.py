@@ -73,8 +73,8 @@ def bvss_pull(masks: jnp.ndarray, fbytes: jnp.ndarray, *, sigma: int = 8,
     fbytes: (B,) uint32 frontier bytes (pre-gathered via virtualToReal).
     returns hits (B, spw, 32) bool, hits[b, j, l] for slice k = j*32+l.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B = masks.shape[0]
     spw = 32 // sigma
     pad = (-B) % tile

@@ -57,8 +57,8 @@ def finalize_sweep(marks: jnp.ndarray, levels: jnp.ndarray, lvl: jnp.ndarray,
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """marks (N,) uint8, levels (N,) int32, lvl scalar int32 ->
     (levels' (N,) int32, new (N,) bool)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     N = marks.shape[0]
     pad = (-N) % TILE
     if pad:
@@ -137,8 +137,8 @@ def finalize_pack_sweep(levels: jnp.ndarray, lvl: jnp.ndarray, *,
     set_active (n_sets,) bool)``; frontier bit ``v`` of fwords is vertex v,
     set_active[s] covers vertices ``σs .. σ(s+1)-1``.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     N = levels.shape[0]
     need = max(N, n_fwords * 32, n_sets * sigma)
     Np = ((need + TILE - 1) // TILE) * TILE

@@ -93,8 +93,8 @@ def bit_spmm(a_packed: jnp.ndarray, x: jnp.ndarray, *,
     x:        (C, S) int8 (0/1 frontier columns).
     returns   (R, S) int32 popcounts (threshold >0 outside for Boolean BFS).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     R, W = a_packed.shape
     C, S = x.shape
     assert W * 32 >= C, (W, C)
@@ -169,8 +169,8 @@ def bvss_spmm(masks: jnp.ndarray, fbytes: jnp.ndarray, *, sigma: int = 8,
     amortises the interpreter's per-grid-cell cost.  The source tile rounds
     S up to a sublane multiple (pass ``tile_s=128`` for full MXU lanes).
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S = masks.shape[0], fbytes.shape[1]
     spw = 32 // sigma
     if tile_b is None:
@@ -241,8 +241,8 @@ def _spmm_float_call(kernel, masks, vals, mid: int, out_mid: int, *,
                      tile_s: int | None, interpret: bool | None):
     """Shared pallas_call plumbing for the two weighted tile products:
     vals is (B, mid, S) float32, the result (B, out_mid, S) float32."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S = masks.shape[0], vals.shape[2]
     if tile_b is None:
         tile_b = 128 if interpret else 8

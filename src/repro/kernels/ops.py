@@ -3,14 +3,49 @@
 Downstream code (BFS engines, multi-source BFS) imports from here so the
 kernel/oracle switch is one flag.  On CPU (this container) the Pallas bodies
 execute in ``interpret=True``; on TPU they compile to Mosaic.
+
+:func:`resolve_interpret` is the ONE place that decides interpret-vs-
+compiled for every Pallas entry point (DESIGN §2.8) — the per-kernel
+``jax.default_backend() == "cpu"`` sniffing that used to be copy-pasted
+across ``bvss_pull`` and the four ``mxu_pull`` entry points lives here,
+plus a ``BLEST_INTERPRET`` env override so the compiled bench lane can
+force either mode uniformly.
 """
 from __future__ import annotations
 
-from .bvss_pull import bvss_pull
-from .mxu_pull import (bit_spmm, bvss_spmm, bvss_spmm_t, bvss_spmm_t_local,
-                       bvss_spmm_w, bvss_spmm_w_local)
-from .frontier_finalize import finalize_pack_sweep, finalize_sweep
-from . import ref
+import os
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` flag to a concrete bool.
+
+    Precedence (first match wins):
+
+    1. an explicit ``interpret=True/False`` argument;
+    2. the ``BLEST_INTERPRET`` env var — ``"1"`` forces interpret mode,
+       ``"0"`` forces compiled Mosaic (read at TRACE time: flip it before
+       the first jitted call, not between calls to an already-compiled
+       function);
+    3. backend sniff: interpret on CPU (no Mosaic backend there),
+       compiled elsewhere.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("BLEST_INTERPRET")
+    if env is not None and env != "":
+        return env != "0"
+    return jax.default_backend() == "cpu"
+
+
+from .bvss_pull import bvss_pull                              # noqa: E402
+from .bvss_push import bvss_push                              # noqa: E402
+from .mxu_pull import (bit_spmm, bvss_spmm, bvss_spmm_t,      # noqa: E402
+                       bvss_spmm_t_local, bvss_spmm_w, bvss_spmm_w_local)
+from .frontier_finalize import (finalize_pack_sweep,          # noqa: E402
+                                finalize_sweep)
+from . import ref                                             # noqa: E402
 
 
 def pull_vss_kernel(masks, fbytes, sigma: int = 8):
@@ -19,6 +54,13 @@ def pull_vss_kernel(masks, fbytes, sigma: int = 8):
     return bvss_pull(masks, fbytes, sigma=sigma)
 
 
-__all__ = ["bvss_pull", "bit_spmm", "bvss_spmm", "bvss_spmm_t",
-           "bvss_spmm_t_local", "bvss_spmm_w", "bvss_spmm_w_local",
-           "finalize_sweep", "finalize_pack_sweep", "pull_vss_kernel", "ref"]
+def push_vss_kernel(masks, bits, sigma: int = 8):
+    """Drop-in replacement for kernels.ref.bvss_push_ref backed by the
+    Pallas VPU push kernel (lane-major layout)."""
+    return bvss_push(masks, bits, sigma=sigma)
+
+
+__all__ = ["resolve_interpret", "bvss_pull", "bvss_push", "bit_spmm",
+           "bvss_spmm", "bvss_spmm_t", "bvss_spmm_t_local", "bvss_spmm_w",
+           "bvss_spmm_w_local", "finalize_sweep", "finalize_pack_sweep",
+           "pull_vss_kernel", "push_vss_kernel", "ref"]

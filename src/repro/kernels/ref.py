@@ -33,6 +33,15 @@ def bvss_pull_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
     return jnp.stack(hits, axis=1)
 
 
+def bvss_push_ref(masks: jnp.ndarray, bits: jnp.ndarray, sigma: int = 8
+                  ) -> jnp.ndarray:
+    """Oracle for kernels.bvss_push: hits (B, 32/σ, 32) bool — the pull
+    oracle evaluated against the one-hot frontier byte ``1 << (v % σ)`` of
+    the vertex pushing each queued VSS."""
+    fb = jnp.uint32(1) << bits.astype(jnp.uint32)
+    return bvss_pull_ref(masks, fb, sigma)
+
+
 def bvss_spmm_ref(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int = 8
                   ) -> jnp.ndarray:
     """Oracle for kernels.bvss_spmm: (B, 32/σ, 32, S) int32 popcounts of

@@ -7,13 +7,21 @@ baked into the traced computation — deterministic, retrace-free, and
 exactly at the documented seams of :func:`repro.core.multi_source.
 make_ms_engine` (``spmm_impl`` / ``spmm_w_impl`` / ``gather_impl``).
 
-Three fault families, one per seam (style after ``ft/manager.py``'s
+Four fault families, one per seam (style after ``ft/manager.py``'s
 deterministic injection):
 
 * ``corrupt_spmm_tile`` — the Boolean bit-SpMM returns a corrupted output
   tile: the first queued VSS tile's popcounts are forced positive, so its
   rows are "discovered" a level early.  A silent wrong answer unless the
   verify-mode sampling policy (``serve.session_manager``) catches it.
+* ``corrupt_push_tile`` — the direction-optimizing PUSH kernel (DESIGN
+  §2.8) returns a corrupted first tile: every row of the first queued
+  (vertex, VSS) pair reads as hit.  Only push levels are affected, so
+  the fault is invisible until the hybrid actually switches direction
+  (or the engine is forced to ``direction="push"``) — exactly the class
+  of bug the gauntlet exists to keep honest.  The seam is
+  ``push_impl`` of the single-source engines; the wave engine's push
+  branch rides the bit-SpMM seam and is covered by ``corrupt_spmm_tile``.
 * ``nan_sigma`` — the weighted tile product NaN-poisons the σ path-count
   float channel (a flush-to-NaN matrix unit fault).  Betweenness scores
   go NaN; the finite guard must degrade to the host oracle.
@@ -50,6 +58,9 @@ class FaultPlan:
     #: corrupt the Boolean bit-SpMM: force the first queued tile's
     #: popcounts positive (rows discovered a level early — wrong levels)
     corrupt_spmm_tile: bool = False
+    #: corrupt the push kernel's first tile (hybrid push levels only):
+    #: every row of the first queued (vertex, VSS) pair reads as hit
+    corrupt_push_tile: bool = False
     #: NaN-poison the weighted σ tile product (Brandes float channel)
     nan_sigma: bool = False
     #: zero shard k's segment of the frontier-word all-gather (stalled
@@ -58,8 +69,8 @@ class FaultPlan:
 
     @property
     def injects(self) -> bool:
-        return (self.corrupt_spmm_tile or self.nan_sigma
-                or self.stall_shard is not None)
+        return (self.corrupt_spmm_tile or self.corrupt_push_tile
+                or self.nan_sigma or self.stall_shard is not None)
 
     # -- seam wrappers ---------------------------------------------------
     def wrap_spmm(self, base: Callable) -> Callable:
@@ -73,6 +84,18 @@ class FaultPlan:
             return counts.at[0].set(jnp.maximum(counts[0], 1))
 
         return faulty_spmm
+
+    def wrap_push(self, base: Callable) -> Callable:
+        if not self.corrupt_push_tile:
+            return base
+
+        def faulty_push(masks, bits, sigma=8, **kw):
+            hits = base(masks, bits, sigma, **kw)
+            # corrupt tile 0: the first queued (vertex, VSS) pair claims
+            # every row of its tile, whatever the masks said
+            return hits.at[0].set(True)
+
+        return faulty_push
 
     def wrap_spmm_w(self, base: Callable) -> Callable:
         if not self.nan_sigma:
@@ -115,6 +138,12 @@ class FaultPlan:
         out: dict = {}
         if self.corrupt_spmm_tile:
             out["spmm_impl"] = self.wrap_spmm(spmm)
+        if self.corrupt_push_tile:
+            if use_kernel:
+                from repro.kernels import push_vss_kernel as push
+            else:
+                from repro.kernels.ref import bvss_push_ref as push
+            out["push_impl"] = self.wrap_push(push)
         if self.nan_sigma:
             out["spmm_w_impl"] = self.wrap_spmm_w(spmm_w)
         if self.stall_shard is not None:

@@ -74,13 +74,22 @@ class GraphSession:
                  w: int = 512, seed: int = 0,
                  lazy_threshold: float | None = None, order: bool = True,
                  engine: str | None = None, use_kernel: bool = True,
+                 direction: str = "auto", autotune: bool = False,
                  max_steps: int | None = None, mesh: Mesh | None = None,
                  mesh_axis: str = "data",
                  fault_plan: FaultPlan | None = None):
         t0 = time.time()
+        # fault seams (DESIGN §2.7): a FaultPlan's wrappers are baked into
+        # every engine this session builds — including the single-source
+        # engine's push seam, so they must exist BEFORE prepare(); the
+        # default plan injects nothing and adds nothing to the trace
+        self.fault_plan = fault_plan if fault_plan is not None else NO_FAULTS
+        self._seams = self.fault_plan.engine_overrides(use_kernel=use_kernel)
         self.prepared: PreparedBFS = prepare(
             g, sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
             order=order, engine=engine, use_kernels=use_kernel,
+            direction=direction, autotune=autotune,
+            push_impl=self._seams.get("push_impl"),
             mesh=mesh, mesh_axis=mesh_axis)
         if self.prepared.problem is not None:
             self._problem = self.prepared.problem
@@ -91,14 +100,11 @@ class GraphSession:
             self._problem = BlestProblem.build(self.prepared.bvss)
         self.max_batch = int(max_batch)
         self._use_kernel = use_kernel
+        self._direction = direction
         self._mesh_axis = mesh_axis
-        # fault seams (DESIGN §2.7): a FaultPlan's wrappers are baked into
-        # every engine this session builds; the default plan injects
-        # nothing and adds nothing to the trace
-        self.fault_plan = fault_plan if fault_plan is not None else NO_FAULTS
-        self._seams = self.fault_plan.engine_overrides(use_kernel=use_kernel)
         self._ms = make_ms_engine(self._problem, self.max_batch,
-                                  use_kernel=use_kernel, **self._seams)
+                                  use_kernel=use_kernel,
+                                  direction=direction, **self._seams)
         # analytics problems/engines, built on first use and cached so
         # repeat queries never recompile (DESIGN §2.6)
         self._analytics_cache: dict = {}

@@ -164,8 +164,9 @@ h = rng.random((D, sb.rows_per_shard + 1, S)).astype(np.float32)
 h[:, -1, :] = 0.0                           # dummy row must stay zero
 h[:, :, 1] = 0.0
 
-def f(masks, row_ids, v2r, xg, h):
-    dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0])
+def f(masks, row_ids, v2r, vstart, vend, xg, h):
+    dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                            vstart[0], vend[0])
     ids = jnp.arange(B, dtype=jnp.int32)
     w = bvss_spmm_w_local(dev.masks[ids], dev.virtual_to_real[ids], xg,
                           sigma=sigma)
@@ -176,6 +177,7 @@ def f(masks, row_ids, v2r, xg, h):
 fn = shard_map(f, mesh=mesh, in_specs=problem_specs() + (P(), P('data')),
                out_specs=(P('data'), P('data')), check_rep=False)
 w, t = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+          p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
           jnp.asarray(xg), jnp.asarray(h))
 w, t = np.asarray(w), np.asarray(t)
 

@@ -15,7 +15,10 @@ Scenario matrix:
    catches the under-discovery, degraded-but-correct re-serve;
 4. over-quota request            → AdmissionError with a reason code;
 5. expired deadline              → partial TimeoutResult / typed
-   DeadlineExceeded, never a hang.
+   DeadlineExceeded, never a hang;
+6. corrupted push tile (DESIGN §2.8 direction-optimizing hybrid) →
+   a fault that only fires on push levels still cannot slip a silent
+   wrong answer past full verification.
 """
 import warnings
 
@@ -48,6 +51,10 @@ def test_no_fault_plan_is_free():
     plan = FaultPlan(corrupt_spmm_tile=True)
     assert plan.injects
     assert set(plan.engine_overrides()) == {"spmm_impl"}
+    push = FaultPlan(corrupt_push_tile=True)
+    assert push.injects
+    assert set(push.engine_overrides()) == {"push_impl"}
+    assert set(push.engine_overrides(use_kernel=False)) == {"push_impl"}
     both = FaultPlan(nan_sigma=True, stall_shard=1)
     assert set(both.engine_overrides()) == {"spmm_w_impl", "gather_impl"}
 
@@ -194,6 +201,50 @@ def test_expired_deadline_partial_or_typed_error(graph):
         np.testing.assert_array_equal(r.levels[got], ref[got])
     with pytest.raises(DeadlineExceeded):
         mgr.levels_batch("g", QUERIES, deadline_s=0.0, on_deadline="raise")
+
+
+# ---------------------------------------------------------------------------
+# scenario 6: corrupted push tile (hybrid direction, DESIGN §2.8)
+# ---------------------------------------------------------------------------
+def test_corrupt_push_fault_actually_diverges(graph):
+    """Sanity: under ``direction="push"`` every level runs the push
+    kernel, so the corrupt tile DOES change answers (the fused singleton
+    engine is the seam's consumer — build-time injection, no retrace)."""
+    sess = GraphSession(graph, use_kernel=False, direction="push",
+                        fault_plan=FaultPlan(corrupt_push_tile=True))
+    diverged = sum(
+        not np.array_equal(sess.levels(q), reference_bfs(graph, q))
+        for q in QUERIES)
+    assert diverged > 0
+
+
+def test_corrupt_push_invisible_on_pull_levels(graph):
+    """The push fault must NOT leak into pull traffic: a pull-forced
+    session built with the same plan stays oracle-exact — the fault is
+    direction-scoped, which is exactly why it needs its own scenario."""
+    sess = GraphSession(graph, use_kernel=False, direction="pull",
+                        fault_plan=FaultPlan(corrupt_push_tile=True))
+    for q in QUERIES:
+        np.testing.assert_array_equal(sess.levels(q),
+                                      reference_bfs(graph, q))
+
+
+def test_corrupt_push_quarantined_and_reserved_correctly(graph):
+    """Full gauntlet: singleton queries ride the fused push engine, the
+    verify sampler catches the divergence, the session quarantines and
+    every answer the caller sees is oracle-exact."""
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("pushy", graph, use_kernel=False, direction="push",
+                     fault_plan=FaultPlan(corrupt_push_tile=True))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = [mgr.levels("pushy", q) for q in QUERIES]
+    for q, lv in zip(QUERIES, out):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    st = mgr.stats()
+    assert st["quarantines"] == 1
+    assert mgr._sessions["pushy"].quarantined
 
 
 # ---------------------------------------------------------------------------

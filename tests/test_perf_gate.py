@@ -61,9 +61,37 @@ def test_checked_in_floors_are_wellformed():
     assert spec["floors"], "floors file must gate at least one metric"
     for dotted, floor in spec["floors"].items():
         suite = dotted.split(".")[0]
-        assert suite in ("fused", "service", "dist", "analytics"), dotted
+        assert suite in ("fused", "service", "dist", "analytics",
+                         "hybrid"), dotted
         assert ".summary." in dotted, dotted
         assert floor > 0, dotted
+
+
+@pytest.mark.parametrize("mode", ["pass", "fail", "empty"])
+def test_gate_only_prefix_filters_floors(tmp_path, mode):
+    """--only gates just the matching floors (the compiled-smoke job's
+    hybrid-only artifact); an empty selection is an error, never a
+    vacuous pass."""
+    art = tmp_path / "bench.json"
+    art.write_text(json.dumps(
+        {"hybrid": {"summary": {"geomean_hybrid_vs_pull":
+                                1.3 if mode != "fail" else 0.5}}}))
+    floors = {"max_regression": 0.25,
+              "floors": {"hybrid.summary.geomean_hybrid_vs_pull": 1.15,
+                         # would be MISSING from the partial artifact —
+                         # --only must exclude it for the gate to pass
+                         "service.summary.geomean_wave_speedup": 2.0}}
+    fl = tmp_path / "floors.json"
+    fl.write_text(json.dumps(floors))
+    prefix = "nonsense." if mode == "empty" else "hybrid."
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.perf_gate", str(art),
+         "--floors", str(fl), "--only", prefix],
+        cwd=REPO, capture_output=True, text=True)
+    expected = 0 if mode == "pass" else 1
+    assert res.returncode == expected, res.stdout + res.stderr
+    if mode == "empty":
+        assert "refusing to vacuously pass" in res.stdout
 
 
 @pytest.mark.parametrize("mode", ["pass", "fail", "prove"])
