@@ -192,6 +192,150 @@ def _run_inline(scale: int, devices: int, n_queries: int,
     return out
 
 
+def _trace_comm_bytes(problem) -> int:
+    """Per-device communication bytes for ONE BFS level: trace the fused
+    single-source engine under the trace-time comm ledger
+    (``distributed.collectives.comm_ledger``) — the ``while_loop`` body
+    traces exactly once, so the recorded collective payloads are one
+    level's worth on one device."""
+    from repro.core.bfs import make_blest_bfs
+    from repro.distributed.collectives import comm_ledger
+
+    fn = make_blest_bfs(problem, lazy=False)
+    with comm_ledger() as events:
+        fn.lower(0)
+    return int(sum(nb for _, nb in events))
+
+
+def _run_2d_inline(scale: int, verbose: bool) -> dict:
+    """The 2-D partition block (PR-8): butterfly vs flat per-device
+    communication volume as the mesh grows, plus oracle-verified parity
+    of the 2-D engines on 2x2 and 4x2 meshes.  Needs >= 8 devices
+    in-process; ``scale`` is floored at 8 (below that the 32·cols
+    alignment pads every row block to the same size and the volumes
+    degenerate)."""
+    from repro.core import reference_bfs
+    from repro.core.policy import prepare
+    from repro.distributed.bfs_dist import bfs_mesh, bfs_mesh2d
+
+    scale = max(scale, 8)
+    g = _dist_suite(scale)["kron"]
+    rng = np.random.default_rng(0)
+    srcs = [int(s) for s in rng.integers(0, g.n, 3)]
+    refs = {s: reference_bfs(g, s) for s in srcs}
+
+    meshes_out = {}
+    verified = True
+    for rows, cols in [(2, 2), (4, 2)]:
+        mesh = bfs_mesh2d(rows, cols)
+        prep = prepare(g, w=512, mesh=mesh)
+        ok = all(bool((prep.levels(s) == refs[s]).all()) for s in srcs)
+        assert ok, f"2-D engine diverges from oracle on {rows}x{cols}"
+        verified &= ok
+        meshes_out[f"{rows}x{cols}"] = {
+            "devices": rows * cols,
+            "rows_per_shard": int(prep.problem.rows_per_shard),
+            "cols_per_block": int(prep.problem.cols_per_block),
+            "frontier_words_local": int(prep.problem.n_fwords),
+            "median_bfs_sec": _median_bfs_time(prep.levels, srcs),
+            "verified": ok,
+            "comm_bytes_per_level": _trace_comm_bytes(prep.problem),
+        }
+
+    flat = {}
+    for d in (4, 8):
+        prep = prepare(g, w=512, mesh=bfs_mesh(d))
+        flat[d] = _trace_comm_bytes(prep.problem)
+
+    b22 = meshes_out["2x2"]["comm_bytes_per_level"]
+    b42 = meshes_out["4x2"]["comm_bytes_per_level"]
+    comm = {
+        "flat_bytes_per_level_4dev": flat[4],
+        "flat_bytes_per_level_8dev": flat[8],
+        "butterfly_bytes_per_level_2x2": b22,
+        "butterfly_bytes_per_level_4x2": b42,
+        # >1 means per-device traffic SHRINKS as the mesh grows 4 -> 8
+        "butterfly_shrink_4_to_8": b22 / max(b42, 1),
+        "flat_shrink_4_to_8": flat[4] / max(flat[8], 1),
+    }
+    assert comm["butterfly_shrink_4_to_8"] > 1.0, (
+        f"butterfly per-device bytes/level must shrink with the mesh: "
+        f"2x2={b22}B vs 4x2={b42}B")
+    assert comm["flat_shrink_4_to_8"] <= 1.0, (
+        f"flat all-gather bytes/level should NOT shrink (it grows with "
+        f"device count): 4dev={flat[4]}B vs 8dev={flat[8]}B")
+    if verbose:
+        for mname, mo in meshes_out.items():
+            print(fmt_row(f"bench_dist/dist2d/{mname}",
+                          mo["median_bfs_sec"] * 1e6,
+                          f"comm={mo['comm_bytes_per_level']}B/level"))
+        print(f"# butterfly_shrink_4_to_8="
+              f"{comm['butterfly_shrink_4_to_8']:.2f}x "
+              f"(flat: {comm['flat_shrink_4_to_8']:.2f}x)")
+    return {
+        "scale": scale,
+        "note": ("per-device collective payload bytes for ONE level, "
+                 "recorded at trace time: 2-D butterfly (OR-allreduce "
+                 "over columns + segment exchange over rows) vs the 1-D "
+                 "flat frontier all-gather; shrink = 4-device bytes / "
+                 "8-device bytes, >1 iff traffic shrinks as the mesh "
+                 "grows"),
+        "meshes": meshes_out,
+        "comm": comm,
+        "verified": verified,
+    }
+
+
+def run_2d(scale: int = 8, json_path: str | None = None,
+           verbose: bool = True) -> dict:
+    """The dist2d block, re-exec'd with 8 forced host devices if this
+    process has fewer (same discipline as :func:`run`)."""
+    import jax
+
+    if len(jax.devices()) >= 8:
+        out = _run_2d_inline(scale, verbose)
+    else:
+        flag = "--xla_force_host_platform_device_count=8"
+        if flag in os.environ.get("XLA_FLAGS", ""):
+            raise RuntimeError(
+                f"{flag} set but only {len(jax.devices())} devices came up")
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            tmp = f.name
+        try:
+            env = dict(os.environ)
+            # drop any smaller forced-device-count flag a parent re-exec
+            # set (last flag wins only by accident; be explicit)
+            base = " ".join(
+                t for t in env.get("XLA_FLAGS", "").split()
+                if not t.startswith(
+                    "--xla_force_host_platform_device_count"))
+            env["XLA_FLAGS"] = (base + " " + flag).strip()
+            env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                                 + env.get("PYTHONPATH", "")
+                                 ).rstrip(os.pathsep)
+            cmd = [sys.executable, "-m", "benchmarks.bench_dist",
+                   "--dist2d-only", "--scale", str(scale), "--json", tmp]
+            res = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                                 text=True, timeout=3000)
+            if res.returncode != 0:
+                raise RuntimeError(
+                    f"bench_dist --dist2d-only subprocess failed:\n"
+                    f"{res.stdout}\n{res.stderr}")
+            if verbose and res.stdout:
+                print("\n".join(l for l in res.stdout.splitlines()
+                                if not l.startswith("# wrote ")))
+            with open(tmp) as f:
+                out = json.load(f)
+        finally:
+            os.unlink(tmp)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    return out
+
+
 def run(scale: int = 8, devices: int = 2, n_queries: int = 6,
         json_path: str | None = None, verbose: bool = True) -> dict:
     import jax
@@ -232,6 +376,8 @@ def run(scale: int = 8, devices: int = 2, n_queries: int = 6,
                 out = json.load(f)
         finally:
             os.unlink(tmp)
+    if "dist2d" not in out:   # child runs append it before writing JSON
+        out["dist2d"] = run_2d(scale, verbose=verbose)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=False)
@@ -246,7 +392,12 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=2)
     ap.add_argument("--queries", type=int, default=6)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--dist2d-only", action="store_true",
+                    help="emit only the 2-D butterfly comm-volume block")
     args = ap.parse_args(argv)
+    if args.dist2d_only:
+        run_2d(scale=args.scale, json_path=args.json)
+        return
     run(scale=args.scale, devices=args.devices, n_queries=args.queries,
         json_path=args.json)
 

@@ -1,0 +1,128 @@
+"""PR-8 scale sweep: MTEPS and device-memory trajectory of the fused
+BLEST engine over growing RMAT graphs.
+
+One lane, one graph family (RMAT, avg degree 16 — the paper's kron-like
+scaling family), scales 2^10 .. 2^14: per scale the full ``prepare``
+pipeline runs (ordering + BVSS + policy + fused engine) and the sweep
+records
+
+* MTEPS — million traversed edges per second, ``m / median_bfs_sec /
+  1e6`` over a fixed source sample (the paper's headline unit, honest
+  CPU-flavoured absolute numbers);
+* the peak static device footprint, ``BVSS.memory_bytes()`` (Table-4
+  breakdown: bvss + dynamic working set + level array) — the quantity
+  that must scale with BVSS words, not n²/32 dense bits.
+
+The SMALLEST scale is oracle-verified against ``reference_bfs`` before
+any timing is trusted (the larger scales share the same engine build
+path, and verifying 2^14 against the NumPy oracle would dominate the
+sweep).  ``--quick`` stops at 2^11 — the CI lane; the weekly bench.yml
+runs the full depth.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks.common import bench_envelope, fmt_row
+
+FULL_SCALES = (10, 11, 12, 13, 14)
+QUICK_SCALES = (10, 11)
+
+
+def run(scales=None, quick: bool = False, n_sources: int = 3,
+        json_path: str | None = None, verbose: bool = True) -> dict:
+    from repro.core import reference_bfs
+    from repro.core.policy import prepare
+    from repro.graphs import generators as gen
+
+    if scales is None:
+        scales = QUICK_SCALES if quick else FULL_SCALES
+    scales = sorted(int(s) for s in scales)
+
+    scales_out = {}
+    all_verified = True
+    for si, sc in enumerate(scales):
+        g = gen.rmat(sc, 16, seed=1)
+        prep = prepare(g, w=512)
+        rng = np.random.default_rng(0)
+        srcs = [int(s) for s in rng.integers(0, g.n, n_sources)]
+        verified = True
+        if si == 0:  # oracle-verify the smallest scale (shared build path)
+            for s in srcs:
+                verified &= bool((prep.levels(s) == reference_bfs(g, s)
+                                  ).all())
+            assert verified, f"scale {sc}: engine diverges from oracle"
+        all_verified &= verified
+        prep.levels(srcs[0])                      # compile + warm
+        ts = []
+        import time
+        for s in srcs:
+            t0 = time.time()
+            np.asarray(prep.levels(s))
+            ts.append(time.time() - t0)
+        t_med = float(np.median(ts))
+        mem = prep.bvss.memory_bytes()
+        scales_out[str(sc)] = {
+            "n": int(g.n), "m": int(g.m),
+            "ordering": prep.ordering, "engine": prep.engine_name,
+            "n_sources": len(srcs),
+            "median_bfs_sec": t_med,
+            "mteps": g.m / max(t_med, 1e-12) / 1e6,
+            "memory_bytes": mem,
+            "peak_memory_bytes": int(mem["total"]),
+            "verified": verified,
+        }
+        if verbose:
+            so = scales_out[str(sc)]
+            print(fmt_row(f"bench_scale/rmat{sc}", t_med * 1e6,
+                          f"mteps={so['mteps']:.2f} "
+                          f"mem={so['peak_memory_bytes'] / 1e6:.2f}MB"))
+
+    summary = {
+        "scales": scales,
+        "max_mteps": max(so["mteps"] for so in scales_out.values()),
+        "peak_memory_bytes_largest": scales_out[str(scales[-1])
+                                                ]["peak_memory_bytes"],
+        "all_verified": all_verified,
+    }
+    out = {
+        **bench_envelope("pr8_scale", scales[-1]),
+        "family": "rmat_deg16",
+        "note": ("MTEPS = m / median fused-BFS seconds / 1e6 over a fixed "
+                 "source sample per scale; peak_memory_bytes is the "
+                 "BVSS.memory_bytes() Table-4 total (static BVSS + dynamic "
+                 "working set + level array).  Smallest scale is "
+                 "oracle-verified; absolute MTEPS are CPU-flavoured "
+                 "(interpret-mode kernels), the trajectory across scales "
+                 "is the signal"),
+        "scales": scales_out,
+        "summary": summary,
+    }
+    if verbose:
+        print(f"# max_mteps={summary['max_mteps']:.2f} "
+              f"(verified={all_verified})")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help=f"scales {QUICK_SCALES} instead of {FULL_SCALES}")
+    ap.add_argument("--scales", type=int, nargs="+", default=None)
+    ap.add_argument("--sources", type=int, default=3)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    run(scales=args.scales, quick=args.quick, n_sources=args.sources,
+        json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,12 +8,16 @@ the perf-trajectory benches — the PR-1 fused-pipeline bench
 (``benchmarks/bench_fused.py``), the PR-2 GraphSession serving bench
 (``benchmarks/bench_service.py``), the PR-3 mesh-native bench
 (``benchmarks/bench_dist.py``, which simulates its device mesh in a
-subprocess), the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
-now with the closeness suite and sharded betweenness in ``dist``) and the
+subprocess — since PR 8 with the ``dist2d`` butterfly comm-volume block),
+the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
+now with the closeness suite and sharded betweenness in ``dist``), the
 PR-7 compiled-dispatch hybrid bench (``benchmarks/bench_hybrid.py``:
-direction-optimizing hybrid vs pull-only, pure-XLA lane) — and
-writes one machine-readable artifact (default ``BENCH_pr7.json``) with
-``fused``, ``service``, ``dist``, ``analytics`` and ``hybrid`` suites;
+direction-optimizing hybrid vs pull-only, pure-XLA lane) and the PR-8
+RMAT scale sweep (``benchmarks/bench_scale.py``: MTEPS + peak device
+footprint over 2^10..2^14, quick mode stops at 2^11) — and
+writes one machine-readable artifact (default ``BENCH_pr8.json``) with
+``fused``, ``service``, ``dist``, ``analytics``, ``hybrid`` and
+``scale_sweep`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
 quickly.  CI diffs the artifact's geomean speedups against the checked-in
 floors (``benchmarks/perf_gate.py``).  Roofline tables (E7) come from the
@@ -32,11 +36,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr7.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json", default=None,
                     metavar="PATH",
                     help="run the fused-pipeline + service + dist + "
-                         "analytics + hybrid benches and write JSON "
-                         "(default %(const)s)")
+                         "analytics + hybrid + scale-sweep benches and "
+                         "write JSON (default %(const)s)")
     ap.add_argument("--fused-only", action="store_true",
                     help="only the JSON perf benches, skip the paper tables "
                          "(implies --json)")
@@ -47,23 +51,23 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr7.json"
+        json_path = "BENCH_pr8.json"
     if json_path is not None:
         from benchmarks import (bench_analytics, bench_dist, bench_fused,
-                                bench_hybrid, bench_service)
+                                bench_hybrid, bench_scale, bench_service)
         from benchmarks.common import bench_envelope
-        bench_scale = min(scale, 9 if args.quick else 10)
-        fused = bench_fused.run(scale=bench_scale,
+        suite_scale = min(scale, 9 if args.quick else 10)
+        fused = bench_fused.run(scale=suite_scale,
                                 n_sources=2 if args.quick else 3,
                                 json_path=None)
-        service = bench_service.run(scale=bench_scale,
+        service = bench_service.run(scale=suite_scale,
                                     n_queries=6 if args.quick else 8,
                                     json_path=None)
         dist = bench_dist.run(scale=min(scale, 8 if args.quick else 9),
                               devices=2 if args.quick else 4,
                               n_queries=4 if args.quick else 6,
                               json_path=None)
-        analytics = bench_analytics.run(scale=bench_scale,
+        analytics = bench_analytics.run(scale=suite_scale,
                                         n_queries=6 if args.quick else 8,
                                         n_pivots=3 if args.quick else 4,
                                         json_path=None)
@@ -75,13 +79,17 @@ def main(argv=None) -> None:
                                   n_sources=2,
                                   reps=3 if args.quick else 5,
                                   json_path=None)
+        scale_sweep = bench_scale.run(quick=args.quick,
+                                      n_sources=2 if args.quick else 3,
+                                      json_path=None)
         out = {
-            **bench_envelope("pr7_hybrid_suite", bench_scale),
+            **bench_envelope("pr8_scale_suite", suite_scale),
             "fused": fused,
             "service": service,
             "dist": dist,
             "analytics": analytics,
             "hybrid": hybrid,
+            "scale_sweep": scale_sweep,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=False)

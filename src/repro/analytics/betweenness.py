@@ -58,7 +58,8 @@ from repro.core.bfs import (BlestProblem, QueueHistory, make_queue_history,
                             queue_widths)
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, run_levels_recorded
-from repro.core.multi_source import INF, _make_ms_locals, make_ms_engine
+from repro.core.multi_source import (INF, _make_ms_locals,
+                                     _make_ms_locals_2d, make_ms_engine)
 from repro.graphs import Graph
 from repro.kernels import bvss_spmm, bvss_spmm_t, bvss_spmm_t_local, bvss_spmm_w
 from repro.kernels.ref import bvss_spmm_ref, bvss_spmm_t_ref, bvss_spmm_w_ref
@@ -82,6 +83,12 @@ def make_betweenness(problem: BlestProblem, n_sources: int, *,
     """
     p = problem
     if p.mesh is not None:
+        if p.is_2d:
+            return _make_betweenness_sharded_2d(p, n_sources,
+                                                use_kernel=use_kernel,
+                                                buckets=buckets,
+                                                max_levels=max_levels,
+                                                spmm_w_impl=spmm_w_impl)
         return _make_betweenness_sharded(p, n_sources,
                                          use_kernel=use_kernel,
                                          buckets=buckets,
@@ -258,6 +265,130 @@ def _make_betweenness_sharded(p: BlestProblem, n_sources: int, *,
                             p.dev.vss_of_vertex_end, sources)
         return (lv.reshape(-1, S)[:p.n], sig.reshape(-1, S)[:p.n],
                 delta.reshape(-1, S)[:p.n])
+
+    return jax.jit(bc)
+
+
+def _make_betweenness_sharded_2d(p: BlestProblem, n_sources: int, *,
+                                 use_kernel: bool, buckets: int,
+                                 max_levels: int | None,
+                                 spmm_w_impl: Callable | None = None
+                                 ) -> Callable:
+    """Brandes on the 2-D row × column partition, one ``shard_map``
+    dispatch.  Forward: the 2-D σ-channel locals (mark-accumulate pull,
+    butterfly OR-allreduce of the hits over the column axis, butterfly
+    σ-value gather over the row axis), each device recording its OWN
+    (i, j)-block per-level queue.
+
+    Backward per level: device (i, j)'s transposed tile product pushes
+    dependency from its row block into its COLUMN block's columns only, so
+    the global coefficient at a colblock-j column is the row-axis ``psum``
+    of the (·, j) devices' partials.  ``psum_scatter`` over the row axis
+    does that sum AND hands device (i, j) exactly the colblock-j segment
+    of ITS OWN row block (local column ids [i·cpb, (i+1)·cpb) map to row
+    block i by the interleaved layout); one butterfly exchange over the
+    COLUMN axis then concatenates the C segments, index-ordered, into the
+    full (rps, S) row-block coefficient.  Two log-stage collectives per
+    backward level, no full-column replica anywhere.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs2d
+    from repro.distributed.collectives import butterfly_frontier_exchange
+
+    mesh = p.mesh
+    rax, cax = p.axis, p.col_axis
+    S = n_sources
+    sigma = p.sigma
+    R, C, rps = p.n_shards, p.n_col_shards, p.rows_per_shard
+    cpb = p.cols_per_block
+    n_loc = R * cpb                   # local column space of one device
+    n_cols = p.n_sets * sigma         # padded scatter space (≥ n_loc)
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    spmm_w = spmm_w_impl if spmm_w_impl is not None else \
+        (bvss_spmm_w if use_kernel else bvss_spmm_w_ref)
+    spmm_t = bvss_spmm_t if use_kernel else bvss_spmm_t_ref
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    max_lv = max_levels if max_levels is not None else p.n + 1
+    locals_for = _make_ms_locals_2d(p, S, spmm, widths, qcap,
+                                    spmm_w=spmm_w, track_sigma=True)
+    hist0, record = make_queue_history(qcap, max_lv, p.num_vss)
+
+    def local_fn(masks: jnp.ndarray, row_ids: jnp.ndarray,
+                 v2r: jnp.ndarray, vstart: jnp.ndarray, vend: jnp.ndarray,
+                 sources: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                vstart[0], vend[0])
+        loc = locals_for(dev)
+        pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
+                             finalize=lambda s, lvl: loc.finalize(s),
+                             active=lambda s: s.cont)
+        st, _, hist = run_levels_recorded(
+            pipe, loc.init(sources), max_levels=max_lv, history=hist0,
+            record=record)
+        levels = st.levels[:rps]                     # (rps, S) local rows
+        sig = st.paths                               # (rps, S)
+        i = jax.lax.axis_index(rax)
+        col_ids = (jnp.arange(sigma, dtype=jnp.int32)[None, :]
+                   + jnp.zeros((qcap, 1), jnp.int32))
+
+        def body(carry: tuple[jnp.ndarray, jnp.ndarray]
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+            delta, t = carry
+            Q = jax.lax.dynamic_index_in_dim(hist.Q, t, keepdims=False)
+            safe = jnp.maximum(sig, 1.0)
+            h = jnp.where(levels == t, (1.0 + delta) / safe, 0.0)
+            h = jnp.concatenate([h, jnp.zeros((1, S), jnp.float32)])
+            part = bvss_spmm_t_local(dev.masks[Q], dev.row_ids[Q], h,
+                                     sigma=sigma, impl=spmm_t)
+            cols = dev.virtual_to_real[Q][:, None] * sigma + col_ids
+            coeff = jnp.zeros((n_cols, S), jnp.float32).at[
+                cols.reshape(-1)].add(part.reshape(-1, S))[:n_loc]
+            # sum the row-axis partials of this COLUMN block and keep this
+            # device's own-row-block segment of the result ...
+            coeff = jax.lax.psum_scatter(coeff, rax, scatter_dimension=0,
+                                         tiled=True)           # (cpb, S)
+            # ... then stitch the C per-colblock segments (index-ordered
+            # by mesh column = offset order) into the full row block
+            coeff = butterfly_frontier_exchange(coeff, cax)    # (rps, S)
+            delta = delta + jnp.where(levels == t - 1, sig * coeff, 0.0)
+            return delta, t - 1
+
+        def cond(carry: tuple[jnp.ndarray, jnp.ndarray]) -> jnp.ndarray:
+            return carry[1] >= 1
+
+        # mesh-uniform countdown start over BOTH axes: the body carries
+        # collectives, so every device walks the same levels
+        tloc = jnp.where(levels == INF, 0, levels).max().astype(jnp.int32)
+        tmax = jax.lax.pmax(tloc, (rax, cax))
+        delta0 = jnp.zeros((rps, S), jnp.float32)
+        delta, _ = jax.lax.while_loop(cond, body, (delta0, tmax))
+        lsrc = sources - i * rps
+        own = (lsrc >= 0) & (lsrc < rps)
+        row = jnp.clip(lsrc, 0, rps - 1)
+        cols_s = jnp.arange(S)
+        delta = delta.at[row, cols_s].set(
+            jnp.where(own, 0.0, delta[row, cols_s]))
+        return st.levels[None, :rps], sig[None], delta[None]
+
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=problem_specs2d(rax, cax) + (P(),),
+                   out_specs=(P((rax, cax)),) * 3, check_rep=False)
+
+    def bc(sources: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+        sources = jnp.asarray(sources, dtype=jnp.int32)
+        lv, sig, delta = fn(p.dev.masks, p.dev.row_ids,
+                            p.dev.virtual_to_real,
+                            p.dev.vss_of_vertex_start,
+                            p.dev.vss_of_vertex_end, sources)
+
+        def col0(a):  # (R·C, rps, S) blocks row-major -> mesh column 0
+            return a.reshape(R, C, rps, S)[:, 0].reshape(-1, S)[:p.n]
+        return col0(lv), col0(sig), col0(delta)
 
     return jax.jit(bc)
 

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.bvss import (BVSS, BVSSDevice, ShardedBVSS,
+from repro.core.bvss import (BVSS, BVSSDevice, ShardedBVSS, ShardedBVSS2D,
                              ShardedBVSSDevice, shard_to_device, to_device)
 from repro.core.level_pipeline import (LevelPipeline, compose_step,
                                        global_any, run_levels)
@@ -92,6 +92,12 @@ def _pack_bits(bits: jnp.ndarray, n_words: int) -> jnp.ndarray:
     b = bits.reshape(n_words, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
     return jnp.sum(b * weights[None, :], axis=1, dtype=jnp.uint32)
+
+
+def _unpack_bits(words: jnp.ndarray) -> jnp.ndarray:
+    """uint32 (n_words,) -> bool (n_words*32,): inverse of :func:`_pack_bits`."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return ((words[:, None] >> shifts[None, :]) & 1).reshape(-1) != 0
 
 
 def pull_vss_jnp(masks: jnp.ndarray, fbytes: jnp.ndarray, sigma: int
@@ -137,17 +143,30 @@ class BlestProblem:
     n: int
     sigma: int
     n_sets: int       # GLOBAL slice sets (columns) in either mode
+                      #   (2-D: LOCAL column-block slice sets per device)
     num_vss: int      # per-shard padded VSS count when sharded
     n_fwords: int     # gathered (global) frontier words when sharded
+                      #   (2-D: per-device COLUMN-BLOCK frontier words)
     dev: BVSSDevice | ShardedBVSSDevice
     # mesh-native row partition (DESIGN §2.4); mesh=None = single-device
     mesh: Mesh | None = None
     axis: str = "data"
     n_shards: int = 1
     rows_per_shard: int = 0
+    # 2-D row × column partition (DESIGN §2.4): col_axis=None = 1-D.
+    # Column block j owns, inside every row block, the cols_per_block
+    # sources [i·rps + j·cpb, i·rps + (j+1)·cpb) — the butterfly exchange
+    # moves one rps/cols/32-word segment per device per level.
+    col_axis: str | None = None
+    n_col_shards: int = 1
+    cols_per_block: int = 0
     # static push expansion factor: every pushing vertex enqueues at most
     # this many VSSs of its own slice set (DESIGN §2.8)
     max_vss_per_set: int = 1
+
+    @property
+    def is_2d(self) -> bool:
+        return self.col_axis is not None
 
     @staticmethod
     def build(bvss: BVSS) -> "BlestProblem":
@@ -173,6 +192,31 @@ class BlestProblem:
                             dev=shard_to_device(sb, mesh, axis),
                             mesh=mesh, axis=axis, n_shards=sb.n_shards,
                             rows_per_shard=sb.rows_per_shard,
+                            max_vss_per_set=sb.max_vss_per_set)
+
+    @staticmethod
+    def build_sharded_2d(sb: "ShardedBVSS2D", mesh: Mesh) -> "BlestProblem":
+        """2-D row × column problem: device (i, j) of the mesh owns BVSS
+        block i·cols + j (row-major stack, both mesh axes on dim 0).
+        ``n_sets``/``n_fwords`` become the per-device LOCAL column-block
+        quantities — the engines never materialise a global frontier."""
+        from repro.core.bvss import shard_to_device_2d
+
+        row_axis, col_axis = mesh.axis_names
+        shape = (mesh.shape[row_axis], mesh.shape[col_axis])
+        if shape != (sb.rows, sb.cols):
+            raise ConfigError(
+                f"mesh shape {shape} does not match the 2-D BVSS built "
+                f"for ({sb.rows}, {sb.cols}) blocks")
+        return BlestProblem(n=sb.n, sigma=sb.sigma,
+                            n_sets=sb.n_sets_local,
+                            num_vss=sb.num_vss_pad,
+                            n_fwords=sb.n_frontier_words_local,
+                            dev=shard_to_device_2d(sb, mesh),
+                            mesh=mesh, axis=row_axis, n_shards=sb.rows,
+                            rows_per_shard=sb.rows_per_shard,
+                            col_axis=col_axis, n_col_shards=sb.cols,
+                            cols_per_block=sb.cols_per_block,
                             max_vss_per_set=sb.max_vss_per_set)
 
 
@@ -501,6 +545,10 @@ def make_blest_bfs(problem: BlestProblem, *, lazy: bool,
     fin_impl = finalize_pack_sweep if use_kernels else finalize_pack_ref
 
     if p.mesh is not None:
+        if p.is_2d:
+            return _make_blest_bfs_sharded_2d(p, pull=pull, widths=widths,
+                                              qcap=qcap, max_lv=max_lv,
+                                              direction=direction)
         return _make_blest_bfs_sharded(p, lazy=lazy, pull=pull, push=push,
                                        fin_impl=fin_impl, widths=widths,
                                        qcap=qcap, max_lv=max_lv,
@@ -646,6 +694,128 @@ def _make_blest_bfs_sharded(p: BlestProblem, *, lazy: bool, pull: PullFn,
     return jax.jit(bfs)
 
 
+def _make_blest_bfs_sharded_2d(p: BlestProblem, *, pull: PullFn,
+                               widths: list[int], qcap: int, max_lv: int,
+                               direction: str) -> Callable:
+    """The 2-D (row × column) mesh-native BLEST engine (DESIGN §2.4).
+
+    Device (i, j) pulls its ROW block of vertices from its COLUMN block of
+    frontier words, so per level it runs the same bucketed pull as the 1-D
+    engine over ``1/cols`` of the frontier, then two butterfly collectives
+    replace the flat all-gather: an OR-allreduce of the packed partial hit
+    words over the COLUMN axis (every column block saw a different frontier
+    slice, so hits are partial), and a segment all-gather of the fresh
+    frontier words over the ROW axis (device (i, j) contributes row block
+    i's j-th word segment, receiving its full column block).  Per-device
+    volume shrinks by ``cols`` vs the flat gather — the point of the
+    partition.  Convergence is one psum over BOTH axes.
+
+    The 2-D partition is pull-only: hits are accumulated as marks and
+    reduced BEFORE levels update (a partial eager scatter-min would commit
+    local hits that another column block already discovered at an earlier
+    level — wrong), which makes the eager and lazy variants compile to the
+    same mark-based body; forced ``direction="push"`` is a ConfigError
+    (the frontier-bit vertex queue of the push phase indexes GLOBAL
+    frontier replicas that no 2-D device holds).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs2d
+    from repro.distributed.collectives import (butterfly_frontier_exchange,
+                                               butterfly_or_allreduce)
+
+    if direction == "push":
+        raise ConfigError(
+            "the 2-D row × column partition is pull-only (DESIGN §2.4); "
+            "direction='push' needs the global frontier replica only the "
+            "1-D partition holds — use a 1-D mesh or direction='pull'")
+    mesh, rax, cax = p.mesh, p.axis, p.col_axis
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    lwords = rps // 32
+    cpb = p.cols_per_block
+    wpc = lwords // p.n_col_shards       # words per column segment
+    ncw = p.n_fwords                     # per-device column-block words
+    all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
+
+    def local_loop(masks, row_ids, v2r, vstart, vend, src):
+        """One device block's slice of the fused BFS (under shard_map)."""
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0], vstart[0],
+                                vend[0])
+        compact = make_compactor(dev, p.num_vss, qcap)
+        i = jax.lax.axis_index(rax)
+        j = jax.lax.axis_index(cax)
+
+        def step(state: _BlestState, lvl) -> _BlestState:
+            def pull_marks(width: int):
+                ids = jax.lax.slice_in_dim(state.Q, 0, width)
+                fbytes = _frontier_bytes(state.F,
+                                         dev.virtual_to_real[ids], sigma)
+                hits = pull(dev.masks[ids], fbytes, sigma)
+                marks = jnp.zeros((rps + 1,), dtype=jnp.uint8)
+                return marks.at[dev.row_ids[ids].reshape(-1)].max(
+                    hits.reshape(-1).astype(jnp.uint8))
+            return state._replace(marks=select_width(widths, state.count,
+                                                     pull_marks))
+
+        def finalize(state: _BlestState, lvl) -> _BlestState:
+            # partial hits -> full row-block hits (butterfly OR over cols)
+            hw = butterfly_or_allreduce(
+                _pack_bits(state.marks[:rps] > 0, lwords), cax)
+            newly = _unpack_bits(hw) & (state.levels[:rps] == INF)
+            levels = jnp.concatenate(
+                [jnp.where(newly, lvl, state.levels[:rps]),
+                 state.levels[rps:]])
+            # fresh frontier: this row block's j-th word segment, exchanged
+            # along the row axis into the full column block
+            seg = jax.lax.dynamic_slice_in_dim(_pack_bits(newly, lwords),
+                                               j * wpc, wpc)
+            F = butterfly_frontier_exchange(seg, rax)       # (ncw,)
+            set_active = _frontier_bytes(F, all_sets, sigma) != 0
+            Q, count = compact(set_active)
+            return state._replace(levels=levels, F=F, Q=Q, count=count,
+                                  cont=global_any(count > 0, (rax, cax)))
+
+        pipe = LevelPipeline(step=step, finalize=finalize,
+                             active=lambda s: s.cont)
+
+        # init: local levels; frontier bit only on the owning column block
+        lsrc = src - i * rps
+        own = (lsrc >= 0) & (lsrc < rps)
+        levels = jnp.full((rps + 1,), INF, dtype=jnp.int32)
+        levels = levels.at[jnp.where(own, lsrc, rps)].set(
+            jnp.where(own, 0, INF))
+        off = src % rps
+        ownc = (off // cpb) == j
+        c = jnp.clip((src // rps) * cpb + (off - j * cpb), 0, ncw * 32 - 1)
+        F = jnp.zeros((ncw,), dtype=jnp.uint32)
+        F = F.at[c // 32].set(jnp.where(
+            ownc, jnp.uint32(1) << (c % 32).astype(jnp.uint32),
+            jnp.uint32(0)))
+        set_active = _frontier_bytes(F, all_sets, sigma) != 0
+        Q, count = compact(set_active)
+        marks0 = jnp.zeros((rps + 1,), dtype=jnp.uint8)
+        state = _BlestState(levels, F, Q, count, marks0, jnp.int32(p.n - 1),
+                            global_any(count > 0, (rax, cax)))
+        state, _ = run_levels(pipe, state, max_levels=max_lv)
+        return state.levels[None, :rps]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs2d(rax, cax) + (P(),),
+                   out_specs=P((rax, cax)), check_rep=False)
+
+    def bfs(src: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
+                 jnp.asarray(src, dtype=jnp.int32))
+        # (R·C, rps) row-major blocks, column-replicated: take column 0
+        return out.reshape(p.n_shards, p.n_col_shards,
+                           rps)[:, 0].reshape(-1)[:p.n]
+
+    return jax.jit(bfs)
+
+
 # ---------------------------------------------------------------------------
 # BRS baseline (BerryBees-like): frontier-oblivious slice-set sweep
 # ---------------------------------------------------------------------------
@@ -659,6 +829,10 @@ def make_brs_bfs(problem: BlestProblem, *, max_levels: int | None = None
                  ) -> Callable:
     p = problem
     if p.mesh is not None:
+        if p.is_2d:
+            raise ConfigError(
+                "the BRS baseline has no 2-D partition path — prepare with "
+                "a 1-D mesh or the blest/blest_lazy engines")
         return _make_brs_bfs_sharded(p, max_levels=max_levels)
     dev = p.dev
     sigma = p.sigma

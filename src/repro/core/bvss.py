@@ -25,7 +25,7 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.errors import GraphValidationError
+from repro.errors import ConfigError, GraphValidationError
 from repro.graphs import Graph
 
 LANES = 32  # 32-bit words per VSS row-group (paper: WARP_SIZE)
@@ -231,14 +231,21 @@ class ShardedBVSS:
         return self.n_shards * (self.rows_per_shard // 32)
 
 
-def build_sharded_bvss(g: Graph, n_shards: int, sigma: int = 8
-                       ) -> ShardedBVSS:
+def build_sharded_bvss(g: Graph, n_shards: "int | tuple[int, int]",
+                       sigma: int = 8) -> "ShardedBVSS | ShardedBVSS2D":
     """Row-partition ``g`` into ``n_shards`` rectangular (local rows ×
     global columns) BVSS blocks (absorbs the old distributed ``shard_bvss``).
 
     Each shard's block is built by :func:`build_bvss` over the subgraph of
     edges whose DESTINATION lands in the shard's row range, destinations
-    relabelled locally and sources (columns / frontier ids) kept global."""
+    relabelled locally and sources (columns / frontier ids) kept global.
+
+    A ``(rows, cols)`` tuple selects the 2-D row × column partition
+    instead (:func:`build_sharded_bvss_2d`): device (i, j) owns the slices
+    pulling its row block from its column block of frontier words."""
+    if isinstance(n_shards, tuple):
+        rows, cols = n_shards
+        return build_sharded_bvss_2d(g, rows, cols, sigma=sigma)
     from repro.graphs import from_edges, src_of_edges
 
     n = g.n
@@ -290,6 +297,123 @@ def build_sharded_bvss(g: Graph, n_shards: int, sigma: int = 8
                            max(b.max_vss_per_set for b in per_shard), 1))
 
 
+# ---------------------------------------------------------------------------
+# 2-D (row × column) sharded BVSS (butterfly partition, DESIGN §2.4)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardedBVSS2D:
+    """2-D partitioned BVSS: device (i, j) of a ``rows × cols`` mesh owns
+    the slices pulling its ROW block of destinations from its COLUMN block
+    of frontier words.
+
+    The column partition INTERLEAVES inside row blocks: column block j
+    owns, within every row block i, the sources
+    ``[i·rps + j·cpb, i·rps + (j+1)·cpb)`` where ``cpb = rps / cols``.
+    That makes a row block's fresh frontier words split into ``cols``
+    contiguous word segments (``rps`` is aligned to ``32·cols``), so the
+    per-level exchange along the row axis moves exactly one segment per
+    device — per-device volume shrinks by ``cols`` vs the flat 1-D gather.
+    Source ids are relabelled to the column block's LOCAL space
+    ``local(v) = (v // rps)·cpb + (v mod rps) − j·cpb`` of size
+    ``rows · cpb``; destination rows are LOCAL to the row block (dummy =
+    ``rps``).  Blocks stack row-major (block d = i·cols + j) and are
+    padded to a common VSS count so one SPMD program serves all of them.
+    ``rows >= cols`` is required so the local column space covers a row
+    block (``rows·cpb >= rps``) — checked at build."""
+
+    n: int
+    m: int
+    sigma: int
+    rows: int
+    cols: int
+    rows_per_shard: int          # aligned to 32·cols
+    cols_per_block: int          # cpb = rows_per_shard // cols
+    num_vss_pad: int             # per-block VSS count (padded to common max)
+    n_sets_local: int            # LOCAL slice sets = rows·cpb / sigma
+    masks: np.ndarray            # (rows·cols, num_vss_pad, LANES) uint32
+    row_ids: np.ndarray          # (rows·cols, num_vss_pad, spw, LANES) LOCAL
+    virtual_to_real: np.ndarray  # (rows·cols, num_vss_pad) LOCAL set ids
+    max_vss_per_set: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def slices_per_word(self) -> int:
+        return 32 // self.sigma
+
+    @property
+    def n_frontier_words_local(self) -> int:
+        """Per-device frontier words: the device's full COLUMN block,
+        ``rows`` segments of ``words_per_colseg`` words each."""
+        return self.rows * self.cols_per_block // 32
+
+    @property
+    def words_per_colseg(self) -> int:
+        """Words one row block contributes to one column block per level —
+        the unit the butterfly exchange moves."""
+        return self.cols_per_block // 32
+
+
+def build_sharded_bvss_2d(g: Graph, rows: int, cols: int, sigma: int = 8
+                          ) -> ShardedBVSS2D:
+    """Partition ``g`` into ``rows × cols`` BVSS blocks (see
+    :class:`ShardedBVSS2D` for the ownership contract)."""
+    from repro.graphs import from_edges, src_of_edges
+
+    if rows < 1 or cols < 1:
+        raise ConfigError(f"2-D shard shape ({rows}, {cols}) must be "
+                          f"positive")
+    if rows < cols:
+        raise ConfigError(
+            f"2-D BVSS partition needs rows >= cols, got ({rows}, {cols})"
+            f" — the interleaved column blocks must cover a row block")
+    n = g.n
+    rps = -(-n // rows)
+    align = 32 * cols  # column segments land on frontier-word boundaries
+    rps = ((rps + align - 1) // align) * align
+    cpb = rps // cols
+    n_loc = rows * cpb              # local column (source) space per block
+    spw = 32 // sigma
+    src = src_of_edges(g).astype(np.int64)
+    dst = g.indices.astype(np.int64)
+    soff = src % rps                # offset of each source in its row block
+    sblk = src // rps               # row block each source lives in
+    per_block: list[BVSS] = []
+    for i in range(rows):
+        lo, hi = i * rps, min((i + 1) * rps, n)
+        in_row = (dst >= lo) & (dst < hi)
+        for j in range(cols):
+            keep = in_row & (soff // cpb == j)
+            lsrc = sblk[keep] * cpb + (soff[keep] - j * cpb)
+            # drop_loops=False: relabelled ids colliding are not self loops
+            sub = from_edges(n_loc, lsrc, dst[keep] - lo,
+                             dedup=True, drop_loops=False)
+            per_block.append(build_bvss(sub, sigma=sigma))
+    num_vss_pad = max(max(b.num_vss for b in per_block), 1)
+    D = rows * cols
+    masks = np.zeros((D, num_vss_pad, LANES), np.uint32)
+    row_ids = np.full((D, num_vss_pad, spw, LANES), rps, np.int32)
+    # pad VSS entries keep set id 0: all-zero masks -> exact no-op pulls
+    v2r = np.zeros((D, num_vss_pad), np.int32)
+    for d, b in enumerate(per_block):
+        if b.num_vss == 0:
+            continue
+        masks[d, :b.num_vss] = b.masks
+        rid = b.row_ids.copy()
+        rid[rid == b.n] = rps                      # dummy -> local dummy
+        row_ids[d, :b.num_vss] = np.minimum(rid, rps)
+        v2r[d, :b.num_vss] = b.virtual_to_real
+    return ShardedBVSS2D(n=n, m=g.m, sigma=sigma, rows=rows, cols=cols,
+                         rows_per_shard=rps, cols_per_block=cpb,
+                         num_vss_pad=num_vss_pad,
+                         n_sets_local=n_loc // sigma,
+                         masks=masks, row_ids=row_ids, virtual_to_real=v2r,
+                         max_vss_per_set=max(
+                             max(b.max_vss_per_set for b in per_block), 1))
+
+
 class ShardedBVSSDevice(NamedTuple):
     """Per-shard device views of a :class:`ShardedBVSS` (a pytree).  The
     leading axis is the shard axis; inside ``shard_map`` each device sees
@@ -336,6 +460,40 @@ def shard_to_device(sb: ShardedBVSS, mesh=None, axis: str = "data"
                              virtual_to_real=put(v2r),
                              vss_of_vertex_start=put(sb.vss_start),
                              vss_of_vertex_end=put(sb.vss_end))
+
+
+def shard_to_device_2d(sb: ShardedBVSS2D, mesh=None) -> ShardedBVSSDevice:
+    """2-D twin of :func:`shard_to_device`: append the per-block dummy VSS
+    and commit the row-major block stack with both mesh axes on dim 0.
+    The 2-D engines are pull-only (DESIGN §2.4), so the push-phase
+    vertex -> VSS maps are empty placeholders that keep the
+    :class:`ShardedBVSSDevice` surface uniform."""
+    import jax
+    import jax.numpy as jnp
+
+    D = sb.n_blocks
+    spw = sb.slices_per_word
+    masks = np.concatenate(
+        [sb.masks, np.zeros((D, 1, LANES), np.uint32)], axis=1)
+    row_ids = np.concatenate(
+        [sb.row_ids,
+         np.full((D, 1, spw, LANES), sb.rows_per_shard, np.int32)], axis=1)
+    v2r = np.concatenate([sb.virtual_to_real, np.zeros((D, 1), np.int32)],
+                         axis=1)
+    vss_start = np.zeros((D, 1), np.int32)
+    vss_end = np.zeros((D, 1), np.int32)
+    if mesh is not None:
+        from repro.distributed.bfs_dist import problem_sharding
+        sharding = problem_sharding(mesh)
+
+        def put(x):
+            return jax.device_put(x, sharding)
+    else:
+        put = jnp.asarray
+    return ShardedBVSSDevice(masks=put(masks), row_ids=put(row_ids),
+                             virtual_to_real=put(v2r),
+                             vss_of_vertex_start=put(vss_start),
+                             vss_of_vertex_end=put(vss_end))
 
 
 class BVSSDevice(NamedTuple):

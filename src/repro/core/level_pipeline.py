@@ -61,11 +61,13 @@ def compose_step(gather: Callable[[State], tuple],
     return step
 
 
-def global_any(pred: jnp.ndarray, axis: str | None) -> jnp.ndarray:
+def global_any(pred: jnp.ndarray,
+               axis: "str | tuple[str, ...] | None") -> jnp.ndarray:
     """Continuation predicate across the mesh: ``pred`` is this shard's
     local "still work to do" bool; the result is True iff ANY shard says so
     (identical on every device, so the shared ``while_loop`` stays in
-    lock-step).  ``axis=None`` is the single-device identity."""
+    lock-step).  ``axis=None`` is the single-device identity; a tuple of
+    axis names reduces over all of them (the 2-D row × column mesh)."""
     if axis is None:
         return pred
     return jax.lax.psum(pred.astype(jnp.int32), axis) > 0

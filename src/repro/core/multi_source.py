@@ -59,6 +59,8 @@ from repro.core.bfs import (DIRECTIONS, BlestProblem, _frontier_bytes,
 from repro.core.bvss import ShardedBVSSDevice
 from repro.core.level_pipeline import LevelPipeline, global_any, run_levels
 from repro.distributed.bfs_dist import frontier_all_gather
+from repro.distributed.collectives import (butterfly_frontier_exchange,
+                                           butterfly_or_allreduce)
 from repro.errors import ConfigError
 from repro.graphs import Graph
 from repro.kernels import bvss_spmm, bvss_spmm_w, bvss_spmm_w_local
@@ -86,6 +88,21 @@ def _push_fbytes(F: jnp.ndarray, vrep: jnp.ndarray, sigma: int
               & jnp.uint32(1))                               # (B, S) {0,1}
     return (jnp.uint32(1)
             << (vrep % sigma).astype(jnp.uint32))[:, None] * member
+
+
+def _pack_cols(bits: jnp.ndarray, lwords: int) -> jnp.ndarray:
+    """Per-column frontier pack: bool (lwords*32, S) -> uint32 (lwords, S)."""
+    S = bits.shape[1]
+    w = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits.reshape(lwords, 32, S).astype(jnp.uint32)
+                   * w[None, :, None], axis=1, dtype=jnp.uint32)
+
+
+def _unpack_cols(words: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`_pack_cols`: uint32 (lwords, S) -> bool (lwords*32, S)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return ((words[:, None, :] >> shifts[None, :, None]) & 1
+            ).reshape(-1, words.shape[1]) != 0
 
 
 class MSState(NamedTuple):
@@ -201,6 +218,14 @@ def make_ms_engine(problem: BlestProblem, n_slots: int, *,
     spmm_w = spmm_w_impl if spmm_w_impl is not None else \
         (bvss_spmm_w if use_kernel else bvss_spmm_w_ref)
     if p.mesh is not None:
+        if p.is_2d:
+            return _make_ms_engine_sharded_2d(p, n_slots, spmm=spmm,
+                                              buckets=buckets,
+                                              spmm_w=spmm_w,
+                                              track_sigma=track_sigma,
+                                              gather=gather_impl,
+                                              widths=widths,
+                                              direction=direction)
         return _make_ms_engine_sharded(p, n_slots, spmm=spmm,
                                        buckets=buckets, spmm_w=spmm_w,
                                        track_sigma=track_sigma,
@@ -717,6 +742,220 @@ def _make_ms_locals(p: BlestProblem, S: int, spmm, widths: list[int],
     return locals_for
 
 
+def _make_ms_locals_2d(p: BlestProblem, S: int, spmm, widths: list[int],
+                       qcap: int, *, spmm_w=None,
+                       track_sigma: bool = False,
+                       gather: Callable | None = None,
+                       direction: str = "pull") -> Callable:
+    """2-D (row × column) per-device wave ops (DESIGN §2.4): device (i, j)
+    holds LOCAL levels (rps+1, S) for row block i, a COLUMN-BLOCK frontier
+    ``F`` of (n_fwords, S) words (colblock j's offsets of EVERY row block,
+    interleaved layout — this is the only frontier the device ever pulls,
+    1/cols of the global words), one union queue over its (i, j) BVSS
+    block, and — with ``track_sigma`` — a LOCAL (rps, S) σ block.
+
+    The level step swaps the 1-D eager scatter-min for mark-accumulate:
+    each device's pull covers only colblock j of the frontier, so its
+    partial hits must be OR-combined ACROSS the column axis (butterfly
+    OR-allreduce of the per-column packed hit words) before any level may
+    commit — an eager local scatter-min would assign levels off partial
+    evidence.  ``finalize`` then packs the newly array, keeps only this
+    device's column segment of it, and butterfly-exchanges the segments
+    over the ROW axis to rebuild next level's column-block frontier.  The
+    σ partial sums ride a float ``psum`` over the column axis, hoisted OUT
+    of the bucket ``cond`` (collectives inside device-varying branches
+    wedge the mesh), and the σ-frontier values are butterfly-gathered over
+    the row axis exactly like the frontier words.
+
+    The 2-D partition is PULL-ONLY: the push formulation writes to remote
+    row blocks, which the column-partitioned frontier cannot express
+    without a second scatter collective.  ``direction="auto"`` silently
+    resolves to pull; a forced ``"push"`` raises
+    :class:`~repro.errors.ConfigError`.  ``gather`` is the same fault seam
+    as the 1-D engines — it wraps the ROW-axis frontier-segment exchange
+    (default :func:`~repro.distributed.collectives.
+    butterfly_frontier_exchange`)."""
+    if direction == "push":
+        raise ConfigError(
+            "the 2-D row × column partition is pull-only: push writes to "
+            "remote row blocks, which the column-partitioned frontier "
+            "cannot express; use direction='pull' or 'auto', or a 1-D mesh")
+    rax, cax = p.axis, p.col_axis
+    sigma = p.sigma
+    rps = p.rows_per_shard
+    cpb = p.cols_per_block
+    C = p.n_col_shards
+    lwords = rps // 32          # packed words covering one row block
+    wpc = lwords // C           # words per column segment of a row block
+    ncw = p.n_fwords            # column-block frontier words = R·cpb/32
+    n_loc = ncw * 32            # local column space = R·cpb
+    n_cols = p.n_sets * sigma   # padded pull-operand columns (≥ n_loc)
+    all_sets = jnp.arange(p.n_sets, dtype=jnp.int32)
+    if gather is None:
+        gather = butterfly_frontier_exchange
+
+    def locals_for(dev: ShardedBVSSDevice) -> _MSLocals:
+        compact = make_compactor(dev, p.num_vss, qcap)
+
+        def pull_partial(st: MSState, width: int, xg: jnp.ndarray | None):
+            """One bucket width's pull over block (i, j): returns the
+            PARTIAL per-column hit marks (rps+1, S) — row rps is the dummy
+            sink — plus the partial σ accumulator; nothing is committed
+            until the cross-column reduce."""
+            ids = jax.lax.slice_in_dim(st.Q, 0, width)
+            fb = _frontier_bytes(st.F, dev.virtual_to_real[ids], sigma)
+            counts = spmm(dev.masks[ids], fb, sigma=sigma)
+            rows = dev.row_ids[ids].reshape(-1)   # LOCAL rows, dummy = rps
+            hit = jnp.zeros((rps + 1, S), dtype=bool).at[rows].max(
+                counts.reshape(-1, S) > 0)
+            if not track_sigma:
+                return hit, None
+            wv = bvss_spmm_w_local(dev.masks[ids],
+                                   dev.virtual_to_real[ids], xg,
+                                   sigma=sigma, impl=spmm_w)
+            acc = jnp.zeros((rps + 1, S), jnp.float32).at[rows].add(
+                wv.reshape(-1, S))
+            return hit, acc
+
+        def step(st: MSState) -> MSState:
+            j = jax.lax.axis_index(cax)
+            if track_sigma:
+                # σ-frontier values: this device contributes its column
+                # segment of its row block's values, butterfly-gathered
+                # over the ROW axis into the (n_loc, S) pull operand —
+                # the float twin of finalize's frontier-word exchange,
+                # hoisted BEFORE the bucket cond
+                xv = jnp.where(st.levels[:rps] == st.col_lvl[None, :],
+                               st.paths, 0.0)
+                seg = jax.lax.dynamic_slice_in_dim(xv, j * cpb, cpb, axis=0)
+                xg = butterfly_frontier_exchange(seg, rax)    # (n_loc, S)
+                if n_cols > n_loc:
+                    xg = jnp.concatenate(
+                        [xg, jnp.zeros((n_cols - n_loc, S), jnp.float32)])
+            else:
+                xg = None
+            hit, acc = select_width(widths, st.count,
+                                    lambda w: pull_partial(st, w, xg))
+            # cross-column combine: pack the partial hits per column, OR
+            # them across the column axis, and only then commit levels —
+            # every device in mesh row i sees the SAME full-row-block hits
+            hw = butterfly_or_allreduce(_pack_cols(hit[:rps], lwords), cax)
+            hit_full = _unpack_cols(hw)                       # (rps, S)
+            cand = (st.col_lvl + 1)[None, :]
+            newly = hit_full & (st.levels[:rps] == INF)
+            levels = st.levels.at[:rps].set(
+                jnp.where(newly, cand, st.levels[:rps]))
+            if not track_sigma:
+                return st._replace(levels=levels)
+            accf = jax.lax.psum(acc[:rps], cax)
+            return st._replace(
+                levels=levels,
+                paths=jnp.where(newly, accf, st.paths))
+
+        def requeue(st: MSState) -> MSState:
+            set_active = (_frontier_bytes(st.F, all_sets, sigma) != 0
+                          ).any(axis=1)
+            Q, count = compact(set_active)
+            return st._replace(Q=Q, count=count,
+                               cont=global_any(count > 0, (rax, cax)))
+
+        def finalize(st: MSState) -> MSState:
+            j = jax.lax.axis_index(cax)
+            nxt = (st.col_lvl + 1)[None, :]
+            new = st.levels[:rps] == nxt                      # (rps, S)
+            fw = _pack_cols(new, lwords)                      # (lwords, S)
+            advanced = global_any(new.any(axis=0), (rax, cax))
+            # next level's column-block frontier: keep this device's
+            # column segment of its row block's new words and butterfly-
+            # exchange the segments over the ROW axis (the fault seam)
+            seg = jax.lax.dynamic_slice_in_dim(fw, j * wpc, wpc, axis=0)
+            F = gather(seg, rax)                              # (ncw, S)
+            st = st._replace(F=F, col_lvl=st.col_lvl + advanced)
+            return requeue(st)
+
+        def _fseed(F: jnp.ndarray, srcs, cols, mask):
+            """Seed frontier bits for masked slots in the COLUMN-BLOCK
+            layout: only the mesh column owning each source's offset sets
+            its bit (clamped no-op writes elsewhere)."""
+            j = jax.lax.axis_index(cax)
+            off = srcs % rps
+            ownc = mask & ((off // cpb) == j)
+            c = jnp.clip((srcs // rps) * cpb + (off - j * cpb),
+                         0, n_loc - 1)
+            bit = jnp.uint32(1) << (c % 32).astype(jnp.uint32)
+            return F.at[c // 32, cols].set(
+                jnp.where(ownc, bit, F[c // 32, cols]))
+
+        def _seed_paths(paths: jnp.ndarray, lsrc, cols, own):
+            row = jnp.clip(lsrc, 0, rps - 1)
+            return paths.at[row, cols].set(
+                jnp.where(own, 1.0, paths[row, cols]))
+
+        def init(sources: jnp.ndarray) -> MSState:
+            i = jax.lax.axis_index(rax)
+            cols = jnp.arange(S)
+            lsrc = sources - i * rps
+            own = (lsrc >= 0) & (lsrc < rps)
+            levels = jnp.full((rps + 1, S), INF, dtype=jnp.int32)
+            levels = levels.at[jnp.where(own, lsrc, rps), cols].set(
+                jnp.where(own, 0, INF))
+            F = _fseed(jnp.zeros((ncw, S), dtype=jnp.uint32), sources,
+                       cols, jnp.ones((S,), dtype=bool))
+            paths = None
+            if track_sigma:
+                paths = _seed_paths(jnp.zeros((rps, S), jnp.float32),
+                                    lsrc, cols, own)
+            st = MSState(levels=levels, F=F,
+                         Q=jnp.full((qcap,), p.num_vss, dtype=jnp.int32),
+                         count=jnp.int32(0),
+                         col_lvl=jnp.zeros((S,), dtype=jnp.int32),
+                         cont=jnp.bool_(False), paths=paths)
+            return requeue(st)
+
+        def insert(st: MSState, slot, src) -> MSState:
+            i = jax.lax.axis_index(rax)
+            slot = jnp.asarray(slot, dtype=jnp.int32)
+            src = jnp.asarray(src, dtype=jnp.int32)
+            lsrc = src - i * rps
+            own = (lsrc >= 0) & (lsrc < rps)
+            levels = st.levels.at[:, slot].set(INF)
+            levels = levels.at[jnp.where(own, lsrc, rps), slot].set(
+                jnp.where(own, 0, INF))
+            F = _fseed(st.F.at[:, slot].set(jnp.uint32(0)), src, slot,
+                       jnp.bool_(True))
+            paths = st.paths
+            if track_sigma:
+                paths = _seed_paths(paths.at[:, slot].set(0.0),
+                                    lsrc, slot, own)
+            return st._replace(levels=levels, F=F, paths=paths,
+                               col_lvl=st.col_lvl.at[slot].set(0))
+
+        def insert_batch(st: MSState, srcs, mask) -> MSState:
+            i = jax.lax.axis_index(rax)
+            cols = jnp.arange(S)
+            lsrc = srcs - i * rps
+            own = mask & (lsrc >= 0) & (lsrc < rps)
+            rows = jnp.where(own, lsrc, rps)
+            levels = jnp.where(mask[None, :], INF, st.levels)
+            levels = levels.at[rows, cols].set(
+                jnp.where(own, 0, levels[rows, cols]))
+            F = _fseed(jnp.where(mask[None, :], jnp.uint32(0), st.F),
+                       srcs, cols, mask)
+            paths = st.paths
+            if track_sigma:
+                paths = _seed_paths(jnp.where(mask[None, :], 0.0, paths),
+                                    lsrc, cols, own)
+            st = st._replace(levels=levels, F=F, paths=paths,
+                             col_lvl=jnp.where(mask, 0, st.col_lvl))
+            return requeue(st)
+
+        return _MSLocals(init=init, insert=insert,
+                         insert_batch=insert_batch, requeue=requeue,
+                         step=step, finalize=finalize)
+
+    return locals_for
+
+
 def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
                             buckets: int, spmm_w=None,
                             track_sigma: bool = False,
@@ -831,6 +1070,127 @@ def _make_ms_engine_sharded(p: BlestProblem, n_slots: int, *, spmm,
         paths_of=paths_of if track_sigma else None)
 
 
+def _make_ms_engine_sharded_2d(p: BlestProblem, n_slots: int, *, spmm,
+                               buckets: int, spmm_w=None,
+                               track_sigma: bool = False,
+                               gather: Callable | None = None,
+                               widths: list[int] | None = None,
+                               direction: str = "auto") -> MSEngine:
+    """The 2-D twin of :func:`_make_ms_engine_sharded`: same host surface,
+    R·C device blocks stacked row-major on every leading dim (block
+    d = i·C + j), specs from ``state_specs2d``/``problem_specs2d``.  The
+    host-visible extraction helpers read mesh column 0's replicas
+    (``[::C]``) — levels and σ are column-replicated per row block — and
+    ``col_live`` ORs the frontier words over ALL blocks (each holds only
+    its column segment)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs2d, state_specs2d
+
+    mesh = p.mesh
+    rax, cax = p.axis, p.col_axis
+    R, C, rps = p.n_shards, p.n_col_shards, p.rows_per_shard
+    D = R * C
+    S = n_slots
+    widths = list(widths) if widths is not None else \
+        queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    locals_for = _make_ms_locals_2d(p, S, spmm, widths, qcap,
+                                    spmm_w=spmm_w,
+                                    track_sigma=track_sigma, gather=gather,
+                                    direction=direction)
+
+    state_spec = state_specs2d(rax, cax, track_sigma=track_sigma)
+    dev_specs = problem_specs2d(rax, cax)
+    dev_args = (p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end)
+
+    def _dev(masks, row_ids, v2r, vstart, vend) -> ShardedBVSSDevice:
+        return ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                 vstart[0], vend[0])
+
+    def _unstack(st: MSState) -> MSState:
+        return jax.tree_util.tree_map(lambda x: x[0], st)
+
+    def _stack(st: MSState) -> MSState:
+        return jax.tree_util.tree_map(lambda x: x[None], st)
+
+    def sm(f, in_specs, out_specs):
+        fn = shard_map(f, mesh=mesh, in_specs=dev_specs + in_specs,
+                       out_specs=out_specs, check_rep=False)
+        return lambda *args: fn(*dev_args, *args)
+
+    def _init(masks, row_ids, v2r, vstart, vend, sources):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
+        return _stack(loc.init(sources))
+
+    def _insert(masks, row_ids, v2r, vstart, vend, st, slot, src):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
+        return _stack(loc.insert(_unstack(st), slot, src))
+
+    def _insert_batch(masks, row_ids, v2r, vstart, vend, st, srcs, mask):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
+        return _stack(loc.insert_batch(_unstack(st), srcs, mask))
+
+    def _requeue(masks, row_ids, v2r, vstart, vend, st):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
+        return _stack(loc.requeue(_unstack(st)))
+
+    def _level_step(masks, row_ids, v2r, vstart, vend, st):
+        loc = locals_for(_dev(masks, row_ids, v2r, vstart, vend))
+        st = loc.finalize(loc.step(_unstack(st)))
+        # each block sees only its column segment: make per-slot liveness
+        # globally consistent before it reaches the host serving loop
+        live = global_any((st.F != 0).any(axis=0), (rax, cax))
+        return _stack(st), live[None]
+
+    init_sm = sm(_init, (P(),), state_spec)
+    insert_sm = sm(_insert, (state_spec, P(), P()), state_spec)
+    insert_batch_sm = sm(_insert_batch, (state_spec, P(), P()), state_spec)
+    requeue_sm = sm(_requeue, (state_spec,), state_spec)
+    level_sm = sm(_level_step, (state_spec,), (state_spec, P((rax, cax))))
+
+    def idle() -> MSState:
+        def sh(a):
+            return jax.device_put(a, NamedSharding(mesh, P((rax, cax))))
+        return MSState(
+            levels=sh(np.full((D, rps + 1, S), INF, np.int32)),
+            F=sh(np.zeros((D, p.n_fwords, S), np.uint32)),
+            Q=sh(np.full((D, qcap), p.num_vss, np.int32)),
+            count=sh(np.zeros((D,), np.int32)),
+            col_lvl=sh(np.zeros((D, S), np.int32)),
+            cont=sh(np.zeros((D,), bool)),
+            paths=sh(np.zeros((D, rps, S), np.float32))
+            if track_sigma else None)
+
+    def level_step(st: MSState) -> tuple[MSState, jnp.ndarray]:
+        st, live = level_sm(st)
+        return st, live[0]
+
+    def levels_of(st: MSState, slot) -> jnp.ndarray:
+        # mesh column 0's replicas of every row block, one (n,) column
+        return st.levels[::C, :rps, slot].reshape(-1)[:p.n]
+
+    def paths_of(st: MSState, slot) -> jnp.ndarray:
+        return st.paths[::C, :, slot].reshape(-1)[:p.n]
+
+    return MSEngine(
+        problem=p, n_slots=S,
+        init=jax.jit(lambda sources: init_sm(
+            jnp.asarray(sources, dtype=jnp.int32))),
+        idle=idle,
+        insert=jax.jit(lambda st, slot, src: insert_sm(st, slot, src)),
+        insert_batch=jax.jit(
+            lambda st, srcs, mask: insert_batch_sm(st, srcs, mask)),
+        requeue=jax.jit(requeue_sm),
+        step=None, finalize=None,   # fused via make_multi_source_bfs
+        level_step=jax.jit(level_step),
+        col_live=jax.jit(lambda st: (st.F != 0).any(axis=(0, 1))),
+        levels_of=levels_of,
+        paths_of=paths_of if track_sigma else None)
+
+
 def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
                           use_kernel: bool = True,
                           max_levels: int | None = None,
@@ -852,6 +1212,10 @@ def make_multi_source_bfs(g: Graph | None, n_sources: int, *,
         problem = BlestProblem.build(bvss)
     max_lv = max_levels if max_levels is not None else problem.n + 1
     if problem.mesh is not None:
+        if problem.is_2d:
+            return _make_multi_source_bfs_sharded_2d(
+                problem, n_sources, use_kernel=use_kernel, buckets=buckets,
+                max_lv=max_lv, widths=widths, direction=direction)
         return _make_multi_source_bfs_sharded(
             problem, n_sources, use_kernel=use_kernel, buckets=buckets,
             max_lv=max_lv, widths=widths, direction=direction,
@@ -917,6 +1281,54 @@ def _make_multi_source_bfs_sharded(p: BlestProblem, n_sources: int, *,
                  p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
                  jnp.asarray(sources, dtype=jnp.int32))
         return out.reshape(-1, S)[:p.n]
+
+    return jax.jit(bfs)
+
+
+def _make_multi_source_bfs_sharded_2d(p: BlestProblem, n_sources: int, *,
+                                      use_kernel: bool, buckets: int,
+                                      max_lv: int,
+                                      widths: list[int] | None = None,
+                                      direction: str = "auto") -> Callable:
+    """Fixed-cohort multi-source on the 2-D mesh: the same 2-D local
+    step/finalize as the serving surface, fused into one ``shard_map``'d
+    ``while_loop`` (butterfly exchanges INSIDE the loop body — no host
+    sync across levels, paper §4.3)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.bfs_dist import problem_specs2d
+
+    mesh = p.mesh
+    rax, cax = p.axis, p.col_axis
+    R, C, rps = p.n_shards, p.n_col_shards, p.rows_per_shard
+    S = n_sources
+    widths = list(widths) if widths is not None else \
+        queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    spmm = bvss_spmm if use_kernel else bvss_spmm_ref
+    locals_for = _make_ms_locals_2d(p, S, spmm, widths, qcap,
+                                    direction=direction)
+
+    def local_loop(masks, row_ids, v2r, vstart, vend, sources):
+        loc = locals_for(ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                           vstart[0], vend[0]))
+        pipe = LevelPipeline(step=lambda s, lvl: loc.step(s),
+                             finalize=lambda s, lvl: loc.finalize(s),
+                             active=lambda s: s.cont)
+        state, _ = run_levels(pipe, loc.init(sources), max_levels=max_lv)
+        return state.levels[None, :rps]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs2d(rax, cax) + (P(),),
+                   out_specs=P((rax, cax)), check_rep=False)
+
+    def bfs(sources: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
+                 jnp.asarray(sources, dtype=jnp.int32))
+        # (R·C, rps, S) blocks row-major: mesh column 0 holds the replicas
+        return out.reshape(R, C, rps, S)[:, 0].reshape(-1, S)[:p.n]
 
     return jax.jit(bfs)
 

@@ -83,6 +83,28 @@ def choose_update_scheme(bvss: BVSS, *, threshold: float | None = None
 BVSS_ENGINES = ("brs", "blest", "blest_lazy")
 
 
+def build_problem(g_ord: Graph, *, sigma: int = 8, mesh: Mesh | None = None,
+                  mesh_axis: str = "data",
+                  bvss=None) -> BlestProblem:
+    """Build the device problem for an (already ordered) graph: single-
+    device, 1-D row-sharded, or 2-D row × column-sharded depending on the
+    mesh — the ONE dispatch every problem-building caller (``prepare``,
+    the serving tier's symmetrised problem) routes through.  A 2-D mesh
+    (two named axes) partitions by ``(rows, cols) = mesh.devices.shape``;
+    ``mesh_axis`` then names the ROW axis and must be the mesh's first."""
+    if mesh is None:
+        if bvss is None:
+            bvss = build_bvss(g_ord, sigma=sigma)
+        return BlestProblem.build(bvss)
+    from repro.distributed.bfs_dist import mesh_is_2d
+    if mesh_is_2d(mesh):
+        sb = build_sharded_bvss(g_ord, tuple(mesh.devices.shape),
+                                sigma=sigma)
+        return BlestProblem.build_sharded_2d(sb, mesh)
+    sb = build_sharded_bvss(g_ord, mesh.shape[mesh_axis], sigma=sigma)
+    return BlestProblem.build_sharded(sb, mesh, mesh_axis)
+
+
 def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             lazy_threshold: float | None = None, order: bool = True,
             engine: str | None = None, use_kernels: bool = True,
@@ -126,8 +148,8 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
                 f"mesh-native prepare supports the BVSS engines "
                 f"{BVSS_ENGINES}, not {engine_name!r} (the CSR/dense "
                 f"baselines have no row-sharded representation)")
-        sb = build_sharded_bvss(g_ord, mesh.shape[mesh_axis], sigma=sigma)
-        problem = BlestProblem.build_sharded(sb, mesh, mesh_axis)
+        problem = build_problem(g_ord, sigma=sigma, mesh=mesh,
+                                mesh_axis=mesh_axis)
     else:
         # only BVSS-consuming single-source engines need the device upload;
         # the host bvss alone backs the stats printouts and the policy

@@ -6,27 +6,45 @@ a parallel implementation — its own ``ShardedBVSS`` build and two bespoke
 ``bvss_pull``/``finalize_pack_sweep`` kernels and the bucketed queue.  All
 of that now rides the ONE mesh-parameterised stack:
 
-* build: :func:`repro.core.bvss.build_sharded_bvss` (row partition, padded
+* build: :func:`repro.core.bvss.build_sharded_bvss` (row partition — or the
+  2-D row × column partition when handed a ``(rows, cols)`` shape — padded
   to a common per-shard VSS count);
 * prep:  :func:`repro.core.policy.prepare` with ``mesh=...`` — the single
-  sharded-prep entry point;
+  sharded-prep entry point (1-D and 2-D meshes dispatch on
+  ``len(mesh.axis_names)``);
 * loop:  the same :class:`~repro.core.level_pipeline.LevelPipeline`
   step/finalize under ``shard_map`` (``core/bfs.py``,
-  ``core/multi_source.py``), frontier-word all-gather + psum convergence
-  inside the fused ``while_loop``;
+  ``core/multi_source.py``) — 1-D: frontier-word all-gather + psum
+  convergence; 2-D: butterfly OR-allreduce over the column axis + butterfly
+  segment exchange over the row axis (``distributed/collectives.py``);
 * serve: ``repro.serve.GraphSession(g, mesh=...)``.
 
 What remains here is the sharding vocabulary those layers share: the 1-D
-row-partition mesh and the PartitionSpecs of the shard-stacked problem
-arrays and wave state.
+row-partition mesh, the 2-D row × column mesh, and the PartitionSpecs of
+the shard-stacked problem arrays and wave state.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.errors import ConfigError
 
 #: the mesh axis the BVSS row partition maps onto
 BFS_AXIS = "data"
+#: the second mesh axis of the 2-D partition: frontier-word column blocks
+COL_AXIS = "col"
+
+
+def _take_devices(n_devices: int) -> list:
+    devices = jax.devices()
+    if n_devices > len(devices):
+        raise ConfigError(
+            f"requested {n_devices} devices, only {len(devices)} "
+            f"available (on CPU, relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_devices})")
+    return devices[:n_devices]
 
 
 def bfs_mesh(n_devices: int | None = None, axis: str = BFS_AXIS) -> Mesh:
@@ -36,29 +54,66 @@ def bfs_mesh(n_devices: int | None = None, axis: str = BFS_AXIS) -> Mesh:
     [d·rows_per_shard, (d+1)·rows_per_shard) — the slices that pull INTO
     its vertex range — and the σ-bit frontier words are the one
     all-gathered array (ButterFly-BFS-style: the frontier exchange is the
-    single cross-device term worth engineering)."""
+    single cross-device term worth engineering).
+
+    Over-requesting devices raises :class:`repro.errors.ConfigError`
+    (a ``ValueError`` subclass — the PR-6 typed-ingress contract).
+    """
     devices = jax.devices()
     if n_devices is not None:
-        if n_devices > len(devices):
-            raise ValueError(
-                f"requested {n_devices} devices, only {len(devices)} "
-                f"available (on CPU, relaunch with XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={n_devices})")
-        devices = devices[:n_devices]
+        devices = _take_devices(n_devices)
     return Mesh(devices, (axis,))
 
 
+def bfs_mesh2d(rows: int, cols: int, *, row_axis: str = BFS_AXIS,
+               col_axis: str = COL_AXIS) -> Mesh:
+    """A ``rows × cols`` 2-D mesh over the first ``rows * cols`` devices.
+
+    Device (i, j) owns the BVSS slices pulling its ROW block of vertices
+    from its COLUMN block of frontier words, so per level it touches only
+    ``1/cols`` of the frontier (DESIGN §2.4).  The 2-D engines require
+    ``rows >= cols`` (the column blocks interleave inside row blocks, so
+    the local column space ``rows · rps/cols`` must cover a row block);
+    violations raise :class:`repro.errors.ConfigError` here, at mesh
+    construction — the earliest ingress.
+    """
+    if rows < 1 or cols < 1:
+        raise ConfigError(f"mesh shape ({rows}, {cols}) must be positive")
+    if rows < cols:
+        raise ConfigError(
+            f"2-D BFS mesh needs rows >= cols, got ({rows}, {cols}) — "
+            f"the column partition interleaves inside row blocks, so "
+            f"fewer rows than columns leaves column shards without a "
+            f"full row block to pull from")
+    devices = _take_devices(rows * cols)
+    return Mesh(np.asarray(devices).reshape(rows, cols),
+                (row_axis, col_axis))
+
+
+def mesh_is_2d(mesh: Mesh) -> bool:
+    """True for the 2-D row × column partition (two named axes)."""
+    return len(mesh.axis_names) == 2
+
+
 def frontier_all_gather(fw_local, axis: str = BFS_AXIS):
-    """The ONE cross-device collective of the level loop: all-gather this
+    """The flat frontier exchange of the 1-D level loop: all-gather this
     shard's freshly packed σ-bit frontier words into the global frontier
     replica (tiled, so shard k contributes words [k·lwords, (k+1)·lwords)).
 
-    Every mesh-native engine (``core/bfs.py``, ``core/multi_source.py``)
+    Every 1-D mesh-native engine (``core/bfs.py``, ``core/multi_source.py``)
     routes its frontier exchange through this function, which makes it the
     documented fault seam for collective failures: the chaos gauntlet
     (``serve/faults.py``) substitutes a wrapper that zeroes a shard's
     segment — a stalled/dropped peer — and the verify-mode sampling policy
-    must catch the divergence (DESIGN §2.7)."""
+    must catch the divergence (DESIGN §2.7).  The 2-D engines route
+    through :func:`repro.distributed.collectives.butterfly_frontier_exchange`
+    instead (same seam signature).  Per-device bytes are recorded in the
+    trace-time :func:`~repro.distributed.collectives.comm_ledger`."""
+    from repro.distributed.collectives import axis_size, record_comm
+    n = axis_size(axis)
+    record_comm("flat_all_gather",
+                (n - 1) * int(np.prod(fw_local.shape))
+                * fw_local.dtype.itemsize)
     return jax.lax.all_gather(fw_local, axis, tiled=True)
 
 
@@ -70,8 +125,18 @@ def problem_specs(axis: str = BFS_AXIS) -> tuple[P, P, P, P, P]:
     return (P(axis), P(axis), P(axis), P(axis), P(axis))
 
 
+def problem_specs2d(row_axis: str = BFS_AXIS, col_axis: str = COL_AXIS
+                    ) -> tuple[P, P, P, P, P]:
+    """2-D variant: the R·C per-device blocks stack row-major on dim 0,
+    so one spec — both mesh axes on the leading dim — covers them all."""
+    ax = (row_axis, col_axis)
+    return (P(ax), P(ax), P(ax), P(ax), P(ax))
+
+
 def problem_sharding(mesh: Mesh, axis: str = BFS_AXIS) -> NamedSharding:
     """The NamedSharding every shard-stacked array is committed with."""
+    if mesh_is_2d(mesh):
+        return NamedSharding(mesh, P(tuple(mesh.axis_names)))
     return NamedSharding(mesh, P(axis))
 
 
@@ -86,3 +151,15 @@ def state_specs(axis: str = BFS_AXIS, *, track_sigma: bool = False):
     from repro.core.multi_source import MSState
     return MSState(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
                    P(axis) if track_sigma else None)
+
+
+def state_specs2d(row_axis: str = BFS_AXIS, col_axis: str = COL_AXIS,
+                  *, track_sigma: bool = False):
+    """2-D wave-state specs: every field stacks the R·C device blocks
+    row-major on dim 0 (levels and σ are column-replicated per row block;
+    the frontier block is each device's COLUMN-block words, row-replicated
+    within a mesh column — replication is a per-device invariant of the
+    engines, not something the specs encode, hence ``check_rep=False``)."""
+    from repro.core.multi_source import MSState
+    ax = P((row_axis, col_axis))
+    return MSState(ax, ax, ax, ax, ax, ax, ax if track_sigma else None)

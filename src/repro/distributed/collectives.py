@@ -1,16 +1,37 @@
-"""Overlap-friendly collective patterns (DESIGN §3).
+"""Collective patterns for the mesh-native engines (DESIGN §3).
 
-``ring_allgather_matmul`` is the classic Megatron column-parallel overlap
-trick: computing ``y_shard = allgather_K(x) @ W[:, shard]`` without a
-monolithic all-gather.  The K-sharded activation blocks rotate around the
-ring via ``lax.ppermute`` while each device multiplies the block it
-currently holds against the matching row-block of its (full-K, N-sharded)
-weight — compute hides the ICI hop latency.  Numerically identical to
-``all_gather + matmul`` (equivalence-tested in tests/test_distributed.py).
+Two families live here:
+
+* **Butterfly frontier collectives** (the PR-8 2-D partition): staged
+  recursive-doubling exchanges built from ``lax.ppermute``.
+  ``butterfly_frontier_exchange`` all-gathers per-device frontier word
+  segments along a mesh axis in index order (stage ``s`` pairs device
+  ``d`` with ``d ^ (1 << s)``, doubling the held block each stage);
+  ``butterfly_or_allreduce`` OR-combines partial hit words via
+  recursive-halving reduce-scatter + recursive-doubling all-gather.
+  Both fall back to the flat ``all_gather`` on non-power-of-two axes —
+  same result, no staged structure.
+
+* **Overlap matmul** — ``ring_allgather_matmul`` is the classic Megatron
+  column-parallel overlap trick: computing
+  ``y_shard = allgather_K(x) @ W[:, shard]`` without a monolithic
+  all-gather.  The K-sharded activation blocks rotate around the ring via
+  ``lax.ppermute`` while each device multiplies the block it currently
+  holds against the matching row-block of its (full-K, N-sharded) weight
+  — compute hides the ICI hop latency.  Numerically identical to
+  ``all_gather + matmul`` (equivalence-tested in tests/test_distributed.py).
+
+A trace-time **byte ledger** (``comm_ledger``) records the per-device
+bytes each collective moves: every exchange calls ``record_comm`` while
+being traced, so lowering an engine inside a ``comm_ledger()`` block
+yields its exact per-device communication volume per traced level —
+that's what ``bench_dist.py``'s communication block gates on.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +46,139 @@ def axis_size(axis_name):
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# trace-time communication ledger
+# ---------------------------------------------------------------------------
+_LEDGER: list[tuple[str, int]] | None = None
+
+
+def record_comm(label: str, nbytes: int) -> None:
+    """Note ``nbytes`` of per-device traffic under ``label`` if a ledger is
+    open.  Called by the collectives *while tracing* — shapes are static,
+    so the recorded volume is exact per executed call site (one while_loop
+    body trace == one level's traffic)."""
+    global _LEDGER
+    if _LEDGER is not None:
+        _LEDGER.append((label, int(nbytes)))
+
+
+@contextlib.contextmanager
+def comm_ledger():
+    """Collect per-device collective byte counts during tracing.
+
+        with comm_ledger() as events:
+            jax.jit(fn).lower(*args)          # force a fresh trace
+        bytes_per_level = sum(n for _, n in events)
+
+    Nested ledgers shadow (the inner one records); tracing the same
+    cached jit a second time records nothing — lower a *fresh* closure.
+    """
+    global _LEDGER
+    prev = _LEDGER
+    _LEDGER = events = []
+    try:
+        yield events
+    finally:
+        _LEDGER = prev
+
+
+def _nbytes(x) -> int:
+    return int(math.prod(x.shape)) * x.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# butterfly frontier collectives (2-D partition, DESIGN §3)
+# ---------------------------------------------------------------------------
+def butterfly_frontier_exchange(seg: jnp.ndarray, axis_name: str,
+                                *, stall_stage: int | None = None
+                                ) -> jnp.ndarray:
+    """Recursive-doubling all-gather of per-device segments, index-ordered.
+
+    Device ``d`` contributes ``seg`` (leading-dim block ``d``); every
+    device returns ``concat([seg_0, ..., seg_{n-1}])`` along dim 0.  On a
+    power-of-two axis this runs ``log2(n)`` ``ppermute`` stages — stage
+    ``s`` pairs ``d`` with ``d ^ (1 << s)`` and doubles the held block,
+    keeping lower-indexed halves first so the result needs no final
+    permutation.  Non-power-of-two axes fall back to the flat tiled
+    ``all_gather`` (identical result, no staged structure).
+
+    ``stall_stage`` is the fault seam (DESIGN §2.7): at that stage the
+    partner's block is replaced with zeros — modelling a stalled/timed-out
+    transfer — so downstream frontiers silently under-discover exactly the
+    way a real stuck exchange would.  Ignored on the fallback path.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return seg
+    if n & (n - 1):  # non-power-of-two: flat gather moves the same bytes
+        record_comm("butterfly_fallback_flat", (n - 1) * _nbytes(seg))
+        return jax.lax.all_gather(seg, axis_name, tiled=True)
+    idx = jax.lax.axis_index(axis_name)
+    buf = seg
+    for s in range(n.bit_length() - 1):
+        bit = 1 << s
+        record_comm("butterfly_gather", _nbytes(buf))
+        perm = [(d, d ^ bit) for d in range(n)]
+        other = jax.lax.ppermute(buf, axis_name, perm)
+        if stall_stage == s:
+            other = jnp.zeros_like(other)
+        lower_half = (idx & bit) == 0
+        buf = jnp.where(lower_half,
+                        jnp.concatenate([buf, other], axis=0),
+                        jnp.concatenate([other, buf], axis=0))
+    return buf
+
+
+def butterfly_or_allreduce(words: jnp.ndarray, axis_name: str
+                           ) -> jnp.ndarray:
+    """Bitwise-OR all-reduce of packed frontier words along a mesh axis.
+
+    Power-of-two axes run recursive-halving reduce-scatter (each stage
+    ORs the partner's half of the shrinking block) followed by the
+    recursive-doubling all-gather — per-device volume
+    ``2 * nbytes * (1 - 1/n)`` instead of the flat gather's
+    ``nbytes * (n - 1)``.  Requires dim 0 divisible by the axis size
+    (guaranteed by the 32·cols row alignment of the 2-D partition);
+    non-power-of-two axes fall back to gather + OR-reduce.
+    """
+    n = axis_size(axis_name)
+    if n == 1:
+        return words
+    if (n & (n - 1)) or words.shape[0] % n:
+        record_comm("or_allreduce_fallback_flat", (n - 1) * _nbytes(words))
+        gathered = jax.lax.all_gather(words, axis_name, tiled=False)
+        return jax.lax.reduce(gathered, jnp.zeros((), words.dtype),
+                              jnp.bitwise_or, (0,))
+    idx = jax.lax.axis_index(axis_name)
+    buf = words
+    stages = n.bit_length() - 1
+    # recursive halving: after stage s the device holds the OR over its
+    # 2^(s+1)-device group of a 1/2^(s+1) slice, position-encoded by the
+    # low bits of idx so the doubling phase can reassemble in order
+    for s in range(stages):
+        bit = 1 << s
+        half = buf.shape[0] // 2
+        record_comm("or_reduce_scatter", _nbytes(buf) // 2)
+        upper = (idx & bit) != 0
+        keep = jnp.where(upper, buf[half:], buf[:half])
+        send = jnp.where(upper, buf[:half], buf[half:])
+        perm = [(d, d ^ bit) for d in range(n)]
+        other = jax.lax.ppermute(send, axis_name, perm)
+        buf = keep | other
+    # recursive doubling reassembles the full OR'd block: stage order is
+    # reversed so the halving's position encoding unwinds exactly
+    for s in reversed(range(stages)):
+        bit = 1 << s
+        record_comm("or_allgather", _nbytes(buf))
+        perm = [(d, d ^ bit) for d in range(n)]
+        other = jax.lax.ppermute(buf, axis_name, perm)
+        upper = (idx & bit) != 0
+        buf = jnp.where(upper,
+                        jnp.concatenate([other, buf], axis=0),
+                        jnp.concatenate([buf, other], axis=0))
+    return buf
 
 
 def ring_allgather_matmul(x_blk: jnp.ndarray, w_local: jnp.ndarray,

@@ -28,6 +28,12 @@ deterministic injection):
 * ``stall_shard`` — shard k's segment of the frontier-word all-gather is
   zeroed (a stalled / dropped peer): vertices it owns stop propagating,
   so other shards under-discover.  Mesh sessions only.
+* ``stall_butterfly_stage`` — stage k of the staged butterfly frontier
+  exchange (``distributed.collectives.butterfly_frontier_exchange``)
+  drops its partner block on every device: half the frontier segments go
+  dark mid-exchange (a failed recursive-doubling round, the 2-D analogue
+  of ``stall_shard``).  Rides the SAME ``gather_impl`` seam, so a plan
+  may set one stall or the other, never both.
 
 Every injected fault must surface as a typed error or a degraded-but-
 correct result — never a silent wrong answer.  The CI ``chaos`` job runs
@@ -66,11 +72,24 @@ class FaultPlan:
     #: zero shard k's segment of the frontier-word all-gather (stalled
     #: peer); only consulted by mesh-native engines
     stall_shard: int | None = None
+    #: drop the partner block at stage k of the butterfly frontier
+    #: exchange (failed recursive-doubling round); 2-D mesh engines —
+    #: shares the ``gather_impl`` seam with ``stall_shard``
+    stall_butterfly_stage: int | None = None
+
+    def __post_init__(self):
+        if (self.stall_shard is not None
+                and self.stall_butterfly_stage is not None):
+            from repro.errors import ConfigError
+            raise ConfigError(
+                "stall_shard and stall_butterfly_stage both occupy the "
+                "gather_impl seam; a plan may set at most one")
 
     @property
     def injects(self) -> bool:
         return (self.corrupt_spmm_tile or self.corrupt_push_tile
-                or self.nan_sigma or self.stall_shard is not None)
+                or self.nan_sigma or self.stall_shard is not None
+                or self.stall_butterfly_stage is not None)
 
     # -- seam wrappers ---------------------------------------------------
     def wrap_spmm(self, base: Callable) -> Callable:
@@ -111,6 +130,14 @@ class FaultPlan:
         return faulty_spmm_w
 
     def wrap_gather(self) -> Callable | None:
+        if self.stall_butterfly_stage is not None:
+            import functools
+
+            from repro.distributed.collectives import (
+                butterfly_frontier_exchange)
+            return functools.partial(butterfly_frontier_exchange,
+                                     stall_stage=int(
+                                         self.stall_butterfly_stage))
         if self.stall_shard is None:
             return None
         k = int(self.stall_shard)
@@ -146,7 +173,8 @@ class FaultPlan:
             out["push_impl"] = self.wrap_push(push)
         if self.nan_sigma:
             out["spmm_w_impl"] = self.wrap_spmm_w(spmm_w)
-        if self.stall_shard is not None:
+        if (self.stall_shard is not None
+                or self.stall_butterfly_stage is not None):
             out["gather_impl"] = self.wrap_gather()
         return out
 

@@ -249,18 +249,11 @@ class GraphSession:
         space — symmetrisation commutes with the reordering), backing the
         classical undirected analytics; sharded when the session is."""
         if "sym_problem" not in self._analytics_cache:
+            from repro.core.policy import build_problem
             gs = self.prepared.graph.symmetrized
-            sigma = self.prepared.bvss.sigma
-            mesh = self.mesh
-            if mesh is not None:
-                from repro.core.bvss import build_sharded_bvss
-                sb = build_sharded_bvss(gs, mesh.shape[self._mesh_axis],
-                                        sigma=sigma)
-                prob = BlestProblem.build_sharded(sb, mesh, self._mesh_axis)
-            else:
-                from repro.core.bvss import build_bvss
-                prob = BlestProblem.build(build_bvss(gs, sigma=sigma))
-            self._analytics_cache["sym_problem"] = prob
+            self._analytics_cache["sym_problem"] = build_problem(
+                gs, sigma=self.prepared.bvss.sigma, mesh=self.mesh,
+                mesh_axis=self._mesh_axis)
         return self._analytics_cache["sym_problem"]
 
     def _sym_ms(self):

@@ -1,0 +1,291 @@
+"""2-D (row × column) BVSS partition tests — PR-8 (DESIGN §2.4/§3).
+
+Parity contract: the 2-D engines (single-source eager/lazy, wave pool,
+σ channel, betweenness) must match the single-device answers on every
+mesh shape — bit-exact on integer levels, ≤1e-6 relative error on the
+float channels.  Multi-device cases run in subprocesses with
+--xla_force_host_platform_device_count (same pattern as
+tests/test_distributed.py) so the main pytest session keeps its
+single-device jax instance; the butterfly collectives additionally get
+direct unit tests against the flat ``all_gather`` they replace.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import require_devices
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, n_devices: int = 8, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# butterfly collectives: unit parity vs the flat gather they replace
+# ---------------------------------------------------------------------------
+def test_butterfly_collectives_match_flat():
+    """On power-of-two axes the staged butterfly exchange must reproduce
+    the index-ordered ``all_gather`` exactly, and the OR-allreduce the
+    gather+OR — for every axis size the 2-D meshes use; the stall seam
+    must visibly zero the partner block (otherwise the chaos scenario is
+    vacuous)."""
+    run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.distributed.collectives import (butterfly_frontier_exchange,
+                                           butterfly_or_allreduce)
+rng = np.random.default_rng(0)
+for n in (2, 4, 8):
+    mesh = Mesh(np.asarray(jax.devices()[:n]), ("x",))
+    words = jnp.asarray(rng.integers(0, 2**32, (8 * n, 3), dtype=np.uint32))
+
+    def bf(seg):
+        return butterfly_frontier_exchange(seg, "x")[None]
+    def flat(seg):
+        return jax.lax.all_gather(seg, "x", tiled=True)[None]
+    kw = dict(mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+              check_rep=False)
+    got = np.asarray(shard_map(bf, **kw)(words)).reshape(n, -1, 3)
+    ref = np.asarray(shard_map(flat, **kw)(words)).reshape(n, -1, 3)
+    assert (got == ref).all(), n
+    # every device returns the same full gather
+    assert all((got[d] == words).all() for d in range(n)), n
+
+    def orred(seg):
+        return butterfly_or_allreduce(seg, "x")[None]
+    got_or = np.asarray(shard_map(orred, **kw)(words)).reshape(n, -1, 3)
+    ref_or = np.bitwise_or.reduce(
+        np.asarray(words).reshape(n, -1, 3), axis=0)
+    assert all((got_or[d] == ref_or).all() for d in range(n)), n
+
+    # the stall seam drops data: stage-0 stall != clean exchange
+    def stalled(seg):
+        return butterfly_frontier_exchange(seg, "x", stall_stage=0)[None]
+    bad = np.asarray(shard_map(stalled, **kw)(words)).reshape(n, -1, 3)
+    assert (bad != ref).any(), n
+print("ok")
+""", n_devices=8)
+
+
+def test_butterfly_non_pow2_falls_back_to_flat():
+    """Axis size 3: no recursive-doubling schedule exists, so both
+    collectives must fall back to the flat gather — same result, and the
+    ledger must label the traffic as the fallback."""
+    run_py("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.distributed.collectives import (butterfly_frontier_exchange,
+                                           butterfly_or_allreduce,
+                                           comm_ledger)
+mesh = Mesh(np.asarray(jax.devices()[:3]), ("x",))
+rng = np.random.default_rng(1)
+words = jnp.asarray(rng.integers(0, 2**32, (9, 2), dtype=np.uint32))
+kw = dict(mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_rep=False)
+
+def bf(seg):
+    return butterfly_frontier_exchange(seg, "x")[None]
+with comm_ledger() as ev:
+    got = np.asarray(shard_map(jax.jit(bf), **kw)(words)).reshape(3, 9, 2)
+assert all((got[d] == words).all() for d in range(3))
+assert any(lab == "butterfly_fallback_flat" for lab, _ in ev), ev
+
+def orred(seg):
+    return butterfly_or_allreduce(seg, "x")[None]
+with comm_ledger() as ev:
+    got = np.asarray(shard_map(jax.jit(orred), **kw)(words)).reshape(3, 3, 2)
+ref = np.bitwise_or.reduce(np.asarray(words).reshape(3, 3, 2), axis=0)
+assert all((got[d] == ref).all() for d in range(3))
+assert any(lab == "or_allreduce_fallback_flat" for lab, _ in ev), ev
+print("ok")
+""", n_devices=8)
+
+
+def test_comm_ledger_unit():
+    """Trace-time ledger semantics: records only while open, nested
+    ledgers shadow, bytes sum exactly."""
+    from repro.distributed.collectives import comm_ledger, record_comm
+    record_comm("dropped", 999)        # no open ledger: silently ignored
+    with comm_ledger() as outer:
+        record_comm("a", 100)
+        with comm_ledger() as inner:
+            record_comm("b", 50)
+        record_comm("c", 7)
+    assert inner == [("b", 50)]
+    assert outer == [("a", 100), ("c", 7)]
+    assert sum(n for _, n in outer) == 107
+
+
+# ---------------------------------------------------------------------------
+# typed mesh-ingress errors (satellite: ConfigError regression tests)
+# ---------------------------------------------------------------------------
+def test_mesh_over_request_raises_config_error():
+    from repro.distributed.bfs_dist import bfs_mesh, bfs_mesh2d
+    from repro.errors import ConfigError
+    import jax
+    too_many = len(jax.devices()) + 1
+    with pytest.raises(ConfigError, match="relaunch with XLA_FLAGS"):
+        bfs_mesh(too_many)
+    # ConfigError is a ValueError subclass (PR-6 typed-ingress contract),
+    # so pre-PR-8 callers catching ValueError keep working
+    with pytest.raises(ValueError):
+        bfs_mesh(too_many)
+    with pytest.raises(ConfigError):
+        bfs_mesh2d(too_many, 1)
+
+
+def test_mesh2d_shape_validation():
+    from repro.distributed.bfs_dist import bfs_mesh2d
+    from repro.errors import ConfigError
+    with pytest.raises(ConfigError, match="positive"):
+        bfs_mesh2d(0, 1)
+    with pytest.raises(ConfigError, match="positive"):
+        bfs_mesh2d(2, -1)
+    # rows < cols leaves column shards without a full row block
+    with pytest.raises(ConfigError, match="rows >= cols"):
+        bfs_mesh2d(1, 2)
+
+
+def test_2d_forced_push_rejected():
+    """The 2-D engines are pull-only: the interleaved column partition
+    has no per-device push operand, so forcing ``direction="push"`` must
+    be a typed refusal, not a silent pull."""
+    run_py("""
+from repro.graphs import generators as gen
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh2d
+from repro.errors import ConfigError
+g = gen.rmat(7, 8, seed=0)
+try:
+    prepare(g, w=256, mesh=bfs_mesh2d(2, 2), direction="push")
+except ConfigError as e:
+    assert "pull" in str(e).lower(), e
+else:
+    raise AssertionError("direction='push' must be rejected on 2-D meshes")
+# "auto" on 2-D quietly resolves to pull and still answers correctly
+from repro.core import reference_bfs
+pb = prepare(g, w=256, mesh=bfs_mesh2d(2, 2), direction="auto")
+assert (pb.levels(0) == reference_bfs(g, 0)).all()
+print("ok")
+""", n_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# level parity: single-source engines across mesh shapes (ragged n)
+# ---------------------------------------------------------------------------
+def test_2d_prepare_matches_oracle_across_meshes():
+    """The core acceptance sweep: a ragged clustered graph (n=69 — no
+    alignment is natural) through eager and lazy engines on {1×1, 2×1,
+    2×2, 4×2}; every mesh must be bit-exact with the host oracle."""
+    run_py("""
+import numpy as np
+from repro.graphs import generators as gen
+from repro.core import reference_bfs
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh2d
+g = gen.clustered(3, 23, seed=4)
+srcs = (0, g.n // 3, g.n - 1)
+ref = {s: reference_bfs(g, s) for s in srcs}
+for rows, cols in ((1, 1), (2, 1), (2, 2), (4, 2)):
+    mesh = bfs_mesh2d(rows, cols)
+    for eng in ("blest", "blest_lazy"):
+        pb = prepare(g, w=256, mesh=mesh, engine=eng)
+        for s in srcs:
+            assert (pb.levels(s) == ref[s]).all(), (rows, cols, eng, s)
+print("ok")
+""", n_devices=8)
+
+
+def test_2d_isolated_sources_and_empty_columns():
+    """Degenerate frontiers: isolated vertices (instant termination),
+    and a sparse graph whose frontier occupies a single column block for
+    entire levels — empty column segments must stay inert, not wedge the
+    OR-allreduce or the liveness reduction."""
+    run_py("""
+import numpy as np
+from repro.graphs import from_edges, generators as gen
+from repro.core import reference_bfs
+from repro.core.policy import prepare
+from repro.distributed.bfs_dist import bfs_mesh2d
+# 50 vertices, 3 edges: vertex 0 (and most others) isolated
+g = from_edges(50, [1, 2, 10], [2, 3, 11])
+mesh = bfs_mesh2d(2, 2)
+pb = prepare(g, w=256, order=False, mesh=mesh)
+for s in (0, 1, 10, 49):
+    assert (pb.levels(s) == reference_bfs(g, s)).all(), s
+# long path: every level's frontier is ONE vertex — all but one column
+# segment empty at every level, on both mesh shapes
+n = 70
+gp = from_edges(n, np.arange(n - 1), np.arange(1, n))
+for rows, cols in ((2, 2), (4, 2)):
+    pb = prepare(gp, w=256, order=False, mesh=bfs_mesh2d(rows, cols))
+    for s in (0, n - 1, n // 2):
+        assert (pb.levels(s) == reference_bfs(gp, s)).all(), (rows, cols, s)
+print("ok")
+""", n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# wave pool + σ channel parity (float channels ≤ 1e-6 rel err)
+# ---------------------------------------------------------------------------
+def test_2d_session_transparency_and_sigma_parity():
+    """GraphSession(g, mesh=2-D) must serve every verb unchanged: wave
+    levels bit-exact, betweenness/closeness within 1e-6 of the host
+    references — ordering and the 2-D shard layout invisible to
+    callers."""
+    run_py("""
+import numpy as np
+from repro.graphs import generators as gen
+from repro.core import reference_bfs
+from repro.kernels.ref import betweenness_ref
+from repro.serve import GraphSession
+from repro.distributed.bfs_dist import bfs_mesh2d
+g = gen.clustered(3, 23, seed=4)
+single = GraphSession(g, max_batch=3, w=256)
+for rows, cols in ((2, 2), (4, 2)):
+    sess = GraphSession(g, max_batch=3, w=256, mesh=bfs_mesh2d(rows, cols))
+    queries = [0, 7, 23, 7, g.n - 1]
+    for q, lv in zip(queries, sess.levels_batch(queries)):
+        np.testing.assert_array_equal(lv, reference_bfs(g, q),
+                                      err_msg=f"{rows}x{cols} query {q}")
+    srcs = [0, 5, 23, 41]
+    bc = sess.betweenness(srcs)
+    np.testing.assert_allclose(bc, betweenness_ref(g, srcs), rtol=1e-6,
+                               err_msg=f"{rows}x{cols} betweenness")
+    np.testing.assert_allclose(bc, single.betweenness(srcs), rtol=1e-6)
+    np.testing.assert_array_equal(sess.components(), single.components())
+print("ok")
+""", n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# in-process 4×2 parity — the BLEST_REQUIRE_MULTIDEVICE=1 CI anchor
+# ---------------------------------------------------------------------------
+def test_2d_parity_in_process():
+    """Runs in the multidevice CI job's own 8-device process (no
+    subprocess indirection) so the job provably exercises the 2-D path:
+    ``require_devices(8)`` FAILS rather than skips under
+    BLEST_REQUIRE_MULTIDEVICE=1."""
+    require_devices(8)
+    import numpy as np
+
+    from repro.core import reference_bfs
+    from repro.core.policy import prepare
+    from repro.distributed.bfs_dist import bfs_mesh2d
+    from repro.graphs import generators as gen
+    g = gen.rmat(7, 8, seed=2)
+    pb = prepare(g, w=256, mesh=bfs_mesh2d(4, 2))
+    for s in (0, g.n // 2, g.n - 1):
+        np.testing.assert_array_equal(pb.levels(s), reference_bfs(g, s))

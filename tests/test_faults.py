@@ -57,6 +57,18 @@ def test_no_fault_plan_is_free():
     assert set(push.engine_overrides(use_kernel=False)) == {"push_impl"}
     both = FaultPlan(nan_sigma=True, stall_shard=1)
     assert set(both.engine_overrides()) == {"spmm_w_impl", "gather_impl"}
+    stage = FaultPlan(stall_butterfly_stage=0)
+    assert stage.injects
+    assert set(stage.engine_overrides()) == {"gather_impl"}
+
+
+def test_double_stall_plan_rejected():
+    """``stall_shard`` and ``stall_butterfly_stage`` both occupy the
+    ``gather_impl`` seam — a plan setting both is a configuration bug
+    and must be refused at construction, not silently last-writer-wins."""
+    from repro.errors import ConfigError
+    with pytest.raises(ConfigError, match="gather_impl"):
+        FaultPlan(stall_shard=0, stall_butterfly_stage=1)
 
 
 def test_faulted_session_actually_diverges(graph):
@@ -159,6 +171,39 @@ def test_stalled_shard_fault_actually_underdiscovers(graph):
     from repro.distributed.bfs_dist import bfs_mesh
     sess = GraphSession(graph, max_batch=2, mesh=bfs_mesh(2),
                         fault_plan=FaultPlan(stall_shard=1))
+    diverged = sum(
+        not np.array_equal(lv, reference_bfs(graph, q))
+        for q, lv in zip(QUERIES, sess.levels_batch(QUERIES)))
+    assert diverged > 0
+
+
+# ---------------------------------------------------------------------------
+# scenario 3b: stalled butterfly stage (2-D mesh, PR-8 partner-block drop)
+# ---------------------------------------------------------------------------
+def test_stalled_butterfly_stage_caught_and_reserved_correctly(graph):
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh2d
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("dark", graph, max_batch=2, mesh=bfs_mesh2d(2, 1),
+                     fault_plan=FaultPlan(stall_butterfly_stage=0))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = mgr.levels_batch("dark", QUERIES)
+    for q, lv in zip(QUERIES, out):
+        np.testing.assert_array_equal(lv, reference_bfs(graph, q))
+    assert any(issubclass(x.category, DegradedServiceWarning) for x in w)
+    assert mgr.stats()["quarantines"] == 1
+
+
+def test_stalled_butterfly_stage_fault_actually_underdiscovers(graph):
+    """Sanity: dropping the stage-0 partner block DOES change answers.
+    The seam is consulted by the wave pool, so the probe rides
+    ``levels_batch`` (singleton ``levels`` serves off the unfaulted fused
+    engine by design — the seam is the exchange, not the query verb)."""
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh2d
+    sess = GraphSession(graph, max_batch=2, mesh=bfs_mesh2d(2, 1),
+                        fault_plan=FaultPlan(stall_butterfly_stage=0))
     diverged = sum(
         not np.array_equal(lv, reference_bfs(graph, q))
         for q, lv in zip(QUERIES, sess.levels_batch(QUERIES)))

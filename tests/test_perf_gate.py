@@ -63,7 +63,9 @@ def test_checked_in_floors_are_wellformed():
         suite = dotted.split(".")[0]
         assert suite in ("fused", "service", "dist", "analytics",
                          "hybrid"), dotted
-        assert ".summary." in dotted, dotted
+        # gated metrics live under a suite summary, or (PR 8) the
+        # trace-time comm-volume block of the dist2d partition bench
+        assert ".summary." in dotted or ".comm." in dotted, dotted
         assert floor > 0, dotted
 
 
