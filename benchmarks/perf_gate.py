@@ -70,6 +70,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prove-gate", action="store_true",
                     help="self-test: exit 0 only if 100x-inflated floors "
                          "make the gate fail")
+    ap.add_argument("--require-covered", action="store_true",
+                    help="fail if the artifact contains a suite (top-level "
+                         "dict key) with no floor under it — a new bench "
+                         "suite must land WITH a floor, never silently "
+                         "escape the gate (the weekly full-depth run sets "
+                         "this)")
     args = ap.parse_args(argv)
 
     with open(args.artifact) as f:
@@ -77,6 +83,20 @@ def main(argv=None) -> int:
     with open(args.floors) as f:
         spec = json.load(f)
     floors = {k: float(v) for k, v in spec["floors"].items()}
+    if args.require_covered:
+        # coverage is judged against the FULL floors file, before any
+        # --only narrowing: a suite is covered if at least one checked-in
+        # floor gates a metric inside it
+        suites = [k for k, v in artifact.items() if isinstance(v, dict)]
+        uncovered = [s for s in suites
+                     if not any(path.startswith(s + ".") for path in floors)]
+        if uncovered:
+            print(f"perf gate FAILED: artifact suite(s) with no floor: "
+                  f"{', '.join(sorted(uncovered))} — add a floor to "
+                  f"{args.floors} (new suites must not escape the gate)")
+            return 1
+        print(f"perf gate: all {len(suites)} artifact suites covered by "
+              f"floors")
     if args.only is not None:
         floors = {k: v for k, v in floors.items()
                   if k.startswith(args.only)}

@@ -10,12 +10,13 @@ the perf-trajectory benches — the PR-1 fused-pipeline bench
 (``benchmarks/bench_dist.py``, which simulates its device mesh in a
 subprocess — since PR 8 with the ``dist2d`` butterfly comm-volume block),
 the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
-now with the closeness suite and sharded betweenness in ``dist``), the
-PR-7 compiled-dispatch hybrid bench (``benchmarks/bench_hybrid.py``:
+with the closeness suite, sharded betweenness in ``dist`` and — since
+PR 9 — the weighted ``sssp`` delta-stepping and ``pagerank`` suites),
+the PR-7 compiled-dispatch hybrid bench (``benchmarks/bench_hybrid.py``:
 direction-optimizing hybrid vs pull-only, pure-XLA lane) and the PR-8
 RMAT scale sweep (``benchmarks/bench_scale.py``: MTEPS + peak device
 footprint over 2^10..2^14, quick mode stops at 2^11) — and
-writes one machine-readable artifact (default ``BENCH_pr8.json``) with
+writes one machine-readable artifact (default ``BENCH_pr9.json``) with
 ``fused``, ``service``, ``dist``, ``analytics``, ``hybrid`` and
 ``scale_sweep`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
@@ -36,7 +37,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr8.json", default=None,
+    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json", default=None,
                     metavar="PATH",
                     help="run the fused-pipeline + service + dist + "
                          "analytics + hybrid + scale-sweep benches and "
@@ -51,7 +52,7 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr8.json"
+        json_path = "BENCH_pr9.json"
     if json_path is not None:
         from benchmarks import (bench_analytics, bench_dist, bench_fused,
                                 bench_hybrid, bench_scale, bench_service)
@@ -83,7 +84,7 @@ def main(argv=None) -> None:
                                       n_sources=2 if args.quick else 3,
                                       json_path=None)
         out = {
-            **bench_envelope("pr8_scale_suite", suite_scale),
+            **bench_envelope("pr9_weighted_suite", suite_scale),
             "fused": fused,
             "service": service,
             "dist": dist,

@@ -3,7 +3,8 @@
 Every algorithm here is a *client* of the machinery the BFS stack already
 owns — the batched bit-SpMM wave engine (``core.multi_source``), the fused
 ``LevelPipeline`` loop, and the weighted BVSS tile products
-(``kernels.bvss_spmm_w`` / ``bvss_spmm_t``) — never a bespoke traversal:
+(``kernels.bvss_spmm_w`` / ``bvss_spmm_t`` / ``bvss_spmm_minplus``) —
+never a bespoke traversal:
 
 * :mod:`~repro.analytics.components` — connected components as batched
   flood-fill with iterative re-seeding through the generic wave refill
@@ -18,7 +19,13 @@ owns — the batched bit-SpMM wave engine (``core.multi_source``), the fused
   per-shard histories + a psum-scattered column reduction — no
   replicated weighted sweeps);
 * :mod:`~repro.analytics.closeness` — exact and sampled closeness
-  centrality as a reduction over wave level channels.
+  centrality as a reduction over wave level channels;
+* :mod:`~repro.analytics.sssp` — delta-stepping single-source shortest
+  paths: bucketed label-correcting waves through the min-plus tile
+  product against the edge-weight plane (DESIGN §2.9);
+* :mod:`~repro.analytics.pagerank` — PageRank as float-channel power
+  iteration over the weighted tile product, dangling-mass correction and
+  L1 convergence fused into one device loop (DESIGN §2.9).
 
 All functions speak the id space of the problem/graph they are handed;
 ``repro.serve.GraphSession`` layers the caller-id contract, symmetrised
@@ -30,8 +37,12 @@ from repro.analytics.closeness import (closeness_centrality,
 from repro.analytics.components import connected_components
 from repro.analytics.eccentricity import (ExtremesReport, eccentricities,
                                           ifub_extremes)
+from repro.analytics.pagerank import (make_pagerank, out_degrees,
+                                      pagerank_scores)
+from repro.analytics.sssp import default_delta, make_sssp, sssp_distances
 
 __all__ = ["betweenness_centrality", "make_betweenness",
            "closeness_centrality", "closeness_from_levels",
            "connected_components", "eccentricities", "ifub_extremes",
-           "ExtremesReport"]
+           "ExtremesReport", "make_sssp", "sssp_distances", "default_delta",
+           "make_pagerank", "pagerank_scores", "out_degrees"]

@@ -1,0 +1,210 @@
+"""PageRank as a float-channel power iteration on the BVSS tiles
+(DESIGN §2.9).
+
+The pull form of one PageRank step is exactly the weighted tile product
+the σ path-count channel already owns (``bvss_spmm_w``):
+
+    r'[u] = (1 - d)/n + d · ( Σ_{v→u} r[v] / outdeg[v]  +  dangling/n )
+
+where ``dangling = Σ_{outdeg[v]=0} r[v]`` redistributes the mass of sink
+vertices uniformly (the classic dangling-mass correction — without it the
+iteration leaks mass and converges to the wrong vector).  Every iteration
+pulls the FULL tile stream (PageRank has no frontier: every vertex
+contributes every round, so the static all-VSS queue replaces the
+compactor), scatter-adds through ``row_ids``, applies the damping and
+dangling terms, and tests the L1 residual ``Σ|r' - r|`` against ``tol``
+— all inside ONE fused ``while_loop``, no host round-trips.
+
+A row-sharded problem runs the same loop under ``shard_map``: the
+per-vertex contribution values all-gather per iteration (the float twin
+of the frontier-word gather), the dangling mass and the residual reduce
+with ``psum``, so the convergence test stays replicated and every shard
+leaves the loop together.  A 2-D problem is a typed
+:class:`~repro.errors.ConfigError` (the weighted verbs ship 1-D;
+DESIGN §2.9).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bfs import BlestProblem
+from repro.errors import ConfigError
+from repro.graphs import Graph
+from repro.kernels import bvss_spmm_w_local
+from repro.kernels.ref import bvss_spmm_w_ref
+
+DAMPING = 0.85
+TOL = 1e-8
+MAX_ITER = 200
+
+
+def out_degrees(g: Graph) -> np.ndarray:
+    """Out-degree per vertex of ``g`` (float32) — the host-side operand
+    PageRank normalises contributions with."""
+    return np.diff(g.indptr).astype(np.float32)
+
+
+def make_pagerank(problem: BlestProblem, outdeg: np.ndarray, *,
+                  use_kernel: bool = True, damping: float = DAMPING,
+                  tol: float = TOL, max_iter: int = MAX_ITER) -> Callable:
+    """Build jitted ``f() -> r (n,) f32`` over ``problem`` (ids are the
+    problem's own; ``outdeg`` in the same id space).  Single-device and
+    1-D row-sharded; 2-D raises :class:`~repro.errors.ConfigError`."""
+    if problem.mesh is not None:
+        if problem.is_2d:
+            raise ConfigError(
+                "pagerank is not supported on a 2-D (row × column) mesh "
+                "yet — the weighted verbs ship 1-D row-sharded "
+                "(DESIGN §2.9)")
+        return _make_pagerank_sharded(problem, outdeg,
+                                      use_kernel=use_kernel,
+                                      damping=damping, tol=tol,
+                                      max_iter=max_iter)
+    return _make_pagerank_single(problem, outdeg, use_kernel=use_kernel,
+                                 damping=damping, tol=tol,
+                                 max_iter=max_iter)
+
+
+def _make_pagerank_single(p: BlestProblem, outdeg: np.ndarray, *,
+                          use_kernel: bool, damping: float, tol: float,
+                          max_iter: int) -> Callable:
+    dev = p.dev
+    n, sigma, n_sets = p.n, p.sigma, p.n_sets
+    ncols = n_sets * sigma
+    impl = None if use_kernel else bvss_spmm_w_ref
+    # PageRank has no frontier: the static full queue replaces the
+    # compactor (every VSS pulls every iteration).  An edgeless graph has
+    # zero VSS — pull the all-zero dummy row so the tile batch is never
+    # empty (it contributes nothing, like the compactor's dummy padding)
+    Q = jnp.arange(max(p.num_vss, 1), dtype=jnp.int32)
+    masks = dev.masks[Q]
+    sets = dev.virtual_to_real[Q]
+    rows = dev.row_ids[Q].reshape(-1)                    # dummy = n
+    deg = jnp.zeros((ncols,), jnp.float32).at[:n].set(jnp.asarray(outdeg))
+    valid = jnp.arange(ncols) < n
+    dangling = valid & (deg == 0.0)
+    d = jnp.float32(damping)
+    base = jnp.float32((1.0 - damping) / n)
+
+    def step(r: jnp.ndarray) -> jnp.ndarray:
+        x = jnp.where(deg > 0, r / deg, 0.0)             # (ncols,)
+        y = bvss_spmm_w_local(masks, sets, x[:, None], sigma=sigma,
+                              impl=impl)
+        acc = jnp.zeros((ncols, 1), jnp.float32).at[rows].add(
+            y.reshape(-1, 1), mode="drop")[:, 0]
+        dm = jnp.sum(jnp.where(dangling, r, 0.0))
+        return jnp.where(valid, base + d * (acc + dm / n), 0.0)
+
+    def pagerank() -> jnp.ndarray:
+        r0 = jnp.where(valid, jnp.float32(1.0 / n), 0.0)
+
+        def body(carry):
+            r, _, it = carry
+            r2 = step(r)
+            return r2, jnp.sum(jnp.abs(r2 - r)), it + 1
+
+        r, _, _ = jax.lax.while_loop(
+            lambda c: (c[1] > tol) & (c[2] < max_iter),
+            body, (r0, jnp.float32(jnp.inf), jnp.int32(0)))
+        return r[:n]
+
+    return jax.jit(pagerank)
+
+
+def _make_pagerank_sharded(p: BlestProblem, outdeg: np.ndarray, *,
+                           use_kernel: bool, damping: float, tol: float,
+                           max_iter: int) -> Callable:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.bvss import ShardedBVSSDevice
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    n, sigma = p.n, p.sigma
+    rps = p.rows_per_shard
+    D = p.n_shards
+    impl = None if use_kernel else bvss_spmm_w_ref
+    dfac = jnp.float32(damping)
+    base = jnp.float32((1.0 - damping) / n)
+    # out-degrees blocked by the row partition, one (rps,) block per shard
+    deg_blocks = np.zeros((D, rps), np.float32)
+    deg_blocks.reshape(-1)[:n] = np.asarray(outdeg, np.float32)
+
+    def local_loop(masks, row_ids, v2r, vstart, vend, degb):
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                vstart[0], vend[0])
+        deg = degb[0]                                    # (rps,) local
+        Q = jnp.arange(max(p.num_vss, 1), dtype=jnp.int32)
+        qmasks = dev.masks[Q]
+        sets = dev.virtual_to_real[Q]
+        rows = dev.row_ids[Q].reshape(-1)                # LOCAL, dummy=rps
+        didx = jax.lax.axis_index(axis)
+        lvalid = (didx * rps + jnp.arange(rps)) < n
+        dangling = lvalid & (deg == 0.0)
+
+        def step(r: jnp.ndarray) -> jnp.ndarray:
+            # the float twin of the frontier-word gather: every shard
+            # pulls from the GLOBAL contribution vector
+            xv = jnp.where(deg > 0, r / deg, 0.0)        # (rps,) local
+            xg = jax.lax.all_gather(xv, axis, tiled=True)  # (D·rps,)
+            y = bvss_spmm_w_local(qmasks, sets, xg[:, None], sigma=sigma,
+                                  impl=impl)
+            acc = jnp.zeros((rps + 1, 1), jnp.float32).at[rows].add(
+                y.reshape(-1, 1), mode="drop")[:rps, 0]
+            dm = jax.lax.psum(jnp.sum(jnp.where(dangling, r, 0.0)), axis)
+            return jnp.where(lvalid, base + dfac * (acc + dm / n), 0.0)
+
+        def body(carry):
+            r, _, it = carry
+            r2 = step(r)
+            resid = jax.lax.psum(jnp.sum(jnp.abs(r2 - r)), axis)
+            return r2, resid, it + 1
+
+        r0 = jnp.where(lvalid, jnp.float32(1.0 / n), 0.0)
+        r, _, _ = jax.lax.while_loop(
+            lambda c: (c[1] > tol) & (c[2] < max_iter),
+            body, (r0, jnp.float32(jnp.inf), jnp.int32(0)))
+        return r[None, :]
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(axis),),
+                   out_specs=P(axis), check_rep=False)
+
+    def pagerank() -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
+                 jnp.asarray(deg_blocks))
+        return out.reshape(-1)[:n]
+
+    return jax.jit(pagerank)
+
+
+def pagerank_scores(g: Graph | None = None, *,
+                    problem: BlestProblem | None = None,
+                    outdeg: np.ndarray | None = None,
+                    use_kernel: bool = True, damping: float = DAMPING,
+                    tol: float = TOL, max_iter: int = MAX_ITER,
+                    pagerank_fn: Callable | None = None) -> np.ndarray:
+    """PageRank scores (n,) float64 summing to 1, ids the problem's own.
+    ``pagerank_fn`` is an optional prebuilt engine (sessions pass their
+    cached one)."""
+    if pagerank_fn is None:
+        if problem is None:
+            from repro.core.bvss import build_bvss
+            if g is None:
+                raise ValueError("need one of g / problem / pagerank_fn")
+            problem = BlestProblem.build(build_bvss(g))
+        if outdeg is None:
+            if g is None:
+                raise ValueError("pagerank needs out-degrees: pass g or "
+                                 "outdeg")
+            outdeg = out_degrees(g)
+        pagerank_fn = make_pagerank(problem, outdeg, use_kernel=use_kernel,
+                                    damping=damping, tol=tol,
+                                    max_iter=max_iter)
+    return np.asarray(pagerank_fn()).astype(np.float64)

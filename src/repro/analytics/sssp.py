@@ -1,0 +1,303 @@
+"""Delta-stepping single-source shortest paths on the wave surface
+(DESIGN §2.9).
+
+SSSP is the tropical-semiring instance of the wave machinery: swap the
+Boolean pull tile for the min-plus product ``bvss_spmm_minplus`` (SlimSell's
+algebraic formulation) and BFS levels become weighted distances.  The
+driver is a bucketed label-correcting loop — batched delta-stepping:
+
+* the OUTER loop owns a per-column bucket top ``btop``; every vertex with
+  a settled distance below ``btop`` is final (positive weights: any
+  shorter path runs entirely through already-settled vertices);
+* the INNER loop relaxes the current bucket to a fixpoint: the frontier
+  (vertices whose distance improved and sits below ``btop``) is compacted
+  set-wise through the SAME ``make_compactor`` queue the BFS engines use,
+  pulled through the min-plus tiles against the weight plane, and
+  scatter-``min``'d into the distance vector;
+* the bucket advance jumps ``btop`` to the bucket holding the smallest
+  unsettled distance — empty buckets cost nothing, so the classic Δ
+  trade-off (bucket width vs relaxation rounds) only shapes performance,
+  never correctness.
+
+Both loops fuse into ONE jitted ``while_loop`` nest per cohort of S
+sources (S stacked distance columns through one tile stream).  A
+row-sharded problem runs the identical loop under ``shard_map``: local
+rows scatter locally, the frontier's distance values all-gather per
+relaxation (the float twin of the frontier-word gather, hoisted out of
+the width ``cond``), and continuation / bucket minima reduce with
+``psum`` / ``pmin`` so every shard stays in lock-step.  A 2-D problem is
+a typed :class:`~repro.errors.ConfigError` (the weighted verbs ship 1-D;
+DESIGN §2.9).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics.common import pad_cohort
+from repro.core.bfs import (BlestProblem, make_compactor, queue_widths,
+                            select_width)
+from repro.errors import ConfigError
+from repro.kernels import bvss_spmm_minplus_local
+from repro.kernels.ref import bvss_spmm_minplus_ref
+
+
+def default_delta(weights: np.ndarray) -> float:
+    """Bucket width heuristic: the mean edge weight (classic delta-stepping
+    uses Δ ≈ mean weight for random weights; correctness never depends on
+    the choice — see the module docstring)."""
+    w = np.asarray(weights, dtype=np.float64)
+    return float(w.mean()) if w.size else 1.0
+
+
+def _next_btop(rem: jnp.ndarray, btop: jnp.ndarray,
+               delta: jnp.ndarray) -> jnp.ndarray:
+    """Advance each column's bucket top past its smallest unsettled
+    distance ``rem`` (jumping empty buckets); columns with no unsettled
+    vertex (rem = +inf) keep their top.  ``nextafter`` guards the
+    floating-point edge where the bucket formula lands exactly ON ``rem``
+    (Δ much smaller than the distance scale) — the top must STRICTLY
+    exceed ``rem`` or the frontier goes empty without progress."""
+    nbt = (jnp.floor(rem / delta) + 1.0) * delta
+    nbt = jnp.maximum(nbt, jnp.nextafter(rem, jnp.inf))
+    return jnp.where(jnp.isfinite(rem), nbt, btop)
+
+
+def make_sssp(problem: BlestProblem, wplane: jnp.ndarray, n_sources: int, *,
+              use_kernel: bool = True, buckets: int = 2,
+              max_rounds: int | None = None) -> Callable:
+    """Build jitted ``f(sources (S,) i32, delta () f32) -> dist (n, S) f32``
+    over ``problem`` (ids are the problem's own).  ``wplane`` is the
+    device weight plane ``prepare(..., weights=...)`` committed
+    (``PreparedBFS.wplane``); its dummy row makes padded queue entries
+    relax nothing.  Single-device and 1-D row-sharded; 2-D raises
+    :class:`~repro.errors.ConfigError`."""
+    if wplane is None:
+        raise ConfigError(
+            "sssp needs a weight plane: prepare(..., weights=...) or let "
+            "GraphSession default to unit weights")
+    if problem.mesh is not None:
+        if problem.is_2d:
+            raise ConfigError(
+                "sssp is not supported on a 2-D (row × column) mesh yet — "
+                "the weighted verbs ship 1-D row-sharded (DESIGN §2.9)")
+        return _make_sssp_sharded(problem, wplane, n_sources,
+                                  use_kernel=use_kernel, buckets=buckets,
+                                  max_rounds=max_rounds)
+    return _make_sssp_single(problem, wplane, n_sources,
+                             use_kernel=use_kernel, buckets=buckets,
+                             max_rounds=max_rounds)
+
+
+def _make_sssp_single(p: BlestProblem, wplane: jnp.ndarray, n_sources: int,
+                      *, use_kernel: bool, buckets: int,
+                      max_rounds: int | None) -> Callable:
+    dev = p.dev
+    n, sigma, n_sets = p.n, p.sigma, p.n_sets
+    S = n_sources
+    ncols = n_sets * sigma
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    compact = make_compactor(dev, p.num_vss, qcap)
+    impl = None if use_kernel else bvss_spmm_minplus_ref
+    valid = jnp.arange(ncols) < n                        # padding columns
+    cap = max_rounds if max_rounds is not None else n + 2
+
+    def relax(dist: jnp.ndarray, fr: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """One frontier relaxation: compacted min-plus pull + scatter-min.
+        Returns (new dist, improved mask)."""
+        set_active = fr.reshape(n_sets, sigma, S).any(axis=(1, 2))
+        Q, count = compact(set_active)
+        xg = jnp.where(fr, dist, jnp.inf)                # (ncols, S)
+
+        def pull(w: int) -> jnp.ndarray:
+            ids = jax.lax.slice_in_dim(Q, 0, w)
+            y = bvss_spmm_minplus_local(
+                dev.masks[ids], wplane[ids], dev.virtual_to_real[ids], xg,
+                sigma=sigma, impl=impl)
+            rows = dev.row_ids[ids].reshape(-1)          # dummy = n
+            return dist.at[rows].min(y.reshape(-1, S))
+
+        d2 = select_width(widths, count, pull)
+        # dummy-row scatters may land in padding columns (row n < ncols):
+        # wipe them so the padding never re-enters a gather as a distance
+        d2 = jnp.where(valid[:, None], d2, jnp.inf)
+        return d2, d2 < dist
+
+    def sssp(sources: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+        cols = jnp.arange(S)
+        dist = jnp.full((ncols, S), jnp.inf, jnp.float32)
+        dist = dist.at[sources, cols].set(0.0)
+        fr = jnp.zeros((ncols, S), bool).at[sources, cols].set(True)
+        btop = jnp.broadcast_to(delta.astype(jnp.float32), (S,))
+
+        def outer_body(carry):
+            dist, fr, btop, rounds = carry
+
+            def inner(c):
+                dist, fr, it = c
+                d2, improved = relax(dist, fr)
+                return d2, improved & (d2 < btop[None, :]), it + 1
+
+            dist, fr, _ = jax.lax.while_loop(
+                lambda c: c[1].any() & (c[2] < cap),
+                inner, (dist, fr, jnp.int32(0)))
+            unsettled = jnp.where(valid[:, None] & (dist >= btop[None, :]),
+                                  dist, jnp.inf)
+            rem = jnp.min(unsettled, axis=0)             # (S,)
+            nbt = _next_btop(rem, btop, delta.astype(jnp.float32))
+            fr = (valid[:, None] & (dist >= btop[None, :])
+                  & (dist < nbt[None, :]))
+            return dist, fr, nbt, rounds + 1
+
+        dist, _, _, _ = jax.lax.while_loop(
+            lambda c: c[1].any() & (c[3] < cap),
+            outer_body, (dist, fr, btop, jnp.int32(0)))
+        return dist[:n]
+
+    return jax.jit(sssp)
+
+
+def _make_sssp_sharded(p: BlestProblem, wplane: jnp.ndarray, n_sources: int,
+                      *, use_kernel: bool, buckets: int,
+                      max_rounds: int | None) -> Callable:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.bvss import ShardedBVSSDevice
+    from repro.core.level_pipeline import global_any
+    from repro.distributed.bfs_dist import problem_specs
+
+    mesh, axis = p.mesh, p.axis
+    n, sigma, n_sets = p.n, p.sigma, p.n_sets
+    rps = p.rows_per_shard
+    S = n_sources
+    ncols = n_sets * sigma
+    widths = queue_widths(p.num_vss, buckets)
+    qcap = widths[-1]
+    impl = None if use_kernel else bvss_spmm_minplus_ref
+    cap = max_rounds if max_rounds is not None else n + 2
+
+    def local_loop(masks, row_ids, v2r, vstart, vend, wpl, sources, delta):
+        dev = ShardedBVSSDevice(masks[0], row_ids[0], v2r[0],
+                                vstart[0], vend[0])
+        wp = wpl[0]
+        compact = make_compactor(dev, p.num_vss, qcap)
+        d = jax.lax.axis_index(axis)
+        lvalid = (d * rps + jnp.arange(rps)) < n         # real local rows
+        rowmask = jnp.concatenate([lvalid, jnp.zeros((1,), bool)])
+        delta32 = delta.astype(jnp.float32)
+
+        def relax(dist: jnp.ndarray, fr: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+            # the float twin of the frontier-word gather: every shard
+            # needs the frontier's distance VALUES for its global columns
+            # — all-gathered BEFORE the width cond (no collectives in
+            # device-varying branches)
+            xv = jnp.where(fr, dist[:rps], jnp.inf)      # (rps, S)
+            xg = jax.lax.all_gather(xv, axis, tiled=True)  # (D·rps, S)
+            set_active = (xg[:ncols].reshape(n_sets, sigma, S)
+                          < jnp.inf).any(axis=(1, 2))
+            Q, count = compact(set_active)
+
+            def pull(w: int) -> jnp.ndarray:
+                ids = jax.lax.slice_in_dim(Q, 0, w)
+                y = bvss_spmm_minplus_local(
+                    dev.masks[ids], wp[ids], dev.virtual_to_real[ids], xg,
+                    sigma=sigma, impl=impl)
+                rows = dev.row_ids[ids].reshape(-1)      # LOCAL, dummy=rps
+                return dist.at[rows].min(y.reshape(-1, S))
+
+            d2 = select_width(widths, count, pull)
+            d2 = jnp.where(rowmask[:, None], d2, jnp.inf)
+            return d2, d2 < dist
+
+        def sssp_local(sources: jnp.ndarray) -> jnp.ndarray:
+            cols = jnp.arange(S)
+            lsrc = sources - d * rps
+            own = (lsrc >= 0) & (lsrc < rps)
+            dist = jnp.full((rps + 1, S), jnp.inf, jnp.float32)
+            dist = dist.at[jnp.where(own, lsrc, rps), cols].set(
+                jnp.where(own, 0.0, jnp.inf))
+            fr = jnp.zeros((rps, S), bool).at[
+                jnp.where(own, lsrc, 0), cols].set(own)
+            btop = jnp.broadcast_to(delta32, (S,))
+
+            # the repo's lock-step idiom: while_loop conds read a CARRIED
+            # replicated cont flag; the global_any reduction runs in the
+            # body (never in a cond)
+            def outer_body(carry):
+                dist, fr, btop, cont, rounds = carry
+
+                def inner(c):
+                    dist, fr, cont, it = c
+                    d2, improved = relax(dist, fr)
+                    fr2 = improved[:rps] & (d2[:rps] < btop[None, :])
+                    return (d2, fr2, global_any(fr2.any(), axis), it + 1)
+
+                dist, fr, _, _ = jax.lax.while_loop(
+                    lambda c: c[2] & (c[3] < cap),
+                    inner, (dist, fr, global_any(fr.any(), axis),
+                            jnp.int32(0)))
+                unsettled = jnp.where(
+                    lvalid[:, None] & (dist[:rps] >= btop[None, :]),
+                    dist[:rps], jnp.inf)
+                rem = jax.lax.pmin(jnp.min(unsettled, axis=0), axis)
+                nbt = _next_btop(rem, btop, delta32)
+                fr = (lvalid[:, None] & (dist[:rps] >= btop[None, :])
+                      & (dist[:rps] < nbt[None, :]))
+                return (dist, fr, nbt, global_any(fr.any(), axis),
+                        rounds + 1)
+
+            dist, _, _, _, _ = jax.lax.while_loop(
+                lambda c: c[3] & (c[4] < cap),
+                outer_body, (dist, fr, btop, global_any(fr.any(), axis),
+                             jnp.int32(0)))
+            return dist[None, :rps]
+
+        return sssp_local(sources)
+
+    fn = shard_map(local_loop, mesh=mesh,
+                   in_specs=problem_specs(axis) + (P(axis), P(), P()),
+                   out_specs=P(axis), check_rep=False)
+
+    def sssp(sources: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+        out = fn(p.dev.masks, p.dev.row_ids, p.dev.virtual_to_real,
+                 p.dev.vss_of_vertex_start, p.dev.vss_of_vertex_end,
+                 wplane, jnp.asarray(sources, jnp.int32),
+                 jnp.asarray(delta, jnp.float32))
+        return out.reshape(-1, S)[:p.n]
+
+    return jax.jit(sssp)
+
+
+def sssp_distances(sources: Sequence[int] | np.ndarray, *,
+                   problem: BlestProblem, wplane: jnp.ndarray,
+                   weights: np.ndarray, batch: int | None = None,
+                   use_kernel: bool = True,
+                   delta: float | None = None,
+                   sssp_fn: Callable | None = None) -> np.ndarray:
+    """Distances from each source (rows) to every vertex (cols): (S, n)
+    float64, +inf where unreachable.  Ids are the problem's own.
+    ``sssp_fn`` is an optional prebuilt engine of width ``batch``
+    (sessions pass their cached one)."""
+    sources = np.asarray(sources, dtype=np.int64)
+    if len(sources) == 0:
+        return np.zeros((0, problem.n), dtype=np.float64)
+    S = batch if batch is not None else min(8, len(sources))
+    if delta is None:
+        delta = default_delta(weights)
+    if sssp_fn is None:
+        sssp_fn = make_sssp(problem, wplane, S, use_kernel=use_kernel)
+    out = np.empty((len(sources), problem.n), dtype=np.float64)
+    for lo in range(0, len(sources), S):
+        chunk = sources[lo:lo + S]
+        dist = np.asarray(sssp_fn(
+            jnp.asarray(pad_cohort(chunk, S), dtype=jnp.int32),
+            jnp.float32(delta)))
+        out[lo:lo + len(chunk)] = dist.T[:len(chunk)]
+    return out

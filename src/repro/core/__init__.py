@@ -1,10 +1,12 @@
 from .bvss import (BVSS, BVSSDevice, ShardedBVSS, build_bvss,
-                   build_sharded_bvss, to_device)
+                   build_sharded_bvss, build_sharded_weight_plane,
+                   build_weight_plane, to_device, weight_plane_to_device)
 from .bfs import (BlestProblem, ENGINES, INF, make_engine, reference_bfs,
                   pull_vss_jnp)
 from . import ordering
 
 __all__ = ["BVSS", "BVSSDevice", "ShardedBVSS", "build_bvss",
-           "build_sharded_bvss", "to_device", "BlestProblem", "ENGINES",
-           "INF", "make_engine", "reference_bfs", "pull_vss_jnp",
-           "ordering"]
+           "build_sharded_bvss", "build_sharded_weight_plane",
+           "build_weight_plane", "to_device", "weight_plane_to_device",
+           "BlestProblem", "ENGINES", "INF", "make_engine", "reference_bfs",
+           "pull_vss_jnp", "ordering"]

@@ -192,6 +192,123 @@ def build_bvss(g: Graph, sigma: int = 8) -> BVSS:
 
 
 # ---------------------------------------------------------------------------
+# Weight plane: per-edge float weights aligned with the bit slices
+# (the min-plus / weighted-verb operand, DESIGN §2.9)
+# ---------------------------------------------------------------------------
+def build_weight_plane(g: Graph, weights: np.ndarray,
+                       sigma: int = 8) -> np.ndarray:
+    """Lay per-edge weights out exactly like the BVSS mask bits.
+
+    ``weights`` is one float per CSR edge of ``g`` (``g.indices`` order).
+    Returns a (num_vss, 32//σ, LANES, σ) float32 plane where entry
+    ``[v, slot, lane, i]`` is the weight of the edge encoded by bit σ·slot+i
+    of ``masks[v, lane]`` — i.e. the same (slot, lane) slice placement
+    :func:`build_bvss` computes — and +inf wherever that bit is unset (the
+    tropical-semiring annihilator, so masked and missing edges agree).
+    Parallel edges (if any survive ingress) keep the minimum weight.
+    """
+    if not (1 <= sigma <= 32 and 32 % sigma == 0):
+        raise GraphValidationError(
+            f"sigma must be a divisor of 32 in [1, 32], got {sigma!r}")
+    spw = 32 // sigma
+    tau = LANES * spw
+    n = g.n
+    n_sets = (n + sigma - 1) // sigma
+
+    t_indptr, t_indices = g.t_csr
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(t_indptr))
+    cols = t_indices.astype(np.int64)
+    # t_csr edge j is original CSR edge argsort(indices)[j] (stable sort by
+    # destination) — permute the weights into the same transposed order
+    w_t = np.asarray(weights, dtype=np.float32)[
+        np.argsort(g.indices, kind="stable")]
+    interval = cols // sigma
+    bit = (cols % sigma).astype(np.int64)
+
+    # identical slice placement to build_bvss
+    keys = interval * n + rows
+    ukeys, inverse = np.unique(keys, return_inverse=True)
+    num_slices = len(ukeys)
+    slice_interval = (ukeys // n).astype(np.int64)
+    set_counts = np.bincount(slice_interval, minlength=n_sets)
+    vss_counts = (set_counts + tau - 1) // tau
+    real_ptrs = np.zeros(n_sets + 1, dtype=np.int64)
+    real_ptrs[1:] = np.cumsum(vss_counts)
+    num_vss = int(real_ptrs[-1])
+    set_starts = np.zeros(n_sets + 1, dtype=np.int64)
+    np.cumsum(set_counts, out=set_starts[1:])
+    local = np.arange(num_slices, dtype=np.int64) - set_starts[slice_interval]
+    vss = real_ptrs[slice_interval] + local // tau
+    k = local % tau
+    lane = k % LANES
+    slot = k // LANES
+
+    plane = np.full((num_vss, spw, LANES, sigma), np.inf, dtype=np.float32)
+    np.minimum.at(plane, (vss[inverse], slot[inverse], lane[inverse], bit),
+                  w_t)
+    return plane
+
+
+def build_sharded_weight_plane(g: Graph, weights: np.ndarray,
+                               sb: ShardedBVSS) -> np.ndarray:
+    """Row-sharded twin of :func:`build_weight_plane`: one weight plane per
+    shard of ``sb``, built over the same destination-range subgraphs
+    :func:`build_sharded_bvss` committed (so slice placement matches the
+    sharded masks bit for bit), padded to the common VSS count with +inf.
+    Returns (D, num_vss_pad, 32//σ, LANES, σ) float32."""
+    from repro.graphs import from_edges, src_of_edges
+
+    n = g.n
+    sigma = sb.sigma
+    spw = sb.slices_per_word
+    src = src_of_edges(g).astype(np.int64)
+    dst = g.indices.astype(np.int64)
+    w = np.asarray(weights, dtype=np.float32)
+    D, rps = sb.n_shards, sb.rows_per_shard
+    plane = np.full((D, sb.num_vss_pad, spw, LANES, sigma), np.inf,
+                    dtype=np.float32)
+    for d in range(D):
+        lo, hi = d * rps, min((d + 1) * rps, n)
+        keep = (dst >= lo) & (dst < hi)
+        if not keep.any():
+            continue
+        # from_edges(dedup=True) emits edges in ascending (src·n + dst)
+        # key order — reduce the kept weights into that order (min merges
+        # parallel edges exactly like the mask OR does)
+        key = src[keep] * n + (dst[keep] - lo)
+        uk, inv = np.unique(key, return_inverse=True)
+        wsub = np.full(len(uk), np.inf, dtype=np.float32)
+        np.minimum.at(wsub, inv, w[keep])
+        sub = from_edges(n, src[keep], dst[keep] - lo,
+                         dedup=True, drop_loops=False)
+        pd = build_weight_plane(sub, wsub, sigma=sigma)
+        plane[d, :pd.shape[0]] = pd
+    return plane
+
+
+def weight_plane_to_device(plane: np.ndarray, mesh=None, axis: str = "data"):
+    """Commit a weight plane to device, appending the +inf dummy-VSS row
+    that mirrors the all-zero dummy mask row ``to_device`` /
+    ``shard_to_device`` append (padded queue entries relax nothing)."""
+    import jax
+    import jax.numpy as jnp
+
+    if plane.ndim == 4:                       # single device: (V, spw, L, σ)
+        full = np.concatenate(
+            [plane, np.full((1,) + plane.shape[1:], np.inf, np.float32)],
+            axis=0)
+        return jnp.asarray(full)
+    D = plane.shape[0]                        # sharded: (D, V, spw, L, σ)
+    full = np.concatenate(
+        [plane, np.full((D, 1) + plane.shape[2:], np.inf, np.float32)],
+        axis=1)
+    if mesh is not None:
+        from repro.distributed.bfs_dist import problem_sharding
+        return jax.device_put(full, problem_sharding(mesh, axis))
+    return jnp.asarray(full)
+
+
+# ---------------------------------------------------------------------------
 # Row-sharded BVSS (mesh-native build path, DESIGN §2.4)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

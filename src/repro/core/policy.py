@@ -28,9 +28,11 @@ from jax.sharding import Mesh
 
 from repro.core.autotune import TileConfig
 from repro.core.bfs import BlestProblem, make_engine
-from repro.core.bvss import BVSS, build_bvss, build_sharded_bvss
+from repro.core.bvss import (BVSS, build_bvss, build_sharded_bvss,
+                             build_sharded_weight_plane, build_weight_plane,
+                             weight_plane_to_device)
 from repro.core.ordering import auto_order
-from repro.errors import BlestError, check_source
+from repro.errors import BlestError, ConfigError, check_source, check_weights
 from repro.graphs import Graph
 
 # paper §5: fixed threshold for switching to lazy vertex updates
@@ -54,6 +56,11 @@ class PreparedBFS:
     update_divergence: float
     # mesh the problem is row-sharded over; None = single-device
     mesh: Mesh | None = None
+    # per-edge weights in the REORDERED graph's CSR edge order (float32)
+    # and their device-committed weight plane (DESIGN §2.9: the min-plus /
+    # weighted-verb operand, +inf dummy row appended); None = unweighted
+    weights: np.ndarray | None = None
+    wplane: "object | None" = None
     # winning hybrid knobs when prepared with autotune=True (DESIGN §2.8);
     # None = defaults were used.  ``tile_config.source == "cached"`` means
     # this prepare() re-used an earlier measurement (zero tuning
@@ -110,8 +117,8 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             engine: str | None = None, use_kernels: bool = True,
             buckets: int = 2, direction: str = "auto",
             autotune: bool = False, push_impl: Callable | None = None,
-            mesh: Mesh | None = None,
-            mesh_axis: str = "data") -> PreparedBFS:
+            mesh: Mesh | None = None, mesh_axis: str = "data",
+            weights=None) -> PreparedBFS:
     """The full static pipeline: (optionally) order, build the BVSS, pick
     the update scheme (or honour an explicit ``engine`` override, e.g. the
     Table-2 ablation variants), build the fused engine.
@@ -130,7 +137,14 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
     ``mesh`` row-shards the problem over ``mesh_axis`` and builds the
     mesh-native engine (DESIGN §2.4): the policy decisions (ordering,
     update scheme) still come from the global BVSS, the level loop runs
-    under ``shard_map``.  This is the ONE sharded-prep entry point."""
+    under ``shard_map``.  This is the ONE sharded-prep entry point.
+
+    ``weights`` (one float per CSR edge of ``g``, validated strictly
+    positive) threads an edge-weight plane through the whole pipeline
+    (DESIGN §2.9): the weights ride the ordering permutation alongside the
+    edges and land device-side in the BVSS slice layout
+    (``PreparedBFS.wplane``), ready for the min-plus / weighted verbs."""
+    w_arr = None if weights is None else check_weights(weights, g.m)
     if order:
         perm, kind = auto_order(g, sigma=sigma, w=w, seed=seed)
         g_ord = g.permute_fast(perm)
@@ -139,22 +153,54 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
         g_ord = g
     inv = np.empty(g.n, dtype=np.int64)
     inv[perm] = np.arange(g.n)
+    w_ord = None
+    if w_arr is not None:
+        if order:
+            # permute_fast re-sorts the relabelled edges by (src·n + dst)
+            # key; simple-graph keys are unique, so a stable argsort maps
+            # each ordered edge back to its original weight
+            from repro.graphs import src_of_edges
+            keys = (perm[src_of_edges(g)] * np.int64(g.n)
+                    + perm[g.indices.astype(np.int64)])
+            w_ord = w_arr[np.argsort(keys, kind="stable")]
+        else:
+            w_ord = w_arr
     bvss = build_bvss(g_ord, sigma=sigma)
     engine_name = engine if engine is not None else \
         choose_update_scheme(bvss, threshold=lazy_threshold)
+    wplane = None
     if mesh is not None:
         if engine_name not in BVSS_ENGINES:
             raise ValueError(
                 f"mesh-native prepare supports the BVSS engines "
                 f"{BVSS_ENGINES}, not {engine_name!r} (the CSR/dense "
                 f"baselines have no row-sharded representation)")
-        problem = build_problem(g_ord, sigma=sigma, mesh=mesh,
-                                mesh_axis=mesh_axis)
+        from repro.distributed.bfs_dist import mesh_is_2d
+        if w_ord is not None and mesh_is_2d(mesh):
+            raise ConfigError(
+                "edge weights are not supported on a 2-D (row × column) "
+                "mesh yet — the weighted verbs ship 1-D row-sharded "
+                "(DESIGN §2.9); use a 1-D mesh or a single device")
+        if w_ord is not None:
+            # build the sharded BVSS once and derive both the problem and
+            # the aligned per-shard weight planes from it
+            sb = build_sharded_bvss(g_ord, mesh.shape[mesh_axis],
+                                    sigma=sigma)
+            problem = BlestProblem.build_sharded(sb, mesh, mesh_axis)
+            wplane = weight_plane_to_device(
+                build_sharded_weight_plane(g_ord, w_ord, sb), mesh,
+                mesh_axis)
+        else:
+            problem = build_problem(g_ord, sigma=sigma, mesh=mesh,
+                                    mesh_axis=mesh_axis)
     else:
         # only BVSS-consuming single-source engines need the device upload;
         # the host bvss alone backs the stats printouts and the policy
         problem = BlestProblem.build(bvss) if engine_name in BVSS_ENGINES \
             else None
+        if w_ord is not None:
+            wplane = weight_plane_to_device(
+                build_weight_plane(g_ord, w_ord, sigma=sigma))
     tile_config: TileConfig | None = None
     tuned_kwargs: dict = {}
     if autotune and engine_name in BVSS_ENGINES and problem is not None:
@@ -168,7 +214,8 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
     return PreparedBFS(graph=g_ord, perm=perm, inv=inv, ordering=kind,
                        engine_name=engine_name, bvss=bvss, problem=problem,
                        update_divergence=bvss.update_divergence(),
-                       mesh=mesh, tile_config=tile_config, _fn=fn)
+                       mesh=mesh, weights=w_ord, wplane=wplane,
+                       tile_config=tile_config, _fn=fn)
 
 
 def parents_from_levels(g: Graph, levels: np.ndarray) -> np.ndarray:

@@ -115,3 +115,47 @@ def check_sources(sources, n: int, *, what: str = "sources") -> list[int]:
             f"{type(sources).__name__}") from e
     return [check_source(s, n, what=f"{what}[{i}]")
             for i, s in enumerate(items)]
+
+
+def check_weights(weights, m: int, *, what: str = "weights") -> np.ndarray:
+    """Validate a per-edge weight vector for the weighted verbs (SSSP /
+    weighted PageRank) and return it as float32 (m,).
+
+    Rejects a shape that does not match the edge count, non-numeric or
+    bool dtypes, NaN / ±inf entries, and NON-POSITIVE weights — zero is
+    rejected along with negatives because delta-stepping's bucket
+    invariant (and termination of the label-correcting inner loop on
+    cycles) requires strictly positive edge lengths.
+    """
+    try:
+        arr = np.asarray(weights)
+    except Exception as e:  # ragged lists etc.
+        raise GraphValidationError(
+            f"{what} must be a numeric array of per-edge weights, got "
+            f"{type(weights).__name__}") from e
+    if arr.dtype == np.bool_ or arr.dtype == object or \
+            not np.issubdtype(arr.dtype, np.number):
+        raise GraphValidationError(
+            f"{what} must have a real numeric dtype, got {arr.dtype}")
+    if arr.shape != (m,):
+        raise GraphValidationError(
+            f"{what} must have shape ({m},) — one weight per CSR edge — "
+            f"got shape {arr.shape}")
+    arr = arr.astype(np.float32)
+    if arr.size:
+        if np.isnan(arr).any():
+            raise GraphValidationError(
+                f"{what} contain NaN at edges "
+                f"{np.flatnonzero(np.isnan(arr))[:8].tolist()}")
+        if np.isinf(arr).any():
+            raise GraphValidationError(
+                f"{what} contain non-finite entries at edges "
+                f"{np.flatnonzero(np.isinf(arr))[:8].tolist()} (+inf is "
+                f"reserved for the no-edge sentinel in the weight plane)")
+        if (arr <= 0).any():
+            bad = np.flatnonzero(arr <= 0)
+            raise GraphValidationError(
+                f"{what} must be strictly positive (delta-stepping bucket "
+                f"invariant); edges {bad[:8].tolist()} have values "
+                f"{arr[bad[:8]].tolist()}")
+    return arr

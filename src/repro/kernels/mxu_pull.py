@@ -347,6 +347,116 @@ def bvss_spmm_w_local(masks: jnp.ndarray, sets: jnp.ndarray,
     return f(masks, xglobal[cols], sigma=sigma)
 
 
+# ---------------------------------------------------------------------------
+# min-plus BVSS tiles: the tropical semiring (SSSP relaxation, DESIGN §2.9)
+# ---------------------------------------------------------------------------
+def _bvss_spmm_minplus_kernel(masks_ref, wv_ref, xv_ref, y_ref, *,
+                              sigma: int):
+    """masks_ref (TB, 32) u32; wv_ref (TB, τ, σ) f32 edge weights (+inf on
+    non-edges is also enforced here via the mask bits); xv_ref (TB, σ, TS)
+    f32 per-column distances; y_ref (TB, τ, TS) f32 tropical product
+
+        y[b, k, s] = min_i ( w[b, k, i] + x[b, i, s] )   over set bits i.
+
+    σ is tiny (≤32), so the contraction is an unrolled elementwise min —
+    no dot_general exists for (min, +), and with +inf as the annihilator
+    the expression never forms inf − inf, so no NaNs leak out."""
+    a = _unpack_slice_tile(masks_ref[...], sigma)            # (TB, τ, σ)
+    w = wv_ref[...]
+    x = xv_ref[...]
+    inf = jnp.float32(jnp.inf)
+    acc = jnp.full(y_ref.shape, inf, dtype=jnp.float32)
+    for i in range(sigma):
+        wi = jnp.where(a[:, :, i] > 0, w[:, :, i], inf)      # (TB, τ)
+        acc = jnp.minimum(acc, wi[:, :, None] + x[:, i, None, :])
+    y_ref[...] = acc
+
+
+def _spmm_minplus_call(masks, wvals, xvals, *, sigma: int,
+                       tile_b: int | None, tile_s: int | None,
+                       interpret: bool | None):
+    """pallas_call plumbing for the three-operand tropical tile product:
+    the `_spmm_float_call` layout plus a (B, τ, σ) weight plane operand."""
+    from repro.kernels.ops import resolve_interpret
+    interpret = resolve_interpret(interpret)
+    B, S = masks.shape[0], xvals.shape[2]
+    tau = (32 // sigma) * 32
+    if tile_b is None:
+        tile_b = 128 if interpret else 8
+    if tile_s is None:
+        tile_s = min(128, ((S + 7) // 8) * 8)
+    pb, ps = (-B) % tile_b, (-S) % tile_s
+    if pb:
+        masks = jnp.pad(masks, ((0, pb), (0, 0)))
+        wvals = jnp.pad(wvals, ((0, pb), (0, 0), (0, 0)))
+        xvals = jnp.pad(xvals, ((0, pb), (0, 0), (0, 0)))
+    if ps:
+        xvals = jnp.pad(xvals, ((0, 0), (0, 0), (0, ps)))
+    Bp, Sp = B + pb, S + ps
+    grid = (Bp // tile_b, Sp // tile_s)
+    y = pl.pallas_call(
+        functools.partial(_bvss_spmm_minplus_kernel, sigma=sigma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 32), lambda b, s: (b, 0)),
+            pl.BlockSpec((tile_b, tau, sigma), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((tile_b, sigma, tile_s), lambda b, s: (b, 0, s)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, tau, tile_s),
+                               lambda b, s: (b, 0, s)),
+        out_shape=jax.ShapeDtypeStruct((Bp, tau, Sp), jnp.float32),
+        interpret=interpret,
+    )(masks, wvals, xvals)
+    return y[:B, :, :S]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "tile_b", "tile_s",
+                                             "interpret"))
+def bvss_spmm_minplus(masks: jnp.ndarray, wvals: jnp.ndarray,
+                      xvals: jnp.ndarray, *, sigma: int = 8,
+                      tile_b: int | None = None, tile_s: int | None = None,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Tropical (min, +) BVSS pull: the SSSP relaxation tile (DESIGN §2.9).
+
+    masks: (B, 32) uint32 queued VSS mask rows.
+    wvals: (B, spw, 32, σ) float32 — the weight plane rows of the queued
+           VSS (``build_weight_plane`` layout: +inf where no edge), laid
+           out exactly like ``row_ids`` with the σ slice-set column last.
+    xvals: (B, σ, S) float32 per-column tentative distances (+inf for
+           unreached columns — the tropical zero).
+    returns (B, spw, 32, S) float32; [b, j, l, s] is
+           min over in-neighbour columns i of (w[v→row] + dist[v]) for
+           slice k = j*32 + l — scatter-``min`` it into rows via
+           ``row_ids`` (the edge-relaxation recurrence).
+    """
+    spw = 32 // sigma
+    B = masks.shape[0]
+    wv = wvals.reshape(B, spw * 32, sigma)
+    y = _spmm_minplus_call(masks, wv, xvals, sigma=sigma, tile_b=tile_b,
+                           tile_s=tile_s, interpret=interpret)
+    return y.reshape(B, spw, 32, y.shape[2])
+
+
+def bvss_spmm_minplus_local(masks: jnp.ndarray, wvals: jnp.ndarray,
+                            sets: jnp.ndarray, xglobal: jnp.ndarray, *,
+                            sigma: int = 8, impl=None) -> jnp.ndarray:
+    """Min-plus pull of a queued VSS batch against a GLOBAL column-distance
+    array — the tropical twin of ``bvss_spmm_w_local``: gathers each VSS's
+    (σ, S) slice-set distance block out of ``xglobal`` (single-device: the
+    padded distance vector; row-sharded: the per-wave all-gather of every
+    shard's local distances) and relaxes it through the (τ, σ) weight tile.
+
+    masks: (B, 32) u32 queued mask rows; wvals: (B, spw, 32, σ) f32 queued
+    weight-plane rows (``wplane[Q]``); sets: (B,) int32 GLOBAL slice-set
+    ids; xglobal: (C, S) f32, C ≥ n_sets·σ.  Returns (B, spw, 32, S) f32 —
+    scatter-``min`` into (local) rows via ``row_ids``.
+    """
+    cols = (sets[:, None] * sigma
+            + jnp.arange(sigma, dtype=jnp.int32)[None, :])      # (B, σ)
+    f = bvss_spmm_minplus if impl is None else impl
+    return f(masks, wvals, xglobal[cols], sigma=sigma)
+
+
 def bvss_spmm_t_local(masks: jnp.ndarray, row_ids: jnp.ndarray,
                       hrows: jnp.ndarray, *, sigma: int = 8,
                       impl=None) -> jnp.ndarray:

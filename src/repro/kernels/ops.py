@@ -41,7 +41,8 @@ def resolve_interpret(interpret: bool | None) -> bool:
 
 from .bvss_pull import bvss_pull                              # noqa: E402
 from .bvss_push import bvss_push                              # noqa: E402
-from .mxu_pull import (bit_spmm, bvss_spmm, bvss_spmm_t,      # noqa: E402
+from .mxu_pull import (bit_spmm, bvss_spmm, bvss_spmm_minplus,  # noqa: E402
+                       bvss_spmm_minplus_local, bvss_spmm_t,
                        bvss_spmm_t_local, bvss_spmm_w, bvss_spmm_w_local)
 from .frontier_finalize import (finalize_pack_sweep,          # noqa: E402
                                 finalize_sweep)
@@ -61,6 +62,7 @@ def push_vss_kernel(masks, bits, sigma: int = 8):
 
 
 __all__ = ["resolve_interpret", "bvss_pull", "bvss_push", "bit_spmm",
-           "bvss_spmm", "bvss_spmm_t", "bvss_spmm_t_local", "bvss_spmm_w",
+           "bvss_spmm", "bvss_spmm_minplus", "bvss_spmm_minplus_local",
+           "bvss_spmm_t", "bvss_spmm_t_local", "bvss_spmm_w",
            "bvss_spmm_w_local", "finalize_sweep", "finalize_pack_sweep",
            "pull_vss_kernel", "push_vss_kernel", "ref"]

@@ -73,6 +73,16 @@ def bvss_spmm_w_ref(masks: jnp.ndarray, xvals: jnp.ndarray, sigma: int = 8
     return jnp.einsum("bjli,bis->bjls", _abits(masks, sigma), xvals)
 
 
+def bvss_spmm_minplus_ref(masks: jnp.ndarray, wvals: jnp.ndarray,
+                          xvals: jnp.ndarray, sigma: int = 8) -> jnp.ndarray:
+    """Oracle for kernels.bvss_spmm_minplus: (B, 32/σ, 32, S) float32
+    tropical pulls — per slice, the min over its masked σ columns of
+    (edge weight + column distance), +inf where the slice has no edge."""
+    a = _abits(masks, sigma)                             # (B, spw, 32, σ)
+    w = jnp.where(a > 0, wvals, jnp.inf)                 # (B, spw, 32, σ)
+    return jnp.min(w[..., None] + xvals[:, None, None, :, :], axis=3)
+
+
 def bvss_spmm_t_ref(masks: jnp.ndarray, hvals: jnp.ndarray, sigma: int = 8
                     ) -> jnp.ndarray:
     """Oracle for kernels.bvss_spmm_t: (B, σ, S) float32 transposed
@@ -226,3 +236,39 @@ def betweenness_ref(g, sources) -> np.ndarray:
         delta[int(s)] = 0.0
         bc += delta
     return bc
+
+
+def _csr_matrix_w(g, weights: np.ndarray):
+    import scipy.sparse as sp
+    return sp.csr_matrix(
+        (np.asarray(weights, dtype=np.float64), g.indices, g.indptr),
+        shape=(g.n, g.n))
+
+
+def sssp_ref(g, sources, weights: np.ndarray) -> np.ndarray:
+    """Single-source shortest-path oracle via SciPy Dijkstra on the
+    weighted CSR (directed, ``weights`` in ``g``'s edge order): (S, n)
+    float64 distances, +inf for unreachable vertices — the exact quantity
+    ``repro.analytics.sssp`` converges to (delta-stepping and Dijkstra
+    agree on positive weights)."""
+    from scipy.sparse.csgraph import dijkstra
+    sources = np.asarray(sources, dtype=np.int64)
+    return dijkstra(_csr_matrix_w(g, weights), directed=True,
+                    indices=sources)
+
+
+def pagerank_ref(g, *, damping: float = 0.85, tol: float = 1e-10,
+                 weights: np.ndarray | None = None) -> np.ndarray:
+    """PageRank oracle via NetworkX on the DiGraph of ``g`` (uniform
+    out-edge split unless ``weights`` is given), matching the dangling-
+    mass redistribution ``repro.analytics.pagerank`` implements."""
+    import networkx as nx
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    src = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    w = np.ones(g.m) if weights is None else np.asarray(weights, np.float64)
+    G.add_weighted_edges_from(zip(src.tolist(), g.indices.tolist(),
+                                  w.tolist()))
+    pr = nx.pagerank(G, alpha=damping, tol=tol, max_iter=1000,
+                     weight="weight")
+    return np.array([pr[v] for v in range(g.n)], dtype=np.float64)

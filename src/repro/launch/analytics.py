@@ -8,7 +8,9 @@ serves the requested analytics query kinds off its wave slot pool:
 ``components`` (flood-fill re-seeding), ``eccentricity`` (a sampled batch),
 ``extremes`` (iFUB diameter/radius), ``betweenness`` (sampled-source
 Brandes), ``closeness`` (sampled closeness by wave level-channel
-reduction).  ``--verify`` checks every result against the independent
+reduction), ``sssp`` (delta-stepping shortest paths over the min-plus
+tiles with random edge weights) and ``pagerank`` (fused power iteration,
+DESIGN §2.9).  ``--verify`` checks every result against the independent
 NetworkX/SciPy/NumPy oracles in ``repro.kernels.ref``.
 
 ``--devices N`` serves through a row-sharded session — EVERY verb rides
@@ -26,7 +28,7 @@ from repro.errors import KernelFaultError
 from repro.launch.bfs import build_graph, ensure_devices
 
 WHAT = ("components", "eccentricity", "extremes", "betweenness",
-        "closeness")
+        "closeness", "sssp", "pagerank")
 
 
 def main(argv=None):
@@ -59,8 +61,14 @@ def main(argv=None):
                           module="repro.launch.analytics")
     g = build_graph(args.graph, args.scale, args.seed)
     from repro.serve import GraphSession
+    weights = None
+    if "sssp" in what:
+        # dyadic rationals: f32 path sums are exact, so --verify can
+        # demand bit-parity with the float64 Dijkstra oracle
+        wrng = np.random.default_rng(args.seed + 1)
+        weights = (wrng.integers(1, 128, g.m) / 32.0).astype(np.float32)
     sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
-                        mesh=mesh)
+                        mesh=mesh, weights=weights)
     print(f"[analytics] graph={args.graph} n={g.n} m={g.m} "
           f"ordering={sess.ordering} engine={sess.engine_name} "
           f"max_batch={sess.max_batch}"
@@ -139,6 +147,46 @@ def main(argv=None):
             np.testing.assert_allclose(cc, closeness_ref(g, srcs),
                                        rtol=1e-9)
             line += "; VERIFIED vs scipy"
+        print(line)
+
+    if "sssp" in what:
+        srcs = rng.integers(0, g.n, min(args.sources, g.n))
+        t0 = time.time()
+        dist = sess.sssp_batch(srcs)
+        dt = time.time() - t0
+        reached = np.isfinite(dist).sum(axis=1)
+        line = (f"[analytics] sssp (delta-stepping): {len(srcs)} sources, "
+                f"mean reached {reached.mean():.0f}/{g.n} "
+                f"in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import sssp_ref
+            ref = sssp_ref(g, srcs, weights)
+            if not (np.array_equal(np.isinf(dist), np.isinf(ref))
+                    and np.allclose(np.where(np.isinf(dist), 0.0, dist),
+                                    np.where(np.isinf(ref), 0.0, ref),
+                                    rtol=1e-6)):
+                raise KernelFaultError(
+                    "sssp diverges from the SciPy Dijkstra oracle")
+            line += "; VERIFIED vs scipy"
+        print(line)
+
+    if "pagerank" in what:
+        t0 = time.time()
+        pr = sess.pagerank(tol=1e-10, max_iter=500)
+        dt = time.time() - t0
+        top = np.argsort(-pr)[:5]
+        line = (f"[analytics] pagerank: sum={pr.sum():.6f} top "
+                f"{[(int(v), round(float(pr[v]), 5)) for v in top]} "
+                f"in {dt * 1e3:.1f}ms")
+        if args.verify:
+            from repro.kernels.ref import pagerank_ref
+            ref = pagerank_ref(g)
+            rel = np.max(np.abs(pr - ref) / np.maximum(np.abs(ref), 1e-30))
+            if rel > 1e-6:
+                raise KernelFaultError(
+                    f"pagerank diverges from the NetworkX oracle "
+                    f"(max rel err {rel:.2e})")
+            line += "; VERIFIED vs networkx"
         print(line)
 
 

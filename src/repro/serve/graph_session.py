@@ -52,7 +52,9 @@ from jax.sharding import Mesh
 
 from repro.analytics import (ExtremesReport, betweenness_centrality,
                              closeness_centrality, connected_components,
-                             eccentricities, ifub_extremes)
+                             eccentricities, ifub_extremes, make_pagerank,
+                             make_sssp, out_degrees, pagerank_scores,
+                             sssp_distances)
 from repro.core.bfs import BlestProblem
 from repro.core.multi_source import drive_wave, make_ms_engine
 from repro.core.policy import PreparedBFS, prepare
@@ -67,8 +69,17 @@ class GraphSession:
 
     Parameters mirror :func:`repro.core.policy.prepare`; ``max_batch`` is
     the wave slot-pool width (the S of the stacked bit-SpMM frontier);
-    ``mesh`` row-shards the session over a device mesh.
+    ``mesh`` row-shards the session over a device mesh; ``weights`` (one
+    strictly-positive float per CSR edge of ``g``) arms the weighted
+    verbs — an unweighted session lazily defaults them to unit weights,
+    so ``sssp`` degrades to hop counts and ``pagerank`` to the classic
+    unweighted iteration (DESIGN §2.9).
     """
+
+    #: every query verb a session serves — the CI verbs lane iterates
+    #: this tuple and fails if any verb lacks an oracle-parity check
+    VERBS = ("levels", "components", "eccentricity", "betweenness",
+             "closeness", "sssp", "pagerank")
 
     def __init__(self, g: Graph, *, max_batch: int = 8, sigma: int = 8,
                  w: int = 512, seed: int = 0,
@@ -76,7 +87,7 @@ class GraphSession:
                  engine: str | None = None, use_kernel: bool = True,
                  direction: str = "auto", autotune: bool = False,
                  max_steps: int | None = None, mesh: Mesh | None = None,
-                 mesh_axis: str = "data",
+                 mesh_axis: str = "data", weights=None,
                  fault_plan: FaultPlan | None = None):
         t0 = time.time()
         # fault seams (DESIGN §2.7): a FaultPlan's wrappers are baked into
@@ -90,7 +101,7 @@ class GraphSession:
             order=order, engine=engine, use_kernels=use_kernel,
             direction=direction, autotune=autotune,
             push_impl=self._seams.get("push_impl"),
-            mesh=mesh, mesh_axis=mesh_axis)
+            mesh=mesh, mesh_axis=mesh_axis, weights=weights)
         if self.prepared.problem is not None:
             self._problem = self.prepared.problem
         else:
@@ -384,3 +395,109 @@ class GraphSession:
         k = min(int(k_sources), self.n)
         srcs = rng.choice(self.n, size=k, replace=False)
         return srcs, self.betweenness(srcs)
+
+    # ------------------------------------------------------------------
+    # weighted verbs (DESIGN §2.9)
+    # ------------------------------------------------------------------
+    def _weights_ord(self) -> np.ndarray:
+        """Per-edge weights in the REORDERED graph's CSR edge order —
+        the session's own if it was built with ``weights=...``, else the
+        lazy unit-weight default."""
+        if self.prepared.weights is not None:
+            return self.prepared.weights
+        if "unit_weights" not in self._analytics_cache:
+            self._analytics_cache["unit_weights"] = np.ones(
+                self.prepared.graph.m, dtype=np.float32)
+        return self._analytics_cache["unit_weights"]
+
+    def _wplane(self):
+        """The device weight plane the weighted verbs pull against:
+        ``prepare``'s committed plane on a weighted session, a lazily
+        built (and cached) unit plane otherwise — the same deterministic
+        slice layout either way, so it aligns with the session's problem
+        bit-for-bit."""
+        if self.prepared.wplane is not None:
+            return self.prepared.wplane
+        if self._problem.is_2d:
+            from repro.errors import ConfigError
+            raise ConfigError(
+                "weighted verbs are not supported on a 2-D (row × column) "
+                "mesh yet — the weighted verbs ship 1-D row-sharded "
+                "(DESIGN §2.9); use a 1-D mesh or a single device")
+        if "unit_wplane" not in self._analytics_cache:
+            from repro.core.bvss import (build_sharded_bvss,
+                                         build_sharded_weight_plane,
+                                         build_weight_plane,
+                                         weight_plane_to_device)
+            g_ord = self.prepared.graph
+            ones = self._weights_ord()
+            sigma = self.prepared.bvss.sigma
+            if self.mesh is not None:
+                sb = build_sharded_bvss(
+                    g_ord, self.mesh.shape[self._mesh_axis], sigma=sigma)
+                plane = weight_plane_to_device(
+                    build_sharded_weight_plane(g_ord, ones, sb),
+                    self.mesh, self._mesh_axis)
+            else:
+                plane = weight_plane_to_device(
+                    build_weight_plane(g_ord, ones, sigma=sigma))
+            self._analytics_cache["unit_wplane"] = plane
+        return self._analytics_cache["unit_wplane"]
+
+    def _sssp_fn(self, width: int):
+        """Cached delta-stepping engine of cohort width ``width`` on the
+        session's own (possibly sharded) problem."""
+        key = ("sssp_fn", width)
+        if key not in self._analytics_cache:
+            self._analytics_cache[key] = make_sssp(
+                self._problem, self._wplane(), width,
+                use_kernel=self._use_kernel)
+        return self._analytics_cache[key]
+
+    def sssp(self, src: int, *, delta: float | None = None) -> np.ndarray:
+        """Single-source shortest-path distances from ``src`` (caller
+        ids in and out): one float64 distance per vertex, ``+inf`` where
+        unreachable.  Delta-stepping over the min-plus tile product
+        against the session's weight plane (unit weights on an
+        unweighted session, where this equals BFS hop counts).  ``delta``
+        overrides the bucket width (performance only, never
+        correctness)."""
+        src = check_source(src, self.n)
+        dist = sssp_distances(
+            [int(self.perm[src])], problem=self._problem,
+            wplane=self._wplane(), weights=self._weights_ord(),
+            batch=1, delta=delta, sssp_fn=self._sssp_fn(1))
+        return dist[0][self.perm]
+
+    def sssp_batch(self, sources: Sequence[int], *,
+                   delta: float | None = None) -> np.ndarray:
+        """Distances from each source (rows, aligned with ``sources``)
+        to every vertex (cols): (S, n) float64, caller ids throughout.
+        Cohorts of ``max_batch`` stacked distance columns share one
+        min-plus tile stream."""
+        srcs = np.asarray(check_sources(sources, self.n), dtype=np.int64)
+        if len(srcs) == 0:
+            return np.zeros((0, self.n), dtype=np.float64)
+        width = min(self.max_batch, len(srcs))
+        dist = sssp_distances(
+            self.perm[srcs], problem=self._problem, wplane=self._wplane(),
+            weights=self._weights_ord(), batch=width, delta=delta,
+            sssp_fn=self._sssp_fn(width))
+        return dist[:, self.perm]
+
+    def pagerank(self, *, damping: float = 0.85, tol: float = 1e-8,
+                 max_iter: int = 200) -> np.ndarray:
+        """PageRank scores, one per vertex in caller-id order (sums to
+        1): damped power iteration with dangling-mass correction, fused
+        on device over the float tile product (DESIGN §2.9).  STRUCTURAL
+        PageRank — the classic definition over the adjacency, so session
+        edge weights do not influence the scores (the float channel
+        carries rank mass, not edge weights)."""
+        key = ("pagerank_fn", float(damping), float(tol), int(max_iter))
+        if key not in self._analytics_cache:
+            self._analytics_cache[key] = make_pagerank(
+                self._problem, out_degrees(self.prepared.graph),
+                use_kernel=self._use_kernel, damping=damping, tol=tol,
+                max_iter=max_iter)
+        r = pagerank_scores(pagerank_fn=self._analytics_cache[key])
+        return r[self.perm]

@@ -62,7 +62,7 @@ def test_checked_in_floors_are_wellformed():
     for dotted, floor in spec["floors"].items():
         suite = dotted.split(".")[0]
         assert suite in ("fused", "service", "dist", "analytics",
-                         "hybrid"), dotted
+                         "hybrid", "scale_sweep"), dotted
         # gated metrics live under a suite summary, or (PR 8) the
         # trace-time comm-volume block of the dist2d partition bench
         assert ".summary." in dotted or ".comm." in dotted, dotted
@@ -94,6 +94,49 @@ def test_gate_only_prefix_filters_floors(tmp_path, mode):
     assert res.returncode == expected, res.stdout + res.stderr
     if mode == "empty":
         assert "refusing to vacuously pass" in res.stdout
+
+
+@pytest.mark.parametrize("mode", ["covered", "uncovered"])
+def test_gate_require_covered_suites(tmp_path, mode):
+    """--require-covered (the weekly full-depth run): every top-level
+    suite the artifact carries must have at least one floor under it, so
+    a newly added bench suite cannot silently escape the gate."""
+    art_dict = {"hybrid": {"summary": {"geomean_hybrid_vs_pull": 1.3}}}
+    if mode == "uncovered":
+        art_dict["brand_new_suite"] = {"summary": {"metric": 1.0}}
+    art = tmp_path / "bench.json"
+    art.write_text(json.dumps(art_dict))
+    floors = {"max_regression": 0.25,
+              "floors": {"hybrid.summary.geomean_hybrid_vs_pull": 1.15}}
+    fl = tmp_path / "floors.json"
+    fl.write_text(json.dumps(floors))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.perf_gate", str(art),
+         "--floors", str(fl), "--require-covered"],
+        cwd=REPO, capture_output=True, text=True)
+    if mode == "covered":
+        assert res.returncode == 0, res.stdout + res.stderr
+        assert "covered by floors" in res.stdout
+    else:
+        assert res.returncode == 1, res.stdout + res.stderr
+        assert "brand_new_suite" in res.stdout
+
+
+def test_checked_in_floors_cover_every_run_py_suite(tmp_path):
+    """The suites ``benchmarks.run --json`` emits must each carry at
+    least one checked-in floor — the contract --require-covered enforces
+    against the weekly artifact, checked here statically so a PR adding
+    a suite without a floor fails tier-1, not next Monday."""
+    with open(DEFAULT_FLOORS) as f:
+        spec = json.load(f)
+    # the top-level suite keys run.py assembles into the artifact
+    run_py = open(os.path.join(REPO, "benchmarks", "run.py")).read()
+    for suite in ("fused", "service", "dist", "analytics", "hybrid",
+                  "scale_sweep"):
+        assert f'"{suite}"' in run_py, f"run.py no longer emits {suite}?"
+        assert any(path.startswith(suite + ".")
+                   for path in spec["floors"]), \
+            f"no checked-in floor covers the {suite!r} suite"
 
 
 @pytest.mark.parametrize("mode", ["pass", "fail", "prove"])

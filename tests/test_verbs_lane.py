@@ -1,0 +1,125 @@
+"""The CI ``verbs`` lane: EVERY GraphSession query verb runs against an
+independent oracle on two fixture graphs (a scale-free digraph and a
+shuffled road grid), and a verb without an oracle-parity check is a
+FAILURE — new verbs must land with their oracle, never silently escape
+the lane (PR 9, DESIGN §2.9)."""
+import numpy as np
+import pytest
+
+from repro.graphs import generators as gen
+from repro.kernels.ref import (betweenness_ref, closeness_ref,
+                               connected_components_ref, eccentricity_ref,
+                               normalize_labels, pagerank_ref, sssp_ref)
+from repro.serve import GraphSession
+
+INF = np.int32(np.iinfo(np.int32).max)
+
+FIXTURES = {
+    "kron": lambda: gen.rmat(7, 8, seed=11),
+    "road": lambda: gen.grid2d(12, 12, shuffle=True, seed=12),
+}
+
+_cache: dict = {}
+
+
+def _fixture(gname):
+    """(graph, dyadic weights, weighted session) — one prepare per
+    fixture for the whole lane."""
+    if gname not in _cache:
+        g = FIXTURES[gname]()
+        rng = np.random.default_rng(13)
+        w = (rng.integers(1, 128, g.m) / 32.0).astype(np.float32)
+        _cache[gname] = (g, w, GraphSession(g, max_batch=4, weights=w))
+    return _cache[gname]
+
+
+# ---------------------------------------------------------------------------
+# one oracle-parity check per verb; the lane FAILS on any verb that has
+# no entry here (test_every_verb_has_an_oracle)
+# ---------------------------------------------------------------------------
+def _check_levels(g, w, sess):
+    from repro.core import reference_bfs
+    for src in (0, g.n // 2):
+        np.testing.assert_array_equal(sess.levels(src),
+                                      reference_bfs(g, src))
+
+
+def _check_components(g, w, sess):
+    np.testing.assert_array_equal(
+        sess.components(), normalize_labels(connected_components_ref(g)))
+
+
+def _check_eccentricity(g, w, sess):
+    srcs = np.array([0, 1, g.n - 1])
+    np.testing.assert_array_equal(sess.eccentricity(srcs),
+                                  eccentricity_ref(g.symmetrized, srcs))
+
+
+def _check_betweenness(g, w, sess):
+    srcs = np.array([0, g.n // 3])
+    bc = sess.betweenness(srcs)
+    ref = betweenness_ref(g, srcs)
+    np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
+
+
+def _check_closeness(g, w, sess):
+    srcs = np.array([0, g.n // 2, g.n - 1])
+    np.testing.assert_allclose(sess.closeness(srcs),
+                               closeness_ref(g, srcs), rtol=1e-9)
+
+
+def _check_sssp(g, w, sess):
+    srcs = [0, g.n // 2]
+    dist = sess.sssp_batch(srcs)
+    ref = sssp_ref(g, srcs, w)
+    # dyadic weights: f32 path sums are exact, so demand equality
+    np.testing.assert_array_equal(np.isinf(dist), np.isinf(ref))
+    np.testing.assert_allclose(np.where(np.isinf(dist), 0.0, dist),
+                               np.where(np.isinf(ref), 0.0, ref),
+                               rtol=1e-6)
+    # the single-source verb is the batch's width-1 twin
+    d0 = sess.sssp(srcs[0])
+    np.testing.assert_array_equal(np.isinf(d0), np.isinf(ref[0]))
+
+
+def _check_pagerank(g, w, sess):
+    pr = sess.pagerank(tol=1e-10, max_iter=500)
+    ref = pagerank_ref(g)
+    rel = np.max(np.abs(pr - ref) / np.maximum(np.abs(ref), 1e-30))
+    assert rel <= 1e-6, f"pagerank max rel err {rel}"
+    assert abs(pr.sum() - 1.0) < 1e-5
+
+
+ORACLE_CHECKS = {
+    "levels": _check_levels,
+    "components": _check_components,
+    "eccentricity": _check_eccentricity,
+    "betweenness": _check_betweenness,
+    "closeness": _check_closeness,
+    "sssp": _check_sssp,
+    "pagerank": _check_pagerank,
+}
+
+
+def test_every_verb_has_an_oracle():
+    """The lane's completeness gate: a verb in GraphSession.VERBS with no
+    oracle-parity check here is a failure, and a stale check for a
+    removed verb is too."""
+    missing = set(GraphSession.VERBS) - set(ORACLE_CHECKS)
+    assert not missing, \
+        f"GraphSession verbs without an oracle-parity check: {missing}"
+    stale = set(ORACLE_CHECKS) - set(GraphSession.VERBS)
+    assert not stale, f"oracle checks for unknown verbs: {stale}"
+
+
+def test_verbs_tuple_is_canonical():
+    """Every VERBS entry is a real callable on the session."""
+    for verb in GraphSession.VERBS:
+        assert callable(getattr(GraphSession, verb)), verb
+
+
+@pytest.mark.parametrize("gname", sorted(FIXTURES))
+@pytest.mark.parametrize("verb", GraphSession.VERBS)
+def test_verb_oracle_parity(gname, verb):
+    g, w, sess = _fixture(gname)
+    ORACLE_CHECKS[verb](g, w, sess)
