@@ -107,8 +107,8 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
         # -- eccentricity: one batched wave vs N sequential runs -----------
         srcs = rng.integers(0, g.n, n_queries)
         internal = sess.perm[srcs]
-        sess.eccentricity(srcs)                # warm at the timed width
-        eccs = sess.eccentricity(srcs)
+        sess.eccentricity_batch(srcs)                # warm at the timed width
+        eccs = sess.eccentricity_batch(srcs)
 
         def seq_ecc() -> np.ndarray:
             return np.array([
@@ -116,7 +116,7 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
                              lv, 0).max()) for s in internal])
 
         eccs_seq = seq_ecc()
-        t_wave_e = median_sec(lambda: sess.eccentricity(srcs))
+        t_wave_e = median_sec(lambda: sess.eccentricity_batch(srcs))
         t_seq_e = median_sec(seq_ecc)
         ref_e = eccentricity_ref(g.symmetrized, srcs)
         everified = bool((eccs == ref_e).all() and (eccs_seq == ref_e).all())
@@ -129,9 +129,9 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
 
         # -- betweenness: σ-channel wave + reverse tile sweep ---------------
         pivots = rng.choice(g.n, size=min(n_pivots, g.n), replace=False)
-        sess.betweenness(pivots)               # warm at the timed width
-        bc = sess.betweenness(pivots)
-        t_bc = median_sec(lambda: sess.betweenness(pivots))
+        sess.betweenness_batch(pivots)               # warm at the timed width
+        bc = sess.betweenness_batch(pivots)
+        t_bc = median_sec(lambda: sess.betweenness_batch(pivots))
         ref_bc = betweenness_ref(g, pivots)
         scale_ref = max(float(np.abs(ref_bc).max()), 1.0)
         max_rel_err = float(np.abs(bc - ref_bc).max()) / scale_ref
@@ -144,8 +144,8 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
 
         # -- closeness: wave cohorts vs N sequential fused runs -------------
         srcs_c = rng.integers(0, g.n, n_queries)
-        sess.closeness(srcs_c)                 # warm at the timed width
-        cc = sess.closeness(srcs_c)
+        sess.closeness_batch(srcs_c)                 # warm at the timed width
+        cc = sess.closeness_batch(srcs_c)
 
         def seq_close() -> np.ndarray:
             return np.concatenate([
@@ -154,7 +154,7 @@ def run(scale: int = 9, n_queries: int = 8, n_pivots: int = 4,
                 for s in srcs_c])
 
         cc_seq = seq_close()
-        t_wave_c = median_sec(lambda: sess.closeness(srcs_c))
+        t_wave_c = median_sec(lambda: sess.closeness_batch(srcs_c))
         t_seq_c = median_sec(seq_close)
         ref_c = closeness_ref(g, srcs_c)
         closeverified = bool(

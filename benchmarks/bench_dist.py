@@ -120,10 +120,10 @@ def _run_inline(scale: int, devices: int, n_queries: int,
         from repro.kernels.ref import betweenness_ref
         sess1 = GraphSession(g, max_batch=min(4, n_queries), w=512)
         pivots = rng.choice(g.n, size=min(3, g.n), replace=False)
-        sess1.betweenness(pivots)                      # warm both widths
-        sess.betweenness(pivots)
-        bc1 = sess1.betweenness(pivots)
-        bcD = sess.betweenness(pivots)
+        sess1.betweenness_batch(pivots)                      # warm both widths
+        sess.betweenness_batch(pivots)
+        bc1 = sess1.betweenness_batch(pivots)
+        bcD = sess.betweenness_batch(pivots)
         scale_bc = max(float(np.abs(bc1).max()), 1.0)
         rel_err = float(np.abs(bcD - bc1).max()) / scale_bc
         ref_bc = betweenness_ref(g, pivots)
@@ -131,8 +131,8 @@ def _run_inline(scale: int, devices: int, n_queries: int,
             rel_err <= 1e-6
             and float(np.abs(bcD - ref_bc).max()) / scale_bc < 1e-4)
         assert bverified, f"{gname}: sharded betweenness err {rel_err}"
-        t_bc1 = median_sec(lambda: sess1.betweenness(pivots))
-        t_bcD = median_sec(lambda: sess.betweenness(pivots))
+        t_bc1 = median_sec(lambda: sess1.betweenness_batch(pivots))
+        t_bcD = median_sec(lambda: sess.betweenness_batch(pivots))
         bet = {
             "n_pivots": int(len(pivots)),
             "single_sec": t_bc1, "sharded_sec": t_bcD,

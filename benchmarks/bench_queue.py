@@ -1,0 +1,162 @@
+"""PR-10 async-queue serving benchmark: RequestQueue coalescing vs
+call-at-a-time serving on a Poisson-arrival request stream.
+
+Per graph of the suite:
+
+* ``poisson`` — N single-source level requests with exponential
+  inter-arrival gaps (mean a fraction of the single-query service time,
+  so a backlog builds).  (a) *call-at-a-time*: a single server thread
+  sleeps until each arrival, then answers it through the fused
+  single-source engine — the pre-queue serving discipline.  (b) *queued*:
+  every request is ``submit()``-ed with ``not_before`` at its arrival
+  time and one ``drain(wait=True)`` coalesces the backlog into
+  ``max_batch``-wide multi-source waves, refilling slots mid-flight.
+  Both makespans span first arrival to last completion; throughput is
+  N/makespan and the floored ratio is queued/call-at-a-time.
+* ``backlog`` — the same requests all available at t=0 (pure wave-batching
+  throughput, no arrival idle time), as a secondary diagnostic.
+
+Every queued answer is verified bit-identical to ``reference_bfs`` before
+timing is reported.  ``run(..., json_path=...)`` is invoked by
+``benchmarks/run.py --json`` and feeds the ``queue`` suite of the bench
+artifact; ``perf_floors.json`` floors the Poisson geomean at 1.3x.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_envelope, fmt_row, geomean, graph_suite
+from repro import GraphSessionManager, PrepareOptions, RequestQueue
+from repro.core import reference_bfs
+
+
+def _serve_call_at_a_time(sess, queries, arrivals):
+    """The pre-queue discipline: one server loop, sleep until each
+    request's arrival, answer it alone.  Returns (makespan_s, answers)."""
+    t0 = time.monotonic()
+    out = []
+    for q, a in zip(queries, arrivals):
+        while True:
+            gap = a - (time.monotonic() - t0)
+            if gap <= 0:
+                break
+            time.sleep(min(gap, 0.0005))
+        out.append(sess.levels(q))
+    return time.monotonic() - t0, out
+
+
+def _serve_queued(queue, name, queries, arrivals):
+    """Submit every request with ``not_before`` at its arrival time, then
+    one draining pass coalesces the backlog into waves."""
+    t0 = time.monotonic()
+    futs = [queue.submit(name, q, not_before=t0 + a)
+            for q, a in zip(queries, arrivals)]
+    queue.drain(wait=True)
+    makespan = time.monotonic() - t0
+    return makespan, [f.result(0) for f in futs]
+
+
+def run(scale: int = 9, n_requests: int = 12, max_batch: int = 8,
+        json_path: str | None = None, verbose: bool = True) -> dict:
+    suite = graph_suite(scale)
+    graphs_out = {}
+    for gname, g in suite.items():
+        rng = np.random.default_rng(10)
+        mgr = GraphSessionManager()
+        sess = mgr.open_session(gname, g, max_batch=max_batch,
+                                options=PrepareOptions(w=512))
+        queue = RequestQueue(mgr)
+        queries = [int(q) for q in rng.integers(0, g.n, n_requests)]
+        refs = [reference_bfs(g, q) for q in queries]
+
+        # warm both paths, then estimate the single-query service time so
+        # the arrival process is scaled to THIS machine (mean gap = t1/4:
+        # arrivals outpace the one-at-a-time server and a backlog builds)
+        sess.levels(queries[0])
+        sess.levels_batch(queries[: min(2, len(queries))])
+        t0 = time.monotonic()
+        for q in queries[:3]:
+            sess.levels(q)
+        t1 = (time.monotonic() - t0) / 3
+        gaps = rng.exponential(t1 / 4, n_requests)
+        gaps[0] = 0.0
+        arrivals = np.cumsum(gaps)
+
+        t_call, seq = _serve_call_at_a_time(sess, queries, arrivals)
+        t_queued, ans = _serve_queued(queue, gname, queries, arrivals)
+        verified = all((a == r).all() and (s == r).all()
+                       for a, s, r in zip(ans, seq, refs))
+        assert verified, f"{gname}: queued levels differ from reference_bfs"
+        qs = queue.stats()
+        poisson = {
+            "n_requests": n_requests, "max_batch": max_batch,
+            "mean_gap_sec": float(t1 / 4),
+            "call_at_a_time_sec": t_call, "queued_sec": t_queued,
+            "queued_vs_call_at_a_time": t_call / max(t_queued, 1e-12),
+            "waves": qs["waves"], "coalesced": qs["coalesced"],
+            "verified": verified,
+        }
+
+        # -- backlog: all requests available at t=0 ------------------------
+        t_call0, _ = _serve_call_at_a_time(
+            sess, queries, np.zeros(n_requests))
+        t_q0, ans0 = _serve_queued(queue, gname, queries,
+                                   np.zeros(n_requests))
+        assert all((a == r).all() for a, r in zip(ans0, refs))
+        backlog = {
+            "call_at_a_time_sec": t_call0, "queued_sec": t_q0,
+            "queued_vs_call_at_a_time": t_call0 / max(t_q0, 1e-12),
+        }
+
+        graphs_out[gname] = {
+            "n": int(g.n), "m": int(g.m), "ordering": sess.ordering,
+            "engine": sess.engine_name,
+            "poisson": poisson, "backlog": backlog,
+        }
+        if verbose:
+            print(fmt_row(f"bench_queue/{gname}/poisson", t_queued * 1e6,
+                          f"vs_call={poisson['queued_vs_call_at_a_time']:.2f}"
+                          f";coalesced={qs['coalesced']}"))
+            print(fmt_row(f"bench_queue/{gname}/backlog", t_q0 * 1e6,
+                          f"vs_call="
+                          f"{backlog['queued_vs_call_at_a_time']:.2f}"))
+
+    summary = {
+        "geomean_queued_vs_call_at_a_time": geomean(
+            [go["poisson"]["queued_vs_call_at_a_time"]
+             for go in graphs_out.values()]),
+        "geomean_backlog_queued_vs_call_at_a_time": geomean(
+            [go["backlog"]["queued_vs_call_at_a_time"]
+             for go in graphs_out.values()]),
+        "total_coalesced": int(sum(go["poisson"]["coalesced"]
+                                   for go in graphs_out.values())),
+        "all_verified": all(go["poisson"]["verified"]
+                            for go in graphs_out.values()),
+    }
+    out = {
+        **bench_envelope("pr10_async_queue", scale),
+        "note": ("poisson = RequestQueue submits with not_before at each "
+                 "exponential arrival, one drain(wait=True) coalescing the "
+                 "backlog into max_batch-wide waves with mid-flight slot "
+                 "refills; call_at_a_time = the same arrivals answered one "
+                 "at a time through the fused single-source engine; both "
+                 "makespans span first arrival to last completion"),
+        "graphs": graphs_out,
+        "summary": summary,
+    }
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=1, sort_keys=False)
+        if verbose:
+            print(f"# wrote {json_path}")
+    if verbose:
+        for k, v in summary.items():
+            print(f"# {k}={v if isinstance(v, (bool, int)) else f'{v:.2f}x'}")
+    return out
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_queue.json")

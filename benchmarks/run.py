@@ -13,12 +13,14 @@ the PR-4/PR-5 analytics bench (``benchmarks/bench_analytics.py``,
 with the closeness suite, sharded betweenness in ``dist`` and — since
 PR 9 — the weighted ``sssp`` delta-stepping and ``pagerank`` suites),
 the PR-7 compiled-dispatch hybrid bench (``benchmarks/bench_hybrid.py``:
-direction-optimizing hybrid vs pull-only, pure-XLA lane) and the PR-8
+direction-optimizing hybrid vs pull-only, pure-XLA lane), the PR-8
 RMAT scale sweep (``benchmarks/bench_scale.py``: MTEPS + peak device
-footprint over 2^10..2^14, quick mode stops at 2^11) — and
-writes one machine-readable artifact (default ``BENCH_pr9.json``) with
-``fused``, ``service``, ``dist``, ``analytics``, ``hybrid`` and
-``scale_sweep`` suites;
+footprint over 2^10..2^14, quick mode stops at 2^11) and the PR-10
+async-queue bench (``benchmarks/bench_queue.py``: RequestQueue wave
+coalescing vs call-at-a-time on a Poisson-arrival stream) — and
+writes one machine-readable artifact (default ``BENCH_pr10.json``) with
+``fused``, ``service``, ``dist``, ``analytics``, ``hybrid``,
+``scale_sweep`` and ``queue`` suites;
 ``--fused-only`` skips the paper tables so CI can smoke the JSON path
 quickly.  CI diffs the artifact's geomean speedups against the checked-in
 floors (``benchmarks/perf_gate.py``).  Roofline tables (E7) come from the
@@ -37,11 +39,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller graphs (CI-speed)")
-    ap.add_argument("--json", nargs="?", const="BENCH_pr9.json", default=None,
-                    metavar="PATH",
+    ap.add_argument("--json", nargs="?", const="BENCH_pr10.json",
+                    default=None, metavar="PATH",
                     help="run the fused-pipeline + service + dist + "
-                         "analytics + hybrid + scale-sweep benches and "
-                         "write JSON (default %(const)s)")
+                         "analytics + hybrid + scale-sweep + queue benches "
+                         "and write JSON (default %(const)s)")
     ap.add_argument("--fused-only", action="store_true",
                     help="only the JSON perf benches, skip the paper tables "
                          "(implies --json)")
@@ -52,10 +54,11 @@ def main(argv=None) -> None:
 
     json_path = args.json
     if args.fused_only and json_path is None:
-        json_path = "BENCH_pr9.json"
+        json_path = "BENCH_pr10.json"
     if json_path is not None:
         from benchmarks import (bench_analytics, bench_dist, bench_fused,
-                                bench_hybrid, bench_scale, bench_service)
+                                bench_hybrid, bench_queue, bench_scale,
+                                bench_service)
         from benchmarks.common import bench_envelope
         suite_scale = min(scale, 9 if args.quick else 10)
         fused = bench_fused.run(scale=suite_scale,
@@ -83,14 +86,18 @@ def main(argv=None) -> None:
         scale_sweep = bench_scale.run(quick=args.quick,
                                       n_sources=2 if args.quick else 3,
                                       json_path=None)
+        queue = bench_queue.run(scale=suite_scale,
+                                n_requests=8 if args.quick else 12,
+                                json_path=None)
         out = {
-            **bench_envelope("pr9_weighted_suite", suite_scale),
+            **bench_envelope("pr10_async_queue_suite", suite_scale),
             "fused": fused,
             "service": service,
             "dist": dist,
             "analytics": analytics,
             "hybrid": hybrid,
             "scale_sweep": scale_sweep,
+            "queue": queue,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=1, sort_keys=False)

@@ -2,8 +2,10 @@
 centrality queries with the full BLEST pipeline (the paper's kind of
 workload — serve a graph, not train a model).
 
-All the heavy lifting lives in :class:`repro.serve.GraphSession` (prepared
-ordering/BVSS/engines + wave batching); this example is a thin client.
+Everything comes through the stable ``repro`` façade: a multi-tenant
+:class:`repro.GraphSessionManager`, the async :class:`repro.RequestQueue`
+(non-blocking submits that coalesce into shared multi-source waves), and
+streaming edge updates via :meth:`GraphSessionManager.update_edges`.
 
     PYTHONPATH=src python examples/bfs_service.py
 """
@@ -11,63 +13,70 @@ import time
 
 import numpy as np
 
-from repro.core import reference_bfs
-from repro.serve import GraphSession
-from repro.graphs import generators as gen
-
-
-class GraphService:
-    """Thin client over GraphSession: single queries, batched waves, and
-    sampled centrality — everything in the caller's original vertex ids."""
-
-    def __init__(self, g, *, max_batch=4, seed=0):
-        self.session = GraphSession(g, max_batch=max_batch, w=512, seed=seed)
-        self.kind = self.session.ordering
-        self.bvss = self.session.bvss
-        self.preprocess_s = self.session.preprocess_s
-
-    def levels(self, src: int) -> np.ndarray:
-        return self.session.levels(src)
-
-    def levels_batch(self, sources) -> list:
-        return self.session.levels_batch(sources)
-
-    def centrality_sample(self, n_sources: int, seed=0):
-        return self.session.centrality_sample(n_sources, seed=seed)
+import repro
 
 
 def main():
+    from repro.graphs import generators as gen
     g = gen.rmat(10, 10, seed=3)
-    svc = GraphService(g, max_batch=4)
-    print(f"service up: n={g.n} m={g.m} ordering={svc.kind} "
-          f"compression={svc.bvss.compression_ratio():.3f} "
-          f"preprocess={svc.preprocess_s:.2f}s")
+
+    mgr = repro.GraphSessionManager()
+    sess = mgr.open_session("social", g, max_batch=4,
+                            options=repro.PrepareOptions(w=512, seed=0))
+    print(f"service up: n={g.n} m={g.m} ordering={sess.ordering} "
+          f"compression={sess.bvss.compression_ratio():.3f} "
+          f"preprocess={sess.preprocess_s:.2f}s")
 
     rng = np.random.default_rng(0)
     queries = [int(q) for q in rng.integers(0, g.n, 12)]
-    svc.levels(queries[0])           # warm the single-source path
-    svc.levels_batch(queries[:2])    # warm the wave path
+    sess.levels(queries[0])           # warm the single-source path
+    sess.levels_batch(queries[:2])    # warm the wave path
 
     t0 = time.time()
-    seq = [svc.levels(q) for q in queries]
+    seq = [sess.levels(q) for q in queries]
     t_seq = time.time() - t0
 
+    # async path: submit returns a future immediately; drain() coalesces
+    # the backlog into max_batch-wide waves, refilling slots mid-flight
+    queue = repro.RequestQueue(mgr)
     t0 = time.time()
-    lvs = svc.levels_batch(queries)
-    t_wave = time.time() - t0
+    futs = [queue.submit("social", q) for q in queries]
+    queue.drain()
+    lvs = [f.result(0) for f in futs]
+    t_queue = time.time() - t0
+
+    from repro.core import reference_bfs
     for q, lv_s, lv in zip(queries, seq, lvs):
         ref = reference_bfs(g, q)
         assert (lv_s == ref).all(), f"query {q} mismatch"
-        assert (lv == ref).all(), f"wave query {q} mismatch"
+        assert (lv == ref).all(), f"queued query {q} mismatch"
+    qs = queue.stats()
     print(f"served {len(queries)} level queries: sequential {t_seq:.2f}s, "
-          f"batched wave {t_wave:.2f}s "
-          f"({t_seq / max(t_wave, 1e-9):.2f}x, all verified)")
+          f"queued {t_queue:.2f}s over {qs['waves']} waves "
+          f"({qs['coalesced']} coalesced mid-flight, "
+          f"{t_seq / max(t_queue, 1e-9):.2f}x, all verified)")
 
     t0 = time.time()
-    srcs, cc = svc.centrality_sample(8)
+    srcs, cc = sess.closeness_sample(8, seed=0)
     print(f"closeness-centrality sample (8 sources, BVSS bit-SpMM waves): "
           f"{time.time() - t0:.2f}s, sources={srcs.tolist()}, "
           f"mean={cc.mean():.4f}")
+
+    # streaming maintenance: patch a handful of edges into the prepared
+    # BVSS in place — no full re-prepare, epoch bumps, session keeps serving
+    wrng = np.random.default_rng(1)
+    new_edges = sorted({(int(a), int(b)) for a, b in
+                        wrng.integers(0, g.n, (4, 2)) if a != b})
+    report = mgr.update_edges("social", inserts=new_edges)
+    if report is not None:
+        print(f"edge update: path={report.path} epoch={report.epoch} "
+              f"+{report.n_inserted} edges "
+              f"({report.vss_rows_rewritten} VSS rows rewritten)")
+        a, b = new_edges[0]
+        lv = sess.levels(a)
+        print(f"post-update query from {a}: new edge ({a}, {b}) live "
+              f"(level[{b}]={int(lv[b])}), reached "
+              f"{(lv < np.iinfo(np.int32).max).sum()}/{g.n}")
 
 
 if __name__ == "__main__":

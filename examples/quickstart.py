@@ -1,22 +1,47 @@
 """Quickstart: the BLEST pipeline end to end on a synthetic scale-free graph.
 
+The first half uses only the stable ``repro`` façade — prepare once, query
+many times, stream edge updates.  The second half drops to the deep
+modules to race every engine variant (internals, not part of the façade
+contract).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import time
 
 import numpy as np
 
-from repro.core import ENGINES, build_bvss, make_engine, reference_bfs
-from repro.core.ordering import auto_order, social_like_report
-from repro.graphs import generators as gen
+import repro
 
 
 def main():
+    from repro.graphs import generators as gen
     g = gen.rmat(11, 12, seed=7)
-    rep = social_like_report(g)
-    print(f"graph: n={g.n} m={g.m}  social-like={rep.is_social}")
 
-    # paper §3.2: one ordering decision to pull them all
+    # the ONE static pipeline: classify, order, build BVSS, pick engine
+    prep = repro.prepare(g, options=repro.PrepareOptions(w=512, seed=7))
+    print(f"graph: n={g.n} m={g.m}  ordering={prep.ordering} "
+          f"engine={prep.engine_name} "
+          f"compression={prep.bvss.compression_ratio():.3f}")
+
+    src = 0
+    lv = prep.levels(src)
+    print(f"BFS from {src}: "
+          f"{int((lv != np.iinfo(np.int32).max).sum())} reachable")
+
+    # streaming maintenance: patch edges into the prepared BVSS; the
+    # epoch bumps and the same object keeps answering queries
+    prep2 = repro.apply_edge_updates(prep, inserts=[(src, g.n - 1)])
+    print(f"after insert ({src}, {g.n - 1}): path={prep2.last_update.path} "
+          f"epoch={prep2.epoch} level[{g.n - 1}]="
+          f"{int(prep2.levels(src)[g.n - 1])}")
+
+    # --- internals below: race the engine variants head to head --------
+    from repro.core import ENGINES, build_bvss, make_engine, reference_bfs
+    from repro.core.ordering import auto_order, social_like_report
+
+    rep = social_like_report(g)
+    print(f"social-like={rep.is_social}")
     perm, kind = auto_order(g, w=512)
     g_ord = g.permute_fast(perm)
     for name, gg in [("natural", g), (kind, g_ord)]:
@@ -24,10 +49,7 @@ def main():
         print(f"  {name:16s} compression={b.compression_ratio():.3f} "
               f"update_divergence={b.update_divergence():8.1f}")
 
-    src = 0
     ref = reference_bfs(g_ord, src)
-    print(f"BFS from {src}: {int((ref != np.iinfo(np.int32).max).sum())} "
-          f"reachable, {ref[ref != np.iinfo(np.int32).max].max()} levels")
     for engine in ENGINES:
         if engine == "dense_pull" and g.n > 4096:
             continue

@@ -1,0 +1,63 @@
+"""``repro``: the BLEST reproduction's stable public surface.
+
+Everything an application needs lives at this level — graph construction,
+the static preparation pipeline, the serving tier (sessions, the
+multi-tenant manager, the async request queue), streaming edge updates,
+and the typed error hierarchy::
+
+    import repro
+
+    g = repro.Graph.from_edges_like(...)          # or repro.from_edges(...)
+    prepared = repro.prepare(g, options=repro.PrepareOptions(sigma=8))
+
+    mgr = repro.GraphSessionManager(verify_fraction=0.05)
+    mgr.open_session("social", g, tenant="acme", max_batch=8)
+    queue = repro.RequestQueue(mgr)
+    fut = queue.submit("social", src=42, tenant="acme", deadline_s=0.5)
+    queue.drain()
+    levels = fut.result()
+
+    mgr.update_edges("social", inserts=[(10, 99)], tenant="acme")
+
+Deep module paths (``repro.core.policy``, ``repro.serve.queue``, ...)
+remain importable but are NOT covered by the API-surface snapshot test
+(``tests/test_api_surface.py``) — only the names re-exported here, plus
+their signatures, are the compatibility contract.
+"""
+from repro.core.bvss_delta import UpdateReport, apply_edge_updates
+from repro.core.policy import (PreparedBFS, PrepareOptions, build_problem,
+                               prepare)
+from repro.errors import (AdmissionError, BlestError, ConfigError,
+                          DeadlineExceeded, GraphValidationError,
+                          KernelFaultError, QueueFullError, StaleEpochError)
+from repro.graphs import Graph, from_edges, src_of_edges
+from repro.serve import (NO_FAULTS, DegradedServiceWarning, FaultPlan,
+                         GraphSession, GraphSessionManager, RequestQueue,
+                         TenantQuota, TimeoutResult, WaveFuture,
+                         WaveScheduler, session_cost_bytes)
+
+#: the session verb tuple the CI verbs lane enforces oracle parity for
+VERBS = GraphSession.VERBS
+
+__version__ = "0.5.0"
+
+__all__ = [
+    # graphs
+    "Graph", "from_edges", "src_of_edges",
+    # preparation
+    "prepare", "PrepareOptions", "PreparedBFS", "build_problem",
+    # streaming updates
+    "apply_edge_updates", "UpdateReport",
+    # serving
+    "GraphSession", "GraphSessionManager", "TenantQuota", "TimeoutResult",
+    "DegradedServiceWarning", "FaultPlan", "NO_FAULTS",
+    "session_cost_bytes",
+    # async queue
+    "RequestQueue", "WaveFuture", "WaveScheduler",
+    # errors
+    "BlestError", "GraphValidationError", "ConfigError", "AdmissionError",
+    "QueueFullError", "DeadlineExceeded", "StaleEpochError",
+    "KernelFaultError",
+    # misc
+    "VERBS", "__version__",
+]

@@ -21,6 +21,7 @@ run the same fused pipeline under ``shard_map``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -40,6 +41,41 @@ LAZY_UDIV_THRESHOLD = 25_000.0
 # at lab scale the same mechanism is exercised with a proportional
 # threshold (the paper's constant assumes 23M+ vertex graphs)
 LAZY_UDIV_FRACTION = 0.1
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PrepareOptions:
+    """Every static knob of :func:`prepare`, as one typed value.
+
+    The public way to configure a preparation::
+
+        prepare(g, options=PrepareOptions(sigma=4, autotune=True))
+
+    The options ride along on ``PreparedBFS.options`` so downstream
+    maintenance (:func:`repro.core.bvss_delta.apply_edge_updates`) can
+    rebuild engines — or fall back to a full re-``prepare`` — with
+    exactly the knobs the original preparation used.  ``eq=False``:
+    ``weights`` may be an array, and identity is the only comparison a
+    frozen bag of build knobs needs.
+    """
+
+    sigma: int = 8                        # slice width (bits)
+    w: int = 512                          # ordering window
+    seed: int = 0                         # ordering shingle seed
+    lazy_threshold: float | None = None   # lazy-update divergence override
+    order: bool = True                    # run the ordering pre-pass
+    engine: str | None = None             # explicit engine override
+    use_kernels: bool = True              # Pallas kernels vs pure-jnp twins
+    buckets: int = 2                      # queue-width ladder graduations
+    direction: str = "auto"               # push/pull hybrid mode
+    autotune: bool = False                # measure hybrid knobs per backend
+    push_impl: Callable | None = None     # push-kernel fault seam
+    mesh: Mesh | None = None              # row-shard over this device mesh
+    mesh_axis: str = "data"               # row axis name of the mesh
+    weights: np.ndarray | None = None     # per-edge weights of the INPUT g
+
+    def replace(self, **changes) -> "PrepareOptions":
+        return dataclasses.replace(self, **changes)
 
 
 @dataclasses.dataclass
@@ -66,6 +102,19 @@ class PreparedBFS:
     # this prepare() re-used an earlier measurement (zero tuning
     # dispatches) — the memoisation contract tests assert on it
     tile_config: "TileConfig | None" = None
+    # the exact knobs this preparation ran with — incremental maintenance
+    # (core/bvss_delta.py) rebuilds engines / re-prepares through them
+    options: "PrepareOptions | None" = None
+    # epoch version of the prepared state (DESIGN §2.10): bumped by every
+    # apply_edge_updates; in-flight waves keep pulling the buffers of the
+    # epoch they were built against (JAX arrays are immutable)
+    epoch: int = 0
+    # cumulative edges patched since the last FULL build — the staleness
+    # ledger apply_edge_updates charges its budget against
+    stale_edges: int = 0
+    # the UpdateReport of the apply_edge_updates call that produced this
+    # epoch (None on a fresh preparation)
+    last_update: "object | None" = None
     _fn: Callable | None = dataclasses.field(default=None)
 
     def levels(self, src: int) -> np.ndarray:
@@ -91,14 +140,21 @@ BVSS_ENGINES = ("brs", "blest", "blest_lazy")
 
 
 def build_problem(g_ord: Graph, *, sigma: int = 8, mesh: Mesh | None = None,
-                  mesh_axis: str = "data",
-                  bvss=None) -> BlestProblem:
+                  mesh_axis: str = "data", bvss=None,
+                  options: "PrepareOptions | None" = None) -> BlestProblem:
     """Build the device problem for an (already ordered) graph: single-
     device, 1-D row-sharded, or 2-D row × column-sharded depending on the
     mesh — the ONE dispatch every problem-building caller (``prepare``,
     the serving tier's symmetrised problem) routes through.  A 2-D mesh
     (two named axes) partitions by ``(rows, cols) = mesh.devices.shape``;
-    ``mesh_axis`` then names the ROW axis and must be the mesh's first."""
+    ``mesh_axis`` then names the ROW axis and must be the mesh's first.
+    ``options`` supplies ``sigma``/``mesh``/``mesh_axis`` in one value (an
+    explicitly passed kwarg wins — callers like the serving tier's
+    symmetrised problem override the mesh per build)."""
+    if options is not None:
+        sigma = options.sigma if sigma == 8 else sigma
+        mesh = options.mesh if mesh is None else mesh
+        mesh_axis = options.mesh_axis if mesh_axis == "data" else mesh_axis
     if mesh is None:
         if bvss is None:
             bvss = build_bvss(g_ord, sigma=sigma)
@@ -112,41 +168,72 @@ def build_problem(g_ord: Graph, *, sigma: int = 8, mesh: Mesh | None = None,
     return BlestProblem.build_sharded(sb, mesh, mesh_axis)
 
 
-def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
-            lazy_threshold: float | None = None, order: bool = True,
-            engine: str | None = None, use_kernels: bool = True,
-            buckets: int = 2, direction: str = "auto",
-            autotune: bool = False, push_impl: Callable | None = None,
-            mesh: Mesh | None = None, mesh_axis: str = "data",
-            weights=None) -> PreparedBFS:
+#: legal legacy keywords of :func:`prepare` = the PrepareOptions fields
+_PREPARE_FIELDS = tuple(f.name for f in dataclasses.fields(PrepareOptions))
+
+
+def prepare(g: Graph, options: PrepareOptions | None = None,
+            **legacy) -> PreparedBFS:
     """The full static pipeline: (optionally) order, build the BVSS, pick
     the update scheme (or honour an explicit ``engine`` override, e.g. the
     Table-2 ablation variants), build the fused engine.
 
-    ``direction`` selects the push/pull hybrid mode of the BVSS engines
-    (DESIGN §2.8; default "auto" picks per level on device).
-    ``push_impl`` overrides the push kernel — the single-source push
-    fault seam (DESIGN §2.7), threaded through by the serving tier's
-    :class:`~repro.serve.faults.FaultPlan`.
-    ``autotune=True`` measures the hybrid's static knobs — pull-queue
-    ladder, push cap — for this backend and graph class before the engine
-    build (``core.autotune``; memoised, so repeat preparations of the same
-    class perform zero extra timing dispatches) and records the winner on
-    ``PreparedBFS.tile_config``.
+    Configuration comes in as one :class:`PrepareOptions` value::
 
-    ``mesh`` row-shards the problem over ``mesh_axis`` and builds the
-    mesh-native engine (DESIGN §2.4): the policy decisions (ordering,
-    update scheme) still come from the global BVSS, the level loop runs
-    under ``shard_map``.  This is the ONE sharded-prep entry point.
+        prepare(g, options=PrepareOptions(sigma=4, mesh=mesh))
 
-    ``weights`` (one float per CSR edge of ``g``, validated strictly
-    positive) threads an edge-weight plane through the whole pipeline
-    (DESIGN §2.9): the weights ride the ordering permutation alongside the
-    edges and land device-side in the BVSS slice layout
-    (``PreparedBFS.wplane``), ready for the min-plus / weighted verbs."""
-    w_arr = None if weights is None else check_weights(weights, g.m)
-    if order:
-        perm, kind = auto_order(g, sigma=sigma, w=w, seed=seed)
+    The pre-0.5 keyword spelling ``prepare(g, sigma=4, mesh=mesh)`` still
+    works as a thin shim that builds the options for you and emits a
+    ``DeprecationWarning`` — passing both forms at once is a
+    :class:`~repro.errors.ConfigError`.
+
+    Knob semantics (see :class:`PrepareOptions` for the full list):
+
+    * ``direction`` selects the push/pull hybrid mode of the BVSS engines
+      (DESIGN §2.8; default "auto" picks per level on device);
+      ``push_impl`` overrides the push kernel — the single-source push
+      fault seam (DESIGN §2.7), threaded through by the serving tier's
+      :class:`~repro.serve.faults.FaultPlan`.
+    * ``autotune=True`` measures the hybrid's static knobs — pull-queue
+      ladder, push cap — for this backend and graph class before the
+      engine build (``core.autotune``; memoised, so repeat preparations
+      of the same class perform zero extra timing dispatches) and records
+      the winner on ``PreparedBFS.tile_config``.
+    * ``mesh`` row-shards the problem over ``mesh_axis`` and builds the
+      mesh-native engine (DESIGN §2.4): the policy decisions (ordering,
+      update scheme) still come from the global BVSS, the level loop runs
+      under ``shard_map``.  This is the ONE sharded-prep entry point.
+    * ``weights`` (one float per CSR edge of ``g``, validated strictly
+      positive) threads an edge-weight plane through the whole pipeline
+      (DESIGN §2.9): the weights ride the ordering permutation alongside
+      the edges and land device-side in the BVSS slice layout
+      (``PreparedBFS.wplane``), ready for the min-plus / weighted verbs.
+
+    The returned :class:`PreparedBFS` starts at ``epoch 0``; streaming
+    edge updates evolve it through
+    :func:`repro.core.bvss_delta.apply_edge_updates` (DESIGN §2.10)."""
+    if legacy:
+        unknown = sorted(set(legacy) - set(_PREPARE_FIELDS))
+        if unknown:
+            raise TypeError(
+                f"prepare() got unexpected keyword arguments {unknown} "
+                f"(valid PrepareOptions fields: {list(_PREPARE_FIELDS)})")
+        if options is not None:
+            raise ConfigError(
+                "prepare() takes EITHER options=PrepareOptions(...) or the "
+                "deprecated per-knob keywords, not both — fold "
+                f"{sorted(legacy)} into the options value")
+        warnings.warn(
+            "prepare(g, sigma=..., w=..., ...) keywords are deprecated; "
+            "pass prepare(g, options=PrepareOptions(...)) instead",
+            DeprecationWarning, stacklevel=2)
+        options = PrepareOptions(**legacy)
+    elif options is None:
+        options = PrepareOptions()
+    o = options
+    w_arr = None if o.weights is None else check_weights(o.weights, g.m)
+    if o.order:
+        perm, kind = auto_order(g, sigma=o.sigma, w=o.w, seed=o.seed)
         g_ord = g.permute_fast(perm)
     else:
         perm, kind = np.arange(g.n, dtype=np.int64), "natural"
@@ -155,7 +242,7 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
     inv[perm] = np.arange(g.n)
     w_ord = None
     if w_arr is not None:
-        if order:
+        if o.order:
             # permute_fast re-sorts the relabelled edges by (src·n + dst)
             # key; simple-graph keys are unique, so a stable argsort maps
             # each ordered edge back to its original weight
@@ -165,18 +252,18 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             w_ord = w_arr[np.argsort(keys, kind="stable")]
         else:
             w_ord = w_arr
-    bvss = build_bvss(g_ord, sigma=sigma)
-    engine_name = engine if engine is not None else \
-        choose_update_scheme(bvss, threshold=lazy_threshold)
+    bvss = build_bvss(g_ord, sigma=o.sigma)
+    engine_name = o.engine if o.engine is not None else \
+        choose_update_scheme(bvss, threshold=o.lazy_threshold)
     wplane = None
-    if mesh is not None:
+    if o.mesh is not None:
         if engine_name not in BVSS_ENGINES:
             raise ValueError(
                 f"mesh-native prepare supports the BVSS engines "
                 f"{BVSS_ENGINES}, not {engine_name!r} (the CSR/dense "
                 f"baselines have no row-sharded representation)")
         from repro.distributed.bfs_dist import mesh_is_2d
-        if w_ord is not None and mesh_is_2d(mesh):
+        if w_ord is not None and mesh_is_2d(o.mesh):
             raise ConfigError(
                 "edge weights are not supported on a 2-D (row × column) "
                 "mesh yet — the weighted verbs ship 1-D row-sharded "
@@ -184,15 +271,15 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
         if w_ord is not None:
             # build the sharded BVSS once and derive both the problem and
             # the aligned per-shard weight planes from it
-            sb = build_sharded_bvss(g_ord, mesh.shape[mesh_axis],
-                                    sigma=sigma)
-            problem = BlestProblem.build_sharded(sb, mesh, mesh_axis)
+            sb = build_sharded_bvss(g_ord, o.mesh.shape[o.mesh_axis],
+                                    sigma=o.sigma)
+            problem = BlestProblem.build_sharded(sb, o.mesh, o.mesh_axis)
             wplane = weight_plane_to_device(
-                build_sharded_weight_plane(g_ord, w_ord, sb), mesh,
-                mesh_axis)
+                build_sharded_weight_plane(g_ord, w_ord, sb), o.mesh,
+                o.mesh_axis)
         else:
-            problem = build_problem(g_ord, sigma=sigma, mesh=mesh,
-                                    mesh_axis=mesh_axis)
+            problem = build_problem(g_ord, sigma=o.sigma, mesh=o.mesh,
+                                    mesh_axis=o.mesh_axis)
     else:
         # only BVSS-consuming single-source engines need the device upload;
         # the host bvss alone backs the stats printouts and the policy
@@ -200,22 +287,22 @@ def prepare(g: Graph, *, sigma: int = 8, w: int = 512, seed: int = 0,
             else None
         if w_ord is not None:
             wplane = weight_plane_to_device(
-                build_weight_plane(g_ord, w_ord, sigma=sigma))
+                build_weight_plane(g_ord, w_ord, sigma=o.sigma))
     tile_config: TileConfig | None = None
     tuned_kwargs: dict = {}
-    if autotune and engine_name in BVSS_ENGINES and problem is not None:
+    if o.autotune and engine_name in BVSS_ENGINES and problem is not None:
         from repro.core.autotune import tune
-        tile_config = tune(problem, use_kernels=use_kernels)
+        tile_config = tune(problem, use_kernels=o.use_kernels)
         tuned_kwargs = tile_config.engine_kwargs()
     fn = make_engine(g_ord, engine_name, bvss=bvss, problem=problem,
-                     use_kernels=use_kernels, buckets=buckets,
-                     direction=direction, push_impl=push_impl,
+                     use_kernels=o.use_kernels, buckets=o.buckets,
+                     direction=o.direction, push_impl=o.push_impl,
                      **tuned_kwargs)
     return PreparedBFS(graph=g_ord, perm=perm, inv=inv, ordering=kind,
                        engine_name=engine_name, bvss=bvss, problem=problem,
                        update_divergence=bvss.update_divergence(),
-                       mesh=mesh, weights=w_ord, wplane=wplane,
-                       tile_config=tile_config, _fn=fn)
+                       mesh=o.mesh, weights=w_ord, wplane=wplane,
+                       tile_config=tile_config, options=o, _fn=fn)
 
 
 def parents_from_levels(g: Graph, levels: np.ndarray) -> np.ndarray:

@@ -13,7 +13,9 @@ Hierarchy::
     ├── GraphValidationError   malformed graph / out-of-range source ids
     ├── ConfigError            unusable engine/tuning configuration
     ├── AdmissionError         multi-tenant quota or memory budget refusal
+    │   └── QueueFullError     async request queue refused a submission
     ├── DeadlineExceeded       a query outlived its per-request budget
+    ├── StaleEpochError        edge updates raced a newer prepared epoch
     └── KernelFaultError       device result failed an oracle cross-check
 
 ``DeadlineExceeded`` is only *raised* when a caller demands a complete
@@ -54,8 +56,34 @@ class AdmissionError(BlestError):
         self.reason = reason
 
 
+class QueueFullError(AdmissionError):
+    """The async request queue refused a submission (DESIGN §2.10).
+
+    A bounded queue rejects at ingress instead of buffering an unbounded
+    backlog — the same fail-fast contract as :class:`AdmissionError`,
+    which this specialises so queue callers can catch it separately.
+    ``reason`` is ``"capacity"`` (global queue depth) or
+    ``"tenant-backlog"`` (one tenant's pending share)."""
+
+
 class DeadlineExceeded(BlestError, TimeoutError):
     """A query exceeded its per-request deadline."""
+
+
+class StaleEpochError(BlestError):
+    """An edge-update batch was applied against a superseded epoch.
+
+    :func:`repro.core.bvss_delta.apply_edge_updates` is a functional
+    compare-and-swap: callers that captured ``prepared.epoch`` before
+    computing a delta pass it as ``expected_epoch``, and a concurrent
+    update that bumped the epoch in between raises this instead of
+    silently merging onto the wrong base.  Carries the ``expected`` and
+    ``actual`` epochs."""
+
+    def __init__(self, message: str, *, expected: int, actual: int):
+        super().__init__(message)
+        self.expected = expected
+        self.actual = actual
 
 
 class KernelFaultError(BlestError):

@@ -60,15 +60,16 @@ def main(argv=None):
     mesh = ensure_devices(args.devices, argv,
                           module="repro.launch.analytics")
     g = build_graph(args.graph, args.scale, args.seed)
-    from repro.serve import GraphSession
+    from repro import GraphSession, PrepareOptions
     weights = None
     if "sssp" in what:
         # dyadic rationals: f32 path sums are exact, so --verify can
         # demand bit-parity with the float64 Dijkstra oracle
         wrng = np.random.default_rng(args.seed + 1)
         weights = (wrng.integers(1, 128, g.m) / 32.0).astype(np.float32)
-    sess = GraphSession(g, max_batch=args.max_batch, w=512, seed=args.seed,
-                        mesh=mesh, weights=weights)
+    sess = GraphSession(g, max_batch=args.max_batch,
+                        options=PrepareOptions(w=512, seed=args.seed,
+                                               mesh=mesh, weights=weights))
     print(f"[analytics] graph={args.graph} n={g.n} m={g.m} "
           f"ordering={sess.ordering} engine={sess.engine_name} "
           f"max_batch={sess.max_batch}"
@@ -94,7 +95,7 @@ def main(argv=None):
     if "eccentricity" in what:
         srcs = rng.integers(0, g.n, args.sources)
         t0 = time.time()
-        eccs = sess.eccentricity(srcs)
+        eccs = sess.eccentricity_batch(srcs)
         dt = time.time() - t0
         line = (f"[analytics] eccentricity: {len(srcs)} sources, "
                 f"range [{eccs.min()}, {eccs.max()}] in {dt * 1e3:.1f}ms")
@@ -137,7 +138,7 @@ def main(argv=None):
     if "closeness" in what:
         srcs = rng.integers(0, g.n, args.sources)
         t0 = time.time()
-        cc = sess.closeness(srcs)
+        cc = sess.closeness_batch(srcs)
         dt = time.time() - t0
         line = (f"[analytics] closeness: {len(srcs)} sources, "
                 f"range [{cc.min():.4f}, {cc.max():.4f}] "

@@ -29,9 +29,10 @@ import time
 
 import numpy as np
 
+from repro import PrepareOptions, prepare
 from repro.core import reference_bfs
 from repro.core.ordering import social_like_report
-from repro.core.policy import BVSS_ENGINES, prepare
+from repro.core.policy import BVSS_ENGINES
 from repro.errors import KernelFaultError
 from repro.graphs import generators as gen
 
@@ -89,12 +90,14 @@ def ensure_devices(n: int, argv, *, module: str = "repro.launch.bfs"
 def run_service(g, mesh, args) -> None:
     """--service: hardened wave-batched serving through the multi-tenant
     GraphSessionManager (admission, deadlines, verify-mode sampling)."""
-    from repro.serve import GraphSessionManager, TimeoutResult
+    from repro import GraphSessionManager, TimeoutResult
     variant = ENGINE_VARIANTS[args.engine]
     mgr = GraphSessionManager(verify_fraction=args.verify_fraction)
     sess = mgr.open_session(
-        "cli", g, max_batch=args.max_batch, w=512, seed=args.seed,
-        order=variant["order"], engine=variant["engine"], mesh=mesh)
+        "cli", g, max_batch=args.max_batch,
+        options=PrepareOptions(w=512, seed=args.seed,
+                               order=variant["order"],
+                               engine=variant["engine"], mesh=mesh))
     print(f"[bfs] session up: ordering={sess.ordering} "
           f"engine={sess.engine_name} "
           f"compression={sess.bvss.compression_ratio():.3f} "
@@ -105,9 +108,25 @@ def run_service(g, mesh, args) -> None:
     queries = [int(q) for q in rng.integers(0, g.n, args.sources)]
     sess.levels(queries[0])                      # warm both paths
     sess.levels_batch(queries[: min(2, len(queries))])
-    t0 = time.time()
-    lvs = mgr.levels_batch("cli", queries, deadline_s=args.deadline_s)
-    t_wave = time.time() - t0
+    if args.queue:
+        # async path (DESIGN §2.10): non-blocking submits coalesce into
+        # shared waves; futures resolve as each column converges
+        from repro import RequestQueue
+        q = RequestQueue(mgr)
+        t0 = time.time()
+        futs = [q.submit("cli", s, deadline_s=args.deadline_s)
+                for s in queries]
+        q.drain()
+        lvs = [f.result(0) for f in futs]
+        t_wave = time.time() - t0
+        qs = q.stats()
+        print(f"[bfs] queue: {qs['completed']} completed over "
+              f"{qs['waves']} waves, {qs['coalesced']} coalesced "
+              f"mid-flight, {qs['timeouts']} deadline harvests")
+    else:
+        t0 = time.time()
+        lvs = mgr.levels_batch("cli", queries, deadline_s=args.deadline_s)
+        t_wave = time.time() - t0
     t0 = time.time()
     seq = [sess.levels(q) for q in queries]
     t_seq = time.time() - t0
@@ -149,6 +168,10 @@ def main(argv=None):
                          "GraphSession instead of sequential BFS runs")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="wave slot-pool width for --service")
+    ap.add_argument("--queue", action="store_true",
+                    help="--service via the async RequestQueue: "
+                         "non-blocking submits, futures, mid-flight "
+                         "wave coalescing (DESIGN §2.10)")
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="--service per-call deadline: queries exceeding "
                          "it return partial TimeoutResults instead of "
@@ -180,8 +203,9 @@ def main(argv=None):
     if mesh is not None and variant["engine"] not in (None, *BVSS_ENGINES):
         ap.error(f"--devices requires a BVSS engine, not {args.engine}")
     t0 = time.time()
-    prep = prepare(g, w=512, seed=args.seed, order=variant["order"],
-                   engine=variant["engine"], mesh=mesh)
+    prep = prepare(g, options=PrepareOptions(
+        w=512, seed=args.seed, order=variant["order"],
+        engine=variant["engine"], mesh=mesh))
     prep_s = time.time() - t0
     if mesh is not None:
         pb = prep.problem

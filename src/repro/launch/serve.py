@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --requests 16 --max-new 12
+
+The LM tier (``Request``/``ServeEngine``) is deliberately OUTSIDE the
+graph façade contract (``import repro``; see ``tests/test_api_surface.py``)
+— the stable surface covers the graph-analytics serving stack; this
+launcher reaches into ``repro.serve`` for the text-generation half.
 """
 from __future__ import annotations
 

@@ -1,10 +1,12 @@
 from .engine import Completion, Request, ServeEngine
 from .faults import NO_FAULTS, FaultPlan
 from .graph_session import GraphSession
+from .queue import RequestQueue, WaveFuture, WaveScheduler
 from .session_manager import (DegradedServiceWarning, GraphSessionManager,
                               TenantQuota, TimeoutResult,
                               session_cost_bytes)
 
 __all__ = ["Completion", "Request", "ServeEngine", "GraphSession",
            "FaultPlan", "NO_FAULTS", "GraphSessionManager", "TenantQuota",
-           "TimeoutResult", "DegradedServiceWarning", "session_cost_bytes"]
+           "TimeoutResult", "DegradedServiceWarning", "session_cost_bytes",
+           "RequestQueue", "WaveFuture", "WaveScheduler"]

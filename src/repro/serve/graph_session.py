@@ -44,6 +44,7 @@ anywhere.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from typing import Sequence
 
@@ -57,11 +58,20 @@ from repro.analytics import (ExtremesReport, betweenness_centrality,
                              sssp_distances)
 from repro.core.bfs import BlestProblem
 from repro.core.multi_source import drive_wave, make_ms_engine
-from repro.core.policy import PreparedBFS, prepare
-from repro.errors import check_source, check_sources
+from repro.core.policy import PreparedBFS, PrepareOptions, prepare
+from repro.errors import ConfigError, check_source, check_sources
 from repro.graphs import Graph
 from repro.kernels.ref import normalize_labels
 from repro.serve.faults import NO_FAULTS, FaultPlan
+
+
+def _alias_warning(old: str, new: str) -> None:
+    warnings.warn(
+        f"GraphSession.{old}() is a deprecated alias; call "
+        f"GraphSession.{new}() (same semantics, the 0.5 verb convention: "
+        f"singular verbs take src, batched verbs take sources, sampling "
+        f"verbs take k with keyword-only seed)",
+        DeprecationWarning, stacklevel=3)
 
 
 class GraphSession:
@@ -81,7 +91,8 @@ class GraphSession:
     VERBS = ("levels", "components", "eccentricity", "betweenness",
              "closeness", "sssp", "pagerank")
 
-    def __init__(self, g: Graph, *, max_batch: int = 8, sigma: int = 8,
+    def __init__(self, g: Graph, *, max_batch: int = 8,
+                 options: PrepareOptions | None = None, sigma: int = 8,
                  w: int = 512, seed: int = 0,
                  lazy_threshold: float | None = None, order: bool = True,
                  engine: str | None = None, use_kernel: bool = True,
@@ -90,18 +101,41 @@ class GraphSession:
                  mesh_axis: str = "data", weights=None,
                  fault_plan: FaultPlan | None = None):
         t0 = time.time()
+        if options is None:
+            options = PrepareOptions(
+                sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
+                order=order, engine=engine, use_kernels=use_kernel,
+                direction=direction, autotune=autotune, mesh=mesh,
+                mesh_axis=mesh_axis, weights=weights)
+        elif (sigma, w, seed, lazy_threshold, order, engine, use_kernel,
+              direction, autotune, mesh, mesh_axis, weights) != \
+                (8, 512, 0, None, True, None, True, "auto", False, None,
+                 "data", None):
+            raise ConfigError(
+                "GraphSession takes EITHER options=PrepareOptions(...) or "
+                "the per-knob keywords, not both")
         # fault seams (DESIGN §2.7): a FaultPlan's wrappers are baked into
         # every engine this session builds — including the single-source
         # engine's push seam, so they must exist BEFORE prepare(); the
         # default plan injects nothing and adds nothing to the trace
         self.fault_plan = fault_plan if fault_plan is not None else NO_FAULTS
-        self._seams = self.fault_plan.engine_overrides(use_kernel=use_kernel)
-        self.prepared: PreparedBFS = prepare(
-            g, sigma=sigma, w=w, seed=seed, lazy_threshold=lazy_threshold,
-            order=order, engine=engine, use_kernels=use_kernel,
-            direction=direction, autotune=autotune,
-            push_impl=self._seams.get("push_impl"),
-            mesh=mesh, mesh_axis=mesh_axis, weights=weights)
+        self._seams = self.fault_plan.engine_overrides(
+            use_kernel=options.use_kernels)
+        if self._seams.get("push_impl") is not None:
+            options = options.replace(push_impl=self._seams["push_impl"])
+        self.options = options
+        self.prepared: PreparedBFS = prepare(g, options=options)
+        self.max_batch = int(max_batch)
+        self._use_kernel = options.use_kernels
+        self._direction = options.direction
+        self._mesh_axis = options.mesh_axis
+        self.max_steps = max_steps
+        self._bind_prepared()
+        self.preprocess_s = time.time() - t0
+
+    def _bind_prepared(self) -> None:
+        """(Re)build everything derived from ``self.prepared`` — called at
+        construction and after every :meth:`update_edges` epoch swap."""
         if self.prepared.problem is not None:
             self._problem = self.prepared.problem
         else:
@@ -109,18 +143,35 @@ class GraphSession:
             # device BVSS; keep it session-local so PreparedBFS keeps its
             # "problem is None for non-BVSS engines" invariant
             self._problem = BlestProblem.build(self.prepared.bvss)
-        self.max_batch = int(max_batch)
-        self._use_kernel = use_kernel
-        self._direction = direction
-        self._mesh_axis = mesh_axis
         self._ms = make_ms_engine(self._problem, self.max_batch,
-                                  use_kernel=use_kernel,
-                                  direction=direction, **self._seams)
+                                  use_kernel=self._use_kernel,
+                                  direction=self._direction, **self._seams)
         # analytics problems/engines, built on first use and cached so
         # repeat queries never recompile (DESIGN §2.6)
         self._analytics_cache: dict = {}
-        self.max_steps = max_steps
-        self.preprocess_s = time.time() - t0
+
+    def update_edges(self, inserts=(), deletes=(), *, insert_weights=None,
+                     expected_epoch: int | None = None,
+                     staleness_budget: int | None = None):
+        """Apply a streaming edge-update batch (caller ids) and swap the
+        session to the next epoch (DESIGN §2.10); returns the
+        :class:`~repro.core.bvss_delta.UpdateReport`.
+
+        The swap is atomic from the session's point of view: waves in
+        flight keep the OLD prepared state (its device buffers are never
+        mutated) and finish on the old epoch; queries issued after this
+        returns see the new one.  Derived engines — the wave pool, cached
+        analytics twins — rebuild lazily against the new epoch."""
+        from repro.core.bvss_delta import apply_edge_updates
+        after = apply_edge_updates(
+            self.prepared, inserts, deletes, insert_weights=insert_weights,
+            expected_epoch=expected_epoch,
+            staleness_budget=staleness_budget)
+        if after is self.prepared:      # effective no-op: same epoch
+            return None
+        self.prepared = after
+        self._bind_prepared()
+        return after.last_update
 
     # ------------------------------------------------------------------
     # prepared-state passthrough
@@ -152,6 +203,11 @@ class GraphSession:
     @property
     def mesh(self) -> Mesh | None:
         return self.prepared.mesh
+
+    @property
+    def epoch(self) -> int:
+        """Edge-update epoch of the prepared state (DESIGN §2.10)."""
+        return self.prepared.epoch
 
     # ------------------------------------------------------------------
     # queries
@@ -224,8 +280,8 @@ class GraphSession:
     # ------------------------------------------------------------------
     # centrality
     # ------------------------------------------------------------------
-    def closeness(self, sources: Sequence[int] | None = None, *,
-                  wf_improved: bool = False) -> np.ndarray:
+    def closeness_batch(self, sources: Sequence[int] | None = None, *,
+                        wf_improved: bool = False) -> np.ndarray:
         """Closeness centrality (caller ids throughout): one score per
         given source, or — with ``sources=None`` — the EXACT variant, one
         score per vertex in caller-id order.  Fixed cohorts, so this
@@ -244,13 +300,25 @@ class GraphSession:
                                     wf_improved=wf_improved,
                                     levels_fn=self._dir_wave(width))
 
-    def centrality_sample(self, n_sources: int, seed: int = 0
-                          ) -> tuple[np.ndarray, np.ndarray]:
-        """Sample ``n_sources`` vertices (caller ids) and return
+    def closeness(self, sources: Sequence[int] | None = None, *,
+                  wf_improved: bool = False) -> np.ndarray:
+        """Deprecated alias of :meth:`closeness_batch`."""
+        _alias_warning("closeness", "closeness_batch")
+        return self.closeness_batch(sources, wf_improved=wf_improved)
+
+    def closeness_sample(self, k: int, *, seed: int = 0
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """Sample ``k`` vertices (caller ids) and return
         ``(sources, closeness scores)`` aligned index-by-index."""
         rng = np.random.default_rng(seed)
-        srcs = rng.integers(0, self.n, n_sources)
-        return srcs, self.closeness(srcs)
+        srcs = rng.integers(0, self.n, int(k))
+        return srcs, self.closeness_batch(srcs)
+
+    def centrality_sample(self, n_sources: int, seed: int = 0
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Deprecated alias of :meth:`closeness_sample`."""
+        _alias_warning("centrality_sample", "closeness_sample")
+        return self.closeness_sample(n_sources, seed=seed)
 
     # ------------------------------------------------------------------
     # analytics query kinds (DESIGN §2.6)
@@ -331,7 +399,7 @@ class GraphSession:
                                       first_flood=self._sym_sss())
         return normalize_labels(labels[self.perm])
 
-    def eccentricity(self, sources: Sequence[int]) -> np.ndarray:
+    def eccentricity_batch(self, sources: Sequence[int]) -> np.ndarray:
         """Eccentricity of each queried vertex (caller ids in, one value
         per source out), batched through the fused multi-source engine on
         the symmetrised problem."""
@@ -343,6 +411,11 @@ class GraphSession:
         return eccentricities(internal, problem=self._sym_problem(),
                               batch=width, use_kernel=self._use_kernel,
                               levels_fn=self._sym_wave(width))
+
+    def eccentricity(self, sources: Sequence[int]) -> np.ndarray:
+        """Deprecated alias of :meth:`eccentricity_batch`."""
+        _alias_warning("eccentricity", "eccentricity_batch")
+        return self.eccentricity_batch(sources)
 
     def extremes(self, *, max_evals: int | None = None) -> ExtremesReport:
         """iFUB diameter / radius bounds of the largest component
@@ -366,7 +439,7 @@ class GraphSession:
             periphery=int(inv[rep.periphery]),
             n_ecc_evals=rep.n_ecc_evals)
 
-    def betweenness(self, sources: Sequence[int]) -> np.ndarray:
+    def betweenness_batch(self, sources: Sequence[int]) -> np.ndarray:
         """Partial Brandes betweenness Σ_{s∈sources} δ_s(v) on the
         directed graph (unnormalised, endpoints excluded): one score per
         vertex, caller ids throughout.  Forward phase = the fused wave
@@ -386,15 +459,20 @@ class GraphSession:
                                     bc_fn=self._bc_fn(width))
         return bc[self.perm]
 
-    def betweenness_sample(self, k_sources: int, seed: int = 0
+    def betweenness(self, sources: Sequence[int]) -> np.ndarray:
+        """Deprecated alias of :meth:`betweenness_batch`."""
+        _alias_warning("betweenness", "betweenness_batch")
+        return self.betweenness_batch(sources)
+
+    def betweenness_sample(self, k: int, *, seed: int = 0
                            ) -> tuple[np.ndarray, np.ndarray]:
-        """Sample ``k_sources`` distinct pivots (caller ids) and return
+        """Sample ``k`` distinct pivots (caller ids) and return
         ``(sources, partial betweenness per vertex)`` — the standard
         sampled-source Brandes estimator."""
         rng = np.random.default_rng(seed)
-        k = min(int(k_sources), self.n)
+        k = min(int(k), self.n)
         srcs = rng.choice(self.n, size=k, replace=False)
-        return srcs, self.betweenness(srcs)
+        return srcs, self.betweenness_batch(srcs)
 
     # ------------------------------------------------------------------
     # weighted verbs (DESIGN §2.9)

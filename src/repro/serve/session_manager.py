@@ -253,6 +253,40 @@ class GraphSessionManager:
         return name in self._sessions
 
     # ------------------------------------------------------------------
+    # streaming updates (DESIGN §2.10)
+    # ------------------------------------------------------------------
+    def update_edges(self, name: str, inserts=(), deletes=(), *,
+                     tenant: str = "default", insert_weights=None,
+                     expected_epoch: int | None = None,
+                     staleness_budget: int | None = None):
+        """Apply a streaming edge-update batch to session ``name`` and
+        swap it to the next epoch; returns the
+        :class:`~repro.core.bvss_delta.UpdateReport` (``None`` for an
+        effective no-op).  The manager's oracle copy of the graph and the
+        session's byte cost follow the update, so verify-mode sampling
+        and the LRU budget stay truthful about the mutated graph."""
+        rec = self._get(name, tenant)
+        report = rec.session.update_edges(
+            inserts, deletes, insert_weights=insert_weights,
+            expected_epoch=expected_epoch,
+            staleness_budget=staleness_budget)
+        if report is None:
+            return None
+        # refresh the ORIGINAL-id oracle graph from the mutated session
+        from repro.graphs import from_edges, src_of_edges
+        p = rec.session.prepared
+        src_o = p.inv[src_of_edges(p.graph).astype(np.int64)]
+        dst_o = p.inv[p.graph.indices.astype(np.int64)]
+        rec.graph = from_edges(p.graph.n, src_o, dst_o, dedup=True,
+                               drop_loops=False)
+        rec.cost_bytes = session_cost_bytes(rec.session)
+        self._event("update-edges", name=name, tenant=tenant,
+                    path=report.path, epoch=report.epoch,
+                    n_inserted=report.n_inserted,
+                    n_deleted=report.n_deleted)
+        return report
+
+    # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------
     def levels(self, name: str, src: int, *, tenant: str = "default",
@@ -355,6 +389,26 @@ class GraphSessionManager:
     # ------------------------------------------------------------------
     # verification / quarantine / degradation
     # ------------------------------------------------------------------
+    def verify_wave(self, name: str, sources: Sequence[int],
+                    results: Sequence[np.ndarray], *,
+                    tenant: str = "default") -> list[np.ndarray] | None:
+        """Public verify hook for EXTERNAL wave drivers (the async
+        :class:`~repro.serve.queue.RequestQueue`): cross-check a completed
+        batch under this manager's ``verify_fraction`` sampling policy.
+
+        Returns ``None`` when the batch passes (or verification is off).
+        On a divergence the session is quarantined and the WHOLE batch is
+        re-served on the reference path — the returned list (one caller-id
+        level array per source) is what the driver must hand out instead
+        of the device results."""
+        rec = self._get(name, tenant)
+        try:
+            self._verify(rec, list(sources), list(results))
+        except KernelFaultError as e:
+            self._quarantine(rec, str(e))
+            return self._serve_reference(rec, list(sources))
+        return None
+
     def _verify(self, rec: _SessionRecord, srcs: list[int],
                 outs: list[np.ndarray | None]) -> None:
         """Cross-check a sampled fraction of completed results against
@@ -406,7 +460,7 @@ class GraphSessionManager:
         rec = self._get(name, tenant)
         srcs = check_sources(sources, rec.session.n)
         if not rec.quarantined:
-            bc = rec.session.betweenness(srcs)
+            bc = rec.session.betweenness_batch(srcs)
             if np.isfinite(bc).all():
                 return bc
             self._quarantine(
@@ -424,7 +478,7 @@ class GraphSessionManager:
         srcs = None if sources is None else \
             check_sources(sources, rec.session.n)
         if not rec.quarantined:
-            cc = rec.session.closeness(srcs, wf_improved=wf_improved)
+            cc = rec.session.closeness_batch(srcs, wf_improved=wf_improved)
             if np.isfinite(cc).all():
                 return cc
             self._quarantine(

@@ -1,0 +1,118 @@
+"""API-surface snapshot: the ``repro`` façade is a compatibility contract.
+
+``tests/api_surface.txt`` is the checked-in rendering of every name the
+façade exports — kind, base classes, and the full parameter shape of every
+public callable (including public methods one level deep).  The CI lint
+job runs this test, so an accidental export, removal, or signature change
+fails fast; a DELIBERATE change regenerates the snapshot:
+
+    PYTHONPATH=src python -m tests.test_api_surface --update
+
+The rendering is deliberately annotation- and default-VALUE-free (names,
+order, and parameter kinds only) so it is stable across Python versions —
+the tier-1 matrix runs 3.10 and 3.12 against the same snapshot.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import sys
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "api_surface.txt")
+
+
+def _params(fn) -> str:
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return "(...)"
+    parts = []
+    for p in sig.parameters.values():
+        if p.name == "self":
+            continue
+        if p.kind is inspect.Parameter.VAR_POSITIONAL:
+            parts.append(f"*{p.name}")
+            continue
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            parts.append(f"**{p.name}")
+            continue
+        if (p.kind is inspect.Parameter.KEYWORD_ONLY
+                and (not parts or not parts[-1].startswith("*"))
+                and "*" not in parts):
+            parts.append("*")
+        parts.append(p.name + ("=?" if p.default is not p.empty else ""))
+    return "(" + ", ".join(parts) + ")"
+
+
+def _class_lines(name: str, cls: type) -> list[str]:
+    bases = [b.__name__ for b in cls.__bases__ if b is not object]
+    head = f"{name}: class" + (f"({', '.join(bases)})" if bases else "")
+    lines = [head + " " + _params(cls)]
+    for attr in sorted(vars(cls)):
+        if attr.startswith("_"):
+            continue
+        member = inspect.getattr_static(cls, attr)
+        if isinstance(member, (staticmethod, classmethod)):
+            member = member.__func__
+        if isinstance(member, property):
+            lines.append(f"{name}.{attr}: property")
+        elif callable(member):
+            lines.append(f"{name}.{attr}: method {_params(member)}")
+    return lines
+
+
+def render_surface() -> str:
+    import repro
+    lines = [
+        "# repro public API surface (names + parameter shapes).",
+        "# Regenerate DELIBERATELY after an intended change:",
+        "#   PYTHONPATH=src python -m tests.test_api_surface --update",
+    ]
+    for name in sorted(repro.__all__):
+        obj = getattr(repro, name)
+        if name == "__version__":
+            lines.append("__version__: str")
+        elif name == "VERBS":
+            lines.append(f"VERBS: tuple {tuple(obj)}")
+        elif inspect.isclass(obj):
+            lines.extend(_class_lines(name, obj))
+        elif callable(obj):
+            lines.append(f"{name}: function {_params(obj)}")
+        else:
+            lines.append(f"{name}: {type(obj).__name__}")
+    return "\n".join(lines) + "\n"
+
+
+def test_facade_exports_resolve():
+    import repro
+    for name in repro.__all__:
+        assert getattr(repro, name, None) is not None, name
+    assert len(set(repro.__all__)) == len(repro.__all__)
+
+
+def test_api_surface_matches_snapshot():
+    with open(SNAPSHOT) as f:
+        want = f.read()
+    got = render_surface()
+    assert got == want, (
+        "the repro façade's API surface diverged from "
+        "tests/api_surface.txt — if the change is intended, regenerate "
+        "with: PYTHONPATH=src python -m tests.test_api_surface --update\n"
+        + "\n".join(_diff(want, got)))
+
+
+def _diff(want: str, got: str) -> list[str]:
+    import difflib
+    return list(difflib.unified_diff(want.splitlines(), got.splitlines(),
+                                     "api_surface.txt", "current",
+                                     lineterm="", n=1))[:40]
+
+
+if __name__ == "__main__":
+    if "--update" in sys.argv:
+        with open(SNAPSHOT, "w") as f:
+            f.write(render_surface())
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(render_surface(), end="")

@@ -1,0 +1,293 @@
+"""Incremental BVSS maintenance (core/bvss_delta.py, DESIGN §2.10).
+
+The contract under test: ``apply_edge_updates`` produces a PreparedBFS
+whose BVSS is BIT-IDENTICAL to a fresh build of the mutated graph under
+the same ordering (masks, row_ids, occupancy), whose weight plane matches
+the merged weights, whose epoch advances by exactly one — and whose OLD
+epoch's arrays are untouched, so in-flight waves finish on consistent
+state.  Fallbacks: the staleness ledger forces a full re-``prepare`` past
+the budget; ``expected_epoch`` turns concurrent updates into a typed
+``StaleEpochError`` instead of a lost update.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import (GraphValidationError, PrepareOptions, StaleEpochError,
+                   apply_edge_updates, from_edges, prepare)
+from repro.core import build_bvss, reference_bfs
+from repro.core.bvss_delta import STALENESS_FRACTION
+from repro.errors import ConfigError
+from repro.graphs import generators as gen, src_of_edges
+from tests.conftest import require_devices
+
+INF = np.iinfo(np.int32).max
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.rmat(7, 8, seed=21)
+
+
+def _prep(g, **opts):
+    return prepare(g, options=PrepareOptions(w=512, seed=0, **opts))
+
+
+def _caller_graph(prep):
+    """The caller-id view of the prepared (ordered) graph."""
+    src_c = prep.inv[src_of_edges(prep.graph)]
+    dst_c = prep.inv[prep.graph.indices]
+    return from_edges(prep.graph.n, src_c, dst_c, dedup=True,
+                      drop_loops=False)
+
+
+def _missing_edge(prep):
+    """Some (a, b) caller-id pair that is NOT an edge of prep.graph."""
+    have = set(zip(prep.inv[src_of_edges(prep.graph)].tolist(),
+                   prep.inv[prep.graph.indices].tolist()))
+    n = prep.graph.n
+    return next((a, b) for a in range(n) for b in range(n)
+                if a != b and (a, b) not in have)
+
+
+def _assert_fresh_build_parity(prep):
+    """prep's BVSS must equal a fresh build of prep.graph bit for bit."""
+    b2 = build_bvss(prep.graph, sigma=prep.bvss.sigma)
+    np.testing.assert_array_equal(prep.bvss.masks, b2.masks)
+    np.testing.assert_array_equal(prep.bvss.row_ids, b2.row_ids)
+    np.testing.assert_array_equal(prep.bvss.real_ptrs, b2.real_ptrs)
+    np.testing.assert_array_equal(prep.bvss.virtual_to_real,
+                                  b2.virtual_to_real)
+    assert prep.bvss.num_slices == b2.num_slices
+    assert prep.bvss.m == b2.m
+
+
+# ---------------------------------------------------------------------------
+# bit-identity on randomized insert/delete sequences
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_sequences_bit_identical(graph, seed):
+    prep = _prep(graph)
+    rng = np.random.default_rng(seed)
+    for round_i in range(4):
+        ins = sorted({(int(a), int(b))
+                      for a, b in rng.integers(0, graph.n, (5, 2))
+                      if a != b})
+        src_c = prep.inv[src_of_edges(prep.graph)]
+        dst_c = prep.inv[prep.graph.indices]
+        pick = rng.choice(len(src_c), size=3, replace=False)
+        dels = sorted({(int(src_c[p]), int(dst_c[p])) for p in pick}
+                      - set(ins))
+        prep = apply_edge_updates(prep, inserts=ins, deletes=dels)
+        assert prep.epoch == round_i + 1
+        assert prep.last_update.path in ("patched", "rebuilt",
+                                         "reprepared")
+        _assert_fresh_build_parity(prep)
+        g_now = _caller_graph(prep)
+        for s in (0, graph.n // 2):
+            np.testing.assert_array_equal(prep.levels(s),
+                                          reference_bfs(g_now, s))
+
+
+def test_insert_makes_vertex_reachable(graph):
+    prep = _prep(graph)
+    lv0 = prep.levels(0)
+    far = int(np.argmax(lv0 == INF))
+    assert lv0[far] == INF
+    prep2 = apply_edge_updates(prep, inserts=[(0, far)])
+    assert prep2.levels(0)[far] == 1
+
+
+def test_delete_disconnects(graph):
+    prep = _prep(graph)
+    # pick a real edge and delete it; the edge count drops by one
+    a = int(src_of_edges(prep.graph)[0])
+    b = int(prep.graph.indices[0])
+    edge = (int(prep.inv[a]), int(prep.inv[b]))
+    prep2 = apply_edge_updates(prep, deletes=[edge])
+    assert prep2.graph.m == prep.graph.m - 1
+    _assert_fresh_build_parity(prep2)
+
+
+# ---------------------------------------------------------------------------
+# epoch versioning
+# ---------------------------------------------------------------------------
+def test_epoch_advances_and_old_arrays_untouched(graph):
+    """Functional updates: epoch N's device masks are NOT mutated by the
+    epoch N+1 patch — an in-flight wave holding the old problem keeps a
+    consistent structure."""
+    prep = _prep(graph)
+    assert prep.epoch == 0
+    old_masks = None
+    if prep.problem is not None:
+        old_masks = np.asarray(prep.problem.dev.masks).copy()
+    old_host_masks = prep.bvss.masks.copy()
+    prep2 = apply_edge_updates(prep, inserts=[_missing_edge(prep)])
+    assert prep2.epoch == 1 and prep.epoch == 0
+    np.testing.assert_array_equal(prep.bvss.masks, old_host_masks)
+    if old_masks is not None:
+        np.testing.assert_array_equal(np.asarray(prep.problem.dev.masks),
+                                      old_masks)
+    # the old prepared still answers on the OLD graph
+    np.testing.assert_array_equal(prep.levels(0),
+                                  reference_bfs(_caller_graph(prep), 0))
+
+
+def test_expected_epoch_cas(graph):
+    prep = _prep(graph)
+    new = _missing_edge(prep)
+    prep2 = apply_edge_updates(prep, inserts=[new], expected_epoch=0)
+    assert prep2.epoch == 1
+    with pytest.raises(StaleEpochError) as ei:
+        apply_edge_updates(prep, inserts=[_missing_edge(prep)],
+                           expected_epoch=1)
+    assert ei.value.expected == 1 and ei.value.actual == 0
+
+
+def test_noop_update_returns_same_object(graph):
+    prep = _prep(graph)
+    # inserting an existing edge of an unweighted prepared is a no-op
+    a = int(prep.inv[src_of_edges(prep.graph)[0]])
+    b = int(prep.inv[prep.graph.indices[0]])
+    assert apply_edge_updates(prep, inserts=[(a, b)]) is prep
+    assert apply_edge_updates(prep) is prep
+
+
+# ---------------------------------------------------------------------------
+# staleness ledger -> full re-prepare
+# ---------------------------------------------------------------------------
+def test_staleness_budget_forces_reprepare(graph):
+    prep = _prep(graph)
+    prep2 = apply_edge_updates(prep, inserts=[_missing_edge(prep)],
+                               staleness_budget=0)
+    assert prep2.last_update.path == "reprepared"
+    assert prep2.stale_edges == 0
+    assert "staleness" in prep2.last_update.reason
+    _assert_fresh_build_parity(prep2)
+    np.testing.assert_array_equal(
+        prep2.levels(0), reference_bfs(_caller_graph(prep2), 0))
+
+
+def test_stale_ledger_accumulates_until_budget(graph):
+    prep = _prep(graph)
+    budget = max(1, int(STALENESS_FRACTION * graph.m))
+    rng = np.random.default_rng(3)
+    while prep.last_update is None or \
+            prep.last_update.path != "reprepared":
+        ins = sorted({(int(a), int(b))
+                      for a, b in rng.integers(0, graph.n, (8, 2))
+                      if a != b})
+        prep = apply_edge_updates(prep, inserts=ins)
+        assert prep.epoch <= 4 * budget, "re-prepare never triggered"
+    assert prep.stale_edges == 0           # ledger reset by the re-prepare
+
+
+# ---------------------------------------------------------------------------
+# weighted plane
+# ---------------------------------------------------------------------------
+def test_weighted_insert_and_reweight(graph):
+    rng = np.random.default_rng(4)
+    w = (rng.integers(1, 128, graph.m) / 32.0).astype(np.float32)
+    prep = _prep(graph, weights=w)
+    assert prep.weights is not None
+
+    lv0 = prep.levels(0)
+    far = int(np.argmax(lv0 == INF))
+    prep2 = apply_edge_updates(prep, inserts=[(0, far)],
+                               insert_weights=[2.5])
+    # the merged weight vector holds the new edge's weight at its slot
+    a_ord, b_ord = int(prep2.perm[0]), int(prep2.perm[far])
+    keys = (src_of_edges(prep2.graph).astype(np.int64) * prep2.graph.n
+            + prep2.graph.indices)
+    slot = int(np.searchsorted(keys, a_ord * prep2.graph.n + b_ord))
+    assert prep2.weights[slot] == np.float32(2.5)
+
+    # re-inserting an existing edge with a new weight is a reweight
+    e0 = (int(prep2.inv[src_of_edges(prep2.graph)[0]]),
+          int(prep2.inv[prep2.graph.indices[0]]))
+    prep3 = apply_edge_updates(prep2, inserts=[e0], insert_weights=[9.0])
+    assert prep3.last_update.n_reweighted == 1
+    keys3 = (src_of_edges(prep3.graph).astype(np.int64) * prep3.graph.n
+             + prep3.graph.indices)
+    slot3 = int(np.searchsorted(
+        keys3, int(prep3.perm[e0[0]]) * prep3.graph.n
+        + int(prep3.perm[e0[1]])))
+    assert prep3.weights[slot3] == np.float32(9.0)
+
+
+def test_weight_validation(graph):
+    prep = _prep(graph)              # unweighted
+    with pytest.raises(ConfigError):
+        apply_edge_updates(prep, inserts=[(0, 1)], insert_weights=[1.0])
+    rng = np.random.default_rng(5)
+    w = (rng.integers(1, 8, graph.m) / 4.0).astype(np.float32)
+    wp = _prep(graph, weights=w)
+    with pytest.raises(GraphValidationError):
+        apply_edge_updates(wp, inserts=[_missing_edge(wp)])  # no weight
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_delete_missing_edge_rejected(graph):
+    prep = _prep(graph)
+    have = set(zip(prep.inv[src_of_edges(prep.graph)].tolist(),
+                   prep.inv[prep.graph.indices].tolist()))
+    missing = next((a, b) for a in range(graph.n) for b in range(graph.n)
+                   if a != b and (a, b) not in have)
+    with pytest.raises(GraphValidationError, match="not in the graph"):
+        apply_edge_updates(prep, deletes=[missing])
+
+
+def test_duplicate_and_conflicting_batches_rejected(graph):
+    prep = _prep(graph)
+    with pytest.raises(GraphValidationError):
+        apply_edge_updates(prep, inserts=[(0, 1), (0, 1)])
+    a = int(prep.inv[src_of_edges(prep.graph)[0]])
+    b = int(prep.inv[prep.graph.indices[0]])
+    with pytest.raises(GraphValidationError):
+        apply_edge_updates(prep, inserts=[(a, b)], deletes=[(a, b)])
+
+
+def test_out_of_range_edges_rejected(graph):
+    prep = _prep(graph)
+    with pytest.raises(GraphValidationError):
+        apply_edge_updates(prep, inserts=[(0, graph.n)])
+    with pytest.raises(GraphValidationError):
+        apply_edge_updates(prep, inserts=[(-1, 0)])
+
+
+def test_update_report_schema(graph):
+    prep = _prep(graph)
+    prep2 = apply_edge_updates(prep, inserts=[_missing_edge(prep)])
+    rep = prep2.last_update
+    for f in ("path", "epoch", "n_inserted", "n_deleted", "n_reweighted",
+              "sets_touched", "vss_rows_rewritten", "stale_edges",
+              "reason"):
+        assert hasattr(rep, f), f
+    assert rep.n_inserted == 1 and rep.n_deleted == 0
+    assert rep.epoch == prep2.epoch == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        rep.path = "other"
+
+
+# ---------------------------------------------------------------------------
+# sharded (1-D mesh) parity
+# ---------------------------------------------------------------------------
+def test_sharded_update_matches_single_device(graph):
+    require_devices(2)
+    from repro.distributed.bfs_dist import bfs_mesh
+    mesh = bfs_mesh(2)
+    prep = _prep(graph, mesh=mesh)
+    rng = np.random.default_rng(6)
+    for round_i in range(3):
+        ins = sorted({(int(a), int(b))
+                      for a, b in rng.integers(0, graph.n, (4, 2))
+                      if a != b})
+        prep = apply_edge_updates(prep, inserts=ins)
+        _assert_fresh_build_parity(prep)
+        g_now = _caller_graph(prep)
+        for s in (0, graph.n // 3):
+            np.testing.assert_array_equal(prep.levels(s),
+                                          reference_bfs(g_now, s))

@@ -62,7 +62,7 @@ def test_checked_in_floors_are_wellformed():
     for dotted, floor in spec["floors"].items():
         suite = dotted.split(".")[0]
         assert suite in ("fused", "service", "dist", "analytics",
-                         "hybrid", "scale_sweep"), dotted
+                         "hybrid", "scale_sweep", "queue"), dotted
         # gated metrics live under a suite summary, or (PR 8) the
         # trace-time comm-volume block of the dist2d partition bench
         assert ".summary." in dotted or ".comm." in dotted, dotted
@@ -132,7 +132,7 @@ def test_checked_in_floors_cover_every_run_py_suite(tmp_path):
     # the top-level suite keys run.py assembles into the artifact
     run_py = open(os.path.join(REPO, "benchmarks", "run.py")).read()
     for suite in ("fused", "service", "dist", "analytics", "hybrid",
-                  "scale_sweep"):
+                  "scale_sweep", "queue"):
         assert f'"{suite}"' in run_py, f"run.py no longer emits {suite}?"
         assert any(path.startswith(suite + ".")
                    for path in spec["floors"]), \

@@ -1,0 +1,321 @@
+"""RequestQueue / WaveScheduler: the async serving half (DESIGN §2.10).
+
+Covers the PR-10 queue contract end to end: non-blocking submits with
+future resolution, mid-flight wave coalescing, tenant-fair slot hand-out
+under quota pressure, bounded ingress (global + per-tenant backlog),
+deadline harvests into partial TimeoutResults, the background pump, and
+draining under injected faults (degraded-but-correct, never wrong) or a
+vanished session (futures fail loudly, never dangle).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import (FaultPlan, GraphSessionManager, PrepareOptions,
+                   QueueFullError, RequestQueue, TenantQuota, TimeoutResult)
+from repro.core import reference_bfs
+from repro.graphs import generators as gen
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return gen.rmat(7, 8, seed=5)
+
+
+@pytest.fixture(scope="module")
+def refs(graph):
+    return {s: reference_bfs(graph, s) for s in range(graph.n)}
+
+
+def _mgr(graph, name="g", *, tenant="default", verify_fraction=0.0,
+         max_batch=4, **mgr_kwargs):
+    mgr = GraphSessionManager(verify_fraction=verify_fraction, **mgr_kwargs)
+    mgr.open_session(name, graph, tenant=tenant, max_batch=max_batch,
+                     options=PrepareOptions(w=512))
+    return mgr
+
+
+# ---------------------------------------------------------------------------
+# basic contract: submit is non-blocking, drain resolves every future
+# ---------------------------------------------------------------------------
+def test_submit_drain_resolves_correct_levels(graph, refs):
+    q = RequestQueue(_mgr(graph))
+    srcs = [0, 3, 9, 27, 50, 81, 100, 5]
+    futs = [q.submit("g", s) for s in srcs]
+    assert not any(f.done() for f in futs)        # nothing ran yet
+    n = q.drain()
+    assert n == len(srcs)
+    for s, f in zip(srcs, futs):
+        assert f.done() and f.exception(0) is None
+        np.testing.assert_array_equal(f.result(0), refs[s])
+    st = q.stats()
+    assert st["submitted"] == st["completed"] == len(srcs)
+    assert st["pending"] == 0 and st["timeouts"] == 0
+    # 8 requests through a 4-slot pool: later arrivals joined in-flight
+    # waves (the whole point of the queue)
+    assert st["coalesced"] > 0
+    assert st["waves"] >= 1
+
+
+def test_same_source_twice_resolves_both(graph, refs):
+    q = RequestQueue(_mgr(graph))
+    f1, f2 = q.submit("g", 7), q.submit("g", 7)
+    q.drain()
+    np.testing.assert_array_equal(f1.result(0), refs[7])
+    np.testing.assert_array_equal(f2.result(0), refs[7])
+
+
+def test_submit_validates_at_ingress(graph):
+    q = RequestQueue(_mgr(graph))
+    with pytest.raises(Exception):      # bad source: rejected at submit,
+        q.submit("g", graph.n + 5)      # not at drain
+    with pytest.raises(Exception):      # unknown session
+        q.submit("nope", 0)
+    assert q.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded ingress
+# ---------------------------------------------------------------------------
+def test_capacity_rejects_with_reason(graph):
+    q = RequestQueue(_mgr(graph), capacity=3)
+    for s in range(3):
+        q.submit("g", s)
+    with pytest.raises(QueueFullError) as ei:
+        q.submit("g", 4)
+    assert ei.value.reason == "capacity"
+    assert q.stats()["rejected"] == 1
+    q.drain()                            # backlog still serves fine
+    assert q.pending == 0
+
+
+def test_tenant_backlog_rejects_only_the_hog(graph):
+    mgr = GraphSessionManager()
+    mgr.open_session("a", graph, tenant="acme", max_batch=2,
+                     options=PrepareOptions(w=512))
+    mgr.open_session("b", graph, tenant="beta", max_batch=2,
+                     options=PrepareOptions(w=512))
+    q = RequestQueue(mgr, tenant_backlog=2)
+    q.submit("a", 0, tenant="acme")
+    q.submit("a", 1, tenant="acme")
+    with pytest.raises(QueueFullError) as ei:
+        q.submit("a", 2, tenant="acme")
+    assert ei.value.reason == "tenant-backlog"
+    # the other tenant is unaffected by acme's full backlog
+    f = q.submit("b", 3, tenant="beta")
+    q.drain()
+    assert f.done()
+
+
+# ---------------------------------------------------------------------------
+# fairness under quota pressure
+# ---------------------------------------------------------------------------
+def test_tenant_fair_slot_handout_under_inflight_quota(graph, refs):
+    """max_inflight=1 caps a tenant at one slot at a time: its backlog
+    serializes (slots never overlap, so nothing coalesces) instead of
+    monopolising the 4-wide pool — and still completes correctly."""
+    mgr = GraphSessionManager(
+        default_quota=TenantQuota(max_inflight=1))
+    mgr.open_session("s", graph, tenant="hog", max_batch=4,
+                     options=PrepareOptions(w=512))
+    q = RequestQueue(mgr)
+    futs = [q.submit("s", s, tenant="hog") for s in range(6)]
+    n = q.drain()
+    assert n == 6
+    # one slot at a time: no request ever joined an in-flight wave
+    # (contrast test_submit_drain_resolves_correct_levels, where the
+    # uncapped pool coalesces)
+    assert q.stats()["coalesced"] == 0
+    for s, f in zip(range(6), futs):
+        np.testing.assert_array_equal(f.result(0), refs[s])
+
+
+def test_multi_session_drain_is_round_robin_not_starving(graph, refs):
+    """drain() serves every session with eligible work each pass — a
+    session with a standing backlog cannot starve a later-registered
+    one."""
+    mgr = GraphSessionManager()
+    mgr.open_session("first", graph, max_batch=2,
+                     options=PrepareOptions(w=512))
+    mgr.open_session("second", graph, max_batch=2,
+                     options=PrepareOptions(w=512))
+    q = RequestQueue(mgr)
+    fa = [q.submit("first", s) for s in range(5)]
+    fb = [q.submit("second", s) for s in range(5)]
+    q.drain()
+    for s, f in zip(range(5), fa):
+        np.testing.assert_array_equal(f.result(0), refs[s])
+    for s, f in zip(range(5), fb):
+        np.testing.assert_array_equal(f.result(0), refs[s])
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+def test_deadline_harvests_partial_timeout_result(graph):
+    """A clock that jumps past the deadline mid-wave forces the harvest
+    path: the future resolves to a partial TimeoutResult whose computed
+    prefix MATCHES the oracle (partial, never wrong)."""
+    t = {"now": 0.0}
+    mgr = _mgr(graph)
+    q = RequestQueue(mgr, clock=lambda: t["now"])
+
+    fut = q.submit("g", 0, deadline_s=5.0)
+    t["now"] = 10.0                      # deadline long gone before drain
+    q.drain()
+    res = fut.result(0)
+    assert isinstance(res, TimeoutResult)
+    assert res.complete is False and res.source == 0
+    ref = reference_bfs(graph, 0)
+    INF = np.iinfo(np.int32).max
+    got = res.levels
+    assert (got != INF).any() and (got == INF).any()   # genuinely partial
+    mask = got != INF
+    np.testing.assert_array_equal(got[mask], ref[mask])
+    assert q.stats()["timeouts"] == 1
+
+
+def test_generous_deadline_completes_normally(graph, refs):
+    q = RequestQueue(_mgr(graph))
+    fut = q.submit("g", 11, deadline_s=3600.0)
+    q.drain()
+    np.testing.assert_array_equal(fut.result(0), refs[11])
+    assert q.stats()["timeouts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# not_before (simulated arrivals) + background pump
+# ---------------------------------------------------------------------------
+def test_not_before_holds_request_until_due(graph, refs):
+    t = {"now": 0.0}
+    q = RequestQueue(_mgr(graph), clock=lambda: t["now"])
+    fut = q.submit("g", 2, not_before=100.0)
+    q.drain()                            # not due yet: nothing served
+    assert not fut.done() and q.pending == 1
+    t["now"] = 100.0
+    q.drain()
+    np.testing.assert_array_equal(fut.result(0), refs[2])
+
+
+def test_background_pump_resolves_without_explicit_drain(graph, refs):
+    q = RequestQueue(_mgr(graph))
+    q.start(poll_s=0.001)
+    try:
+        futs = [q.submit("g", s) for s in (1, 2, 3)]
+        for s, f in zip((1, 2, 3), futs):
+            np.testing.assert_array_equal(f.result(10.0), refs[s])
+    finally:
+        q.stop()
+    assert q.pending == 0
+
+
+def test_submit_from_other_threads_is_safe(graph, refs):
+    q = RequestQueue(_mgr(graph, max_batch=8))
+    out: list = []
+
+    def client(lo):
+        fs = [q.submit("g", s) for s in range(lo, lo + 4)]
+        out.append((lo, fs))
+
+    threads = [threading.Thread(target=client, args=(lo,))
+               for lo in (0, 10, 20)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    q.drain()
+    for lo, fs in out:
+        for s, f in zip(range(lo, lo + 4), fs):
+            np.testing.assert_array_equal(f.result(0), refs[s])
+
+
+# ---------------------------------------------------------------------------
+# fault gauntlet: drain degrades, never lies, never dangles
+# ---------------------------------------------------------------------------
+def test_faulty_session_drains_degraded_but_correct(graph, refs):
+    """verify_fraction=1 + corrupted SpMM tile: the queue's post-wave
+    verify quarantines the session and every future resolves on the
+    reference path — correct answers, degraded stats on the books."""
+    mgr = GraphSessionManager(verify_fraction=1.0)
+    mgr.open_session("bad", graph, max_batch=2,
+                     options=PrepareOptions(w=512),
+                     fault_plan=FaultPlan(corrupt_spmm_tile=True))
+    q = RequestQueue(mgr)
+    srcs = [0, 3, 9, 27]
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # DegradedServiceWarning expected
+        futs = [q.submit("bad", s) for s in srcs]
+        q.drain()
+    for s, f in zip(srcs, futs):
+        np.testing.assert_array_equal(f.result(0), refs[s])
+    assert mgr.stats()["quarantines"] == 1
+    assert q.stats()["degraded"] > 0
+    # the NEXT batch short-circuits to the reference path (quarantined)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        f2 = q.submit("bad", 5)
+        q.drain()
+    np.testing.assert_array_equal(f2.result(0), refs[5])
+
+
+def test_closed_session_rejects_backlog_loudly(graph):
+    mgr = _mgr(graph)
+    q = RequestQueue(mgr)
+    futs = [q.submit("g", s) for s in (0, 1, 2)]
+    mgr.close_session("g")
+    q.drain()
+    for f in futs:
+        assert f.done()
+        assert f.exception(0) is not None
+        with pytest.raises(Exception):
+            f.result(0)
+    assert q.pending == 0
+
+
+def test_future_result_timeout_raises_but_request_survives(graph, refs):
+    q = RequestQueue(_mgr(graph))
+    fut = q.submit("g", 4)
+    with pytest.raises(TimeoutError):
+        fut.result(0.001)                # nothing drained it yet
+    q.drain()
+    np.testing.assert_array_equal(fut.result(0), refs[4])
+
+
+def test_stats_and_events_schema(graph):
+    q = RequestQueue(_mgr(graph))
+    q.submit("g", 0)
+    q.drain()
+    st = q.stats()
+    for k in ("submitted", "completed", "timeouts", "degraded", "rejected",
+              "coalesced", "waves", "pending"):
+        assert k in st, k
+    assert st["submitted"] == st["completed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# epoch interplay: updates between waves keep serving current answers
+# ---------------------------------------------------------------------------
+def test_queue_serves_post_update_epoch(graph):
+    """An edge update between drains swaps the prepared epoch; queued
+    queries after the swap see the NEW graph."""
+    mgr = _mgr(graph)
+    q = RequestQueue(mgr)
+    src = 0
+    f0 = q.submit("g", src)
+    q.drain()
+    lv_before = f0.result(0)
+
+    # add an edge from src to an unreached vertex
+    INF = np.iinfo(np.int32).max
+    far = int(np.argmax(lv_before == INF))
+    assert lv_before[far] == INF
+    report = mgr.update_edges("g", inserts=[(src, far)])
+    assert report is not None and report.epoch == 1
+
+    f1 = q.submit("g", src)
+    q.drain()
+    lv_after = f1.result(0)
+    assert lv_after[far] == 1            # the new edge is live

@@ -44,13 +44,32 @@ def test_all_cli_engine_variants_verify():
 
 
 def test_graph_service_example():
+    """The end-user flow examples/bfs_service.py demonstrates, through
+    the public façade only: manager session -> queued submits -> edge
+    update -> post-update query."""
     import importlib.util, os
     spec = importlib.util.spec_from_file_location(
         "bfs_service", os.path.join(os.path.dirname(__file__), "..",
                                     "examples", "bfs_service.py"))
     mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
+    spec.loader.exec_module(mod)  # the example must at least import
+    assert callable(mod.main)
+
+    import repro
     g = gen.rmat(8, 8, seed=1)
-    svc = mod.GraphService(g)
-    lv = svc.levels(3)
-    np.testing.assert_array_equal(lv, reference_bfs(g, 3))
+    mgr = repro.GraphSessionManager()
+    sess = mgr.open_session("svc", g, max_batch=4,
+                            options=repro.PrepareOptions(w=256, seed=0))
+    np.testing.assert_array_equal(sess.levels(3), reference_bfs(g, 3))
+
+    queue = repro.RequestQueue(mgr)
+    futs = [queue.submit("svc", s) for s in (0, 3, g.n // 2)]
+    queue.drain()
+    for s, f in zip((0, 3, g.n // 2), futs):
+        np.testing.assert_array_equal(f.result(0), reference_bfs(g, s))
+
+    # insert a guaranteed-missing edge and see it served immediately
+    dst = next(d for d in range(g.n) if d != 3 and d not in g.neighbours(3))
+    report = mgr.update_edges("svc", inserts=[(3, dst)])
+    assert report is not None and report.epoch == 1
+    assert sess.levels(3)[dst] == 1

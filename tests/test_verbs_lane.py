@@ -51,20 +51,20 @@ def _check_components(g, w, sess):
 
 def _check_eccentricity(g, w, sess):
     srcs = np.array([0, 1, g.n - 1])
-    np.testing.assert_array_equal(sess.eccentricity(srcs),
+    np.testing.assert_array_equal(sess.eccentricity_batch(srcs),
                                   eccentricity_ref(g.symmetrized, srcs))
 
 
 def _check_betweenness(g, w, sess):
     srcs = np.array([0, g.n // 3])
-    bc = sess.betweenness(srcs)
+    bc = sess.betweenness_batch(srcs)
     ref = betweenness_ref(g, srcs)
     np.testing.assert_allclose(bc, ref, rtol=1e-4, atol=1e-4)
 
 
 def _check_closeness(g, w, sess):
     srcs = np.array([0, g.n // 2, g.n - 1])
-    np.testing.assert_allclose(sess.closeness(srcs),
+    np.testing.assert_allclose(sess.closeness_batch(srcs),
                                closeness_ref(g, srcs), rtol=1e-9)
 
 
@@ -116,6 +116,106 @@ def test_verbs_tuple_is_canonical():
     """Every VERBS entry is a real callable on the session."""
     for verb in GraphSession.VERBS:
         assert callable(getattr(GraphSession, verb)), verb
+
+
+# ---------------------------------------------------------------------------
+# PR-10 signature conventions: singular verbs take ``src: int``, batched
+# twins take ``sources`` as their first positional, sampling verbs take
+# ``(k, *, seed)`` — enforced by inspect so a new verb cannot land with a
+# divergent shape (deprecated aliases are exempt but must warn)
+# ---------------------------------------------------------------------------
+DEPRECATED_ALIASES = {
+    "eccentricity": "eccentricity_batch",
+    "betweenness": "betweenness_batch",
+    "closeness": "closeness_batch",
+    "centrality_sample": "closeness_sample",
+}
+
+
+def test_verb_signature_conventions():
+    import inspect
+    for family in GraphSession.VERBS:
+        batch = getattr(GraphSession, f"{family}_batch", None)
+        if batch is not None:
+            params = list(inspect.signature(batch).parameters)
+            assert params[:2] == ["self", "sources"], \
+                f"{family}_batch must take `sources` first, got {params}"
+        sample = getattr(GraphSession, f"{family}_sample", None)
+        if sample is not None:
+            sig = inspect.signature(sample)
+            params = list(sig.parameters)
+            assert params[:2] == ["self", "k"], \
+                f"{family}_sample must take `k` first, got {params}"
+            assert (sig.parameters["seed"].kind
+                    is inspect.Parameter.KEYWORD_ONLY), \
+                f"{family}_sample seed must be keyword-only"
+    # singular source-taking verbs (not aliases) use `src: int`
+    for name in ("levels", "sssp"):
+        sig = inspect.signature(getattr(GraphSession, name))
+        params = list(sig.parameters)
+        assert params[:2] == ["self", "src"], (name, params)
+        assert sig.parameters["src"].annotation in ("int", int), name
+
+
+@pytest.mark.parametrize("old,new", sorted(DEPRECATED_ALIASES.items()))
+def test_deprecated_aliases_warn_and_agree(old, new):
+    g, w, sess = _fixture("kron")
+    args = (3,) if old == "centrality_sample" \
+        else (np.array([0, g.n // 2]),)
+    with pytest.warns(DeprecationWarning, match=new):
+        got = getattr(sess, old)(*args)
+    want = getattr(sess, new)(*args)
+    if isinstance(got, tuple):          # sample verbs: (sources, values)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# PR-10 incremental-maintenance oracle: apply_edge_updates must reproduce
+# the FRESH build's bits (masks, row_ids, occupancy) for the mutated graph
+# under the same ordering, and serve oracle-correct levels afterwards
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("gname", sorted(FIXTURES))
+def test_apply_edge_updates_bit_identical(gname):
+    from repro import PrepareOptions, apply_edge_updates, from_edges, prepare
+    from repro.core import build_bvss, reference_bfs
+    from repro.graphs import src_of_edges
+
+    g, w, _ = _fixture(gname)
+    prep = prepare(g, options=PrepareOptions(w=512, seed=0))
+    rng = np.random.default_rng(17)
+    for round_i in range(3):
+        # random inserts (may collide with existing: no-ops) + deletes
+        # of real edges of the CURRENT graph, both in caller ids
+        ins = sorted({(int(a), int(b))
+                      for a, b in rng.integers(0, g.n, (6, 2)) if a != b})
+        src_i = prep.inv[src_of_edges(prep.graph)]
+        dst_i = prep.inv[prep.graph.indices]
+        pick = rng.choice(len(src_i), size=min(4, len(src_i)),
+                          replace=False)
+        dels = sorted({(int(src_i[p]), int(dst_i[p])) for p in pick}
+                      - set(ins))
+        prep = apply_edge_updates(prep, inserts=ins, deletes=dels)
+
+        # fresh-build oracle over the SAME ordering
+        g_ord = prep.graph
+        b2 = build_bvss(g_ord, sigma=prep.bvss.sigma)
+        np.testing.assert_array_equal(prep.bvss.masks, b2.masks)
+        np.testing.assert_array_equal(prep.bvss.row_ids, b2.row_ids)
+        np.testing.assert_array_equal(prep.bvss.real_ptrs, b2.real_ptrs)
+        assert prep.bvss.num_slices == b2.num_slices
+        assert prep.epoch == round_i + 1
+
+        # and the served levels match the mutated caller graph's oracle
+        src_c = prep.inv[src_of_edges(g_ord)]
+        dst_c = prep.inv[g_ord.indices]
+        g_caller = from_edges(g.n, src_c, dst_c, dedup=True,
+                              drop_loops=False)
+        for s in (0, g.n // 2):
+            np.testing.assert_array_equal(prep.levels(s),
+                                          reference_bfs(g_caller, s))
 
 
 @pytest.mark.parametrize("gname", sorted(FIXTURES))
